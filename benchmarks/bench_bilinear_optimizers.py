@@ -1,0 +1,93 @@
+"""Paper Fig. 4 (a)–(d): LocalAdaSEG vs the optimizer zoo on the stochastic
+bilinear game, matched computation/communication structure (M = 4, K = 50):
+
+* LocalAdaSEG (ours)         — K local adaptive EG steps, weighted sync
+* MB-SEGDA / MB-UMP / MB-ASMP — R steps of minibatch K·M
+* LocalSGDA / LocalSEGDA / LocalAdam — K local steps, uniform averaging
+
+Expected reproduction: adaptive methods (LocalAdaSEG, MB-UMP, MB-ASMP)
+beat the fixed-lr ones; per communication round LocalAdaSEG converges
+fastest (paper Fig. 4 b/d).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import AdaSEGConfig, run_local_adaseg
+from repro.optim import (
+    adam_minimax,
+    asmp,
+    minibatch,
+    run_local,
+    run_serial,
+    segda,
+    sgda,
+    ump,
+)
+from repro.problems import make_bilinear_game
+
+from .common import emit
+
+M, K, R = 4, 50, 50
+N = 10
+D = float(np.sqrt(2 * N))
+
+
+def run(seed: int = 0) -> dict:
+    results = {}
+    for sigma in (0.1, 0.5):
+        game = make_bilinear_game(jax.random.PRNGKey(seed), n=N, sigma=sigma)
+        p = game.problem
+        runs = {}
+
+        t0 = time.perf_counter()
+        zbar, _ = run_local_adaseg(
+            p, AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=K),
+            num_workers=M, rounds=R, rng=jax.random.PRNGKey(seed + 1),
+        )
+        runs["LocalAdaSEG"] = (game.residual(zbar), time.perf_counter() - t0)
+
+        mb = minibatch(p, K * M)
+        for name, opt in (
+            ("MB-SEGDA", segda(0.1)),
+            ("MB-UMP", ump(1.0, D)),
+            ("MB-ASMP", asmp(1.0, D)),
+        ):
+            t0 = time.perf_counter()
+            st, _ = run_serial(opt, mb, steps=R, rng=jax.random.PRNGKey(seed + 2),
+                               record_every=R)
+            runs[name] = (game.residual(st.z_bar), time.perf_counter() - t0)
+
+        for name, opt in (
+            ("LocalSGDA", sgda(0.05)),
+            ("LocalSEGDA", segda(0.05)),
+            ("LocalAdam", adam_minimax(0.02)),
+        ):
+            t0 = time.perf_counter()
+            st, _ = run_local(opt, p, num_workers=M, local_k=K, rounds=R,
+                              rng=jax.random.PRNGKey(seed + 3))
+            zg = jax.tree.map(lambda v: v.mean(0), st.z_bar)
+            runs[name] = (game.residual(zg), time.perf_counter() - t0)
+
+        for name, (res, dt) in runs.items():
+            emit(f"bilinear_opt[sigma={sigma},{name}]", dt * 1e6,
+                 f"residual={float(res):.4f};rounds={R}")
+        results[sigma] = {k: float(v[0]) for k, v in runs.items()}
+    return results
+
+
+def main() -> None:
+    results = run()
+    r = results[0.1]
+    adaptives = min(r["LocalAdaSEG"], r["MB-UMP"], r["MB-ASMP"])
+    fixed = min(r["LocalSGDA"], r["LocalSEGDA"], r["MB-SEGDA"])
+    emit("bilinear_opt[check]", 0.0,
+         f"best_adaptive={adaptives:.4f};best_fixed={fixed:.4f};"
+         f"adaptive_wins={adaptives < fixed}")
+
+
+if __name__ == "__main__":
+    main()

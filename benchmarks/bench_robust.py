@@ -1,0 +1,61 @@
+"""Beyond-paper experiment: distributionally-robust logistic regression — a
+real convex-concave finite-sum minimax exercising the simplex projection.
+LocalAdaSEG vs MB-SEGDA vs LocalSGDA at matched compute/communication.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import AdaSEGConfig, kkt_residual, run_local_adaseg
+from repro.optim import minibatch, run_local, run_serial, segda, sgda
+from repro.problems import make_robust_logistic
+
+from .common import emit
+
+M, K, R = 4, 20, 30
+
+
+def run(seed: int = 0) -> dict:
+    rl = make_robust_logistic(jax.random.PRNGKey(seed))
+    p = rl.problem
+    out = {}
+
+    t0 = time.perf_counter()
+    zbar, _ = run_local_adaseg(
+        p, AdaSEGConfig(g0=5.0, diameter=5.0, alpha=1.0, k=K),
+        num_workers=M, rounds=R, rng=jax.random.PRNGKey(seed + 1),
+    )
+    out["LocalAdaSEG"] = (float(kkt_residual(p, zbar)),
+                          float(rl.objective(zbar)),
+                          time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    st, _ = run_serial(segda(0.05), minibatch(p, K * M), steps=R,
+                       rng=jax.random.PRNGKey(seed + 2), record_every=R)
+    out["MB-SEGDA"] = (float(kkt_residual(p, st.z_bar)),
+                       float(rl.objective(st.z_bar)),
+                       time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    st, _ = run_local(sgda(0.05), p, num_workers=M, local_k=K, rounds=R,
+                      rng=jax.random.PRNGKey(seed + 3))
+    zg = jax.tree.map(lambda v: v.mean(0), st.z_bar)
+    out["LocalSGDA"] = (float(kkt_residual(p, zg)), float(rl.objective(zg)),
+                        time.perf_counter() - t0)
+
+    for name, (res, obj, dt) in out.items():
+        emit(f"robust[{name}]", dt * 1e6,
+             f"kkt_residual={res:.4f};objective={obj:.4f}")
+    return out
+
+
+def main() -> None:
+    out = run()
+    emit("robust[check]", 0.0,
+         f"adaseg_residual={out['LocalAdaSEG'][0]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Roofline table builder (deliverable g).
+
+Reads the dry-run JSON records (written by ``repro.launch.dryrun --out``),
+combines the measured per-device HLO costs with the analytic FLOP model
+(``repro.roofline.flops`` — exact matmul accounting; XLA while-bodies are
+cost-counted once, see EXPERIMENTS.md §Roofline/methodology), and emits the
+three roofline terms, the dominant bottleneck, MODEL_FLOPS = 6·N·D, and the
+useful-compute ratio per (arch × shape × mesh).
+
+    PYTHONPATH=src python -m benchmarks.bench_roofline \
+        results/dryrun_single.json [results/dryrun_multi.json ...] \
+        [--markdown results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.launch.shapes import INPUT_SHAPES
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.roofline.flops import estimate
+
+
+def enrich(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_dev = rec["num_devices"]
+    k = rec.get("k_local", 1)
+
+    if shape.kind == "train":
+        fb = estimate(cfg, shape.seq)
+        # per-device analytic flops for the lowered unit (K EG steps + sync)
+        flops_analytic = fb.eg_local_step() * k * shape.batch / n_dev
+        tokens = shape.batch * shape.seq * k
+        model_flops = 6.0 * fb.params_active * tokens / n_dev
+    elif shape.kind == "prefill":
+        fb = estimate(cfg, shape.seq)
+        flops_analytic = fb.forward * shape.batch / n_dev
+        model_flops = 2.0 * fb.params_active * shape.batch * shape.seq / n_dev
+    else:  # decode
+        fb = estimate(cfg, shape.seq, kv_len=shape.seq, decode=True)
+        flops_analytic = fb.forward * shape.batch / n_dev
+        model_flops = 2.0 * fb.params_active * shape.batch / n_dev
+
+    t_compute = flops_analytic / PEAK_FLOPS
+    # memory term: measured per-device HLO bytes (upper bound: CPU-backend
+    # fusion is weaker than TPU's)
+    t_memory = rec["hbm_bytes"] / HBM_BW
+    t_coll = rec["collective_bytes"] / (rec["num_devices"] * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    by_axis = rec.get("collective_bytes_by_axis", {})
+    worker_bytes = sum(
+        v for a, v in by_axis.items()
+        if set(a.split(",")) & {"pod"} or a == "data" and
+        rec.get("worker_mode") == "paper"
+    )
+    rec.update(
+        flops_analytic=flops_analytic,
+        model_flops=model_flops,
+        useful_ratio=model_flops / max(flops_analytic, 1.0),
+        t_compute_s=t_compute,
+        t_memory_s=t_memory,
+        t_collective_s=t_coll,
+        bottleneck=max(terms, key=terms.get),
+        worker_sync_bytes=worker_bytes,
+    )
+    return rec
+
+
+COLS = ("arch", "shape", "mesh", "bottleneck", "t_compute_s", "t_memory_s",
+        "t_collective_s", "flops_analytic", "model_flops", "useful_ratio",
+        "bytes_per_device", "collective_bytes", "worker_sync_bytes")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsons", nargs="+")
+    ap.add_argument("--markdown", default=None)
+    args = ap.parse_args()
+
+    records = []
+    for path in args.jsons:
+        with open(path) as f:
+            records.extend(json.load(f))
+    rows = [enrich(r) for r in records]
+
+    print(",".join(COLS))
+    for r in rows:
+        print(",".join(
+            f"{r.get(c, ''):.4e}" if isinstance(r.get(c), float)
+            else str(r.get(c, "")) for c in COLS
+        ))
+
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write("| " + " | ".join(COLS) + " |\n")
+            f.write("|" + "---|" * len(COLS) + "\n")
+            for r in rows:
+                f.write("| " + " | ".join(
+                    f"{r.get(c, ''):.3e}" if isinstance(r.get(c), float)
+                    else str(r.get(c, "")) for c in COLS
+                ) + " |\n")
+        print(f"wrote {args.markdown}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing, CSV emission, metric evaluation."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """(result, us_per_call). Blocks on async dispatch."""
+    result = None
+    for _ in range(warmup):
+        result = fn(*args)
+        jax.block_until_ready(result)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        result = fn(*args)
+        jax.block_until_ready(result)
+    dt = (time.perf_counter() - t0) / iters
+    return result, dt * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

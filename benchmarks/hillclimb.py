@@ -1,0 +1,140 @@
+"""§Perf hillclimbing driver — hypothesis → change → re-lower → measure.
+
+Three chosen (arch × shape) pairs (see EXPERIMENTS.md §Perf for the
+rationale and the recorded iteration log):
+
+  moe   mixtral-8x22b × train_4k   — most collective-bound baseline
+  vlm   llama-3.2-vision-11b × train_4k — involuntary-resharding victim
+  sync  qwen2-0.5b × train_4k (paper mode) — the paper's own lever:
+        worker-sync amortization vs K, paper vs hierarchical placement
+
+Run (needs the 512-device env var BEFORE jax import, hence module main):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --pair moe
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def measure(plan, mesh, label):
+    import jax
+
+    from repro.launch.train import (
+        abstract_batches,
+        abstract_train_state,
+        make_round_fn,
+        make_shardings,
+    )
+    from repro.roofline.analysis import analyze_compiled
+
+    round_fn = make_round_fn(plan)
+    state_sh, batch_sh = make_shardings(plan, mesh)
+    state = abstract_train_state(plan, mesh)
+    batches = abstract_batches(plan, mesh)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            round_fn, in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+        ).lower(state, batches)
+        compiled = lowered.compile()
+    rec = analyze_compiled(lowered, compiled, mesh)
+    rec["label"] = label
+    rec["compile_s"] = round(time.time() - t0, 1)
+    print(f"[{label}] compile={rec['compile_s']}s "
+          f"flops={rec['flops']:.3e} hbm={rec['hbm_bytes']:.3e} "
+          f"coll={rec['collective_bytes']:.3e} bytes/dev="
+          f"{rec['bytes_per_device']:.3e}")
+    print(f"    by-axis: " + ", ".join(
+        f"{a}={v:.3e}" for a, v in
+        sorted(rec["collective_bytes_by_axis"].items())))
+    print(f"    by-kind: " + ", ".join(
+        f"{k}={v:.3e}" for k, v in
+        sorted(rec["collective_bytes_by_kind"].items())))
+    return rec
+
+
+def pair_moe(mesh, out):
+    from repro.launch.shapes import plan_for
+
+    base = plan_for("mixtral-8x22b", "train_4k", mesh)
+    out.append(measure(base, mesh, "moe/baseline"))
+    # H1: experts (8) < model axis (16) → expert weights lost their 'model'
+    # sharding → every step all-gathers full expert stacks over 'data'
+    # (FSDP). repair_model places 'model' on d_ff: TP within expert.
+    out.append(measure(
+        dataclasses.replace(base, repair_model=True), mesh, "moe/repair_model"
+    ))
+    # H2: with weights TP'd, raising K amortizes nothing here (M=1 single
+    # pod ⇒ no worker sync) — verify collective bytes scale ~linearly in K
+    # (pure per-step traffic), i.e. the remaining term is FSDP/TP, not sync.
+    out.append(measure(
+        dataclasses.replace(base, repair_model=True, k_local=8),
+        mesh, "moe/repair_model+k8",
+    ))
+
+
+def pair_vlm(mesh, out):
+    from repro.launch.shapes import plan_for
+
+    base = plan_for("llama-3.2-vision-11b", "train_4k", mesh)
+    out.append(measure(base, mesh, "vlm/baseline"))
+    # H1: 6404 patches not divisible by any mesh axis → GSPMD involuntarily
+    # replicates cross-attn K/V. Pad to 6656 = 16·416 and shard over 'model'.
+    out.append(measure(
+        dataclasses.replace(base, frontend_pad_to=6656),
+        mesh, "vlm/pad6656",
+    ))
+    # H2: pad to a 'data'-divisible count as well (6656 works for both 16s);
+    # try 8192 (power of two, more padding waste but best layouts)
+    out.append(measure(
+        dataclasses.replace(base, frontend_pad_to=8192),
+        mesh, "vlm/pad8192",
+    ))
+
+
+def pair_sync(mesh, out, multi_mesh=None):
+    from repro.launch.shapes import plan_for
+
+    for k in (1, 4, 16):
+        plan = plan_for("qwen2-0.5b", "train_4k", mesh, k_local=k,
+                        worker_mode="paper")
+        out.append(measure(plan, mesh, f"sync/paper-K{k}"))
+    if multi_mesh is not None:
+        for mode in ("paper", "hierarchical"):
+            plan = plan_for("qwen2-0.5b", "train_4k", multi_mesh, k_local=4,
+                            worker_mode=mode)
+            out.append(measure(plan, multi_mesh, f"sync/2pod-{mode}-K4"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True,
+                    choices=("moe", "vlm", "sync"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    out = []
+    if args.pair == "moe":
+        pair_moe(mesh, out)
+    elif args.pair == "vlm":
+        pair_vlm(mesh, out)
+    else:
+        pair_sync(mesh, out, make_production_mesh(multi_pod=True))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

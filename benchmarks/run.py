@@ -1,0 +1,62 @@
+"""Benchmark orchestrator — one harness per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV rows (see each bench module's
+docstring for the figure it reproduces):
+
+    fig3   bench_bilinear_ksweep      K/σ sweep on the bilinear game
+    fig4   bench_bilinear_optimizers  optimizer-zoo comparison
+    figE1  bench_async                async/heterogeneous-K + SEGDA-MKR
+    figE1d bench_vt_growth            V_t cumulative gradient growth
+    figE2  bench_wgan                 WGAN-GP (homog + Dirichlet hetero)
+    extra  bench_robust               robust logistic (beyond paper)
+    extra  bench_kernels              kernel micro-benches + traffic models
+
+The roofline/dry-run table is produced by ``repro.launch.dryrun`` +
+``benchmarks/bench_roofline.py`` (it needs the 512-device env var and is
+therefore a separate entry point).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    from . import (
+        bench_alpha_theory,
+        bench_async,
+        bench_bilinear_ksweep,
+        bench_bilinear_optimizers,
+        bench_kernels,
+        bench_robust,
+        bench_vt_growth,
+        bench_wgan,
+    )
+
+    benches = [
+        ("fig3:bilinear_ksweep", bench_bilinear_ksweep.main),
+        ("fig4:bilinear_optimizers", bench_bilinear_optimizers.main),
+        ("figE1:async", bench_async.main),
+        ("figE1d:vt_growth", bench_vt_growth.main),
+        ("figE2-E5:wgan", bench_wgan.main),
+        ("thm1-2-5:alpha_regimes", bench_alpha_theory.main),
+        ("extra:robust_logistic", bench_robust.main),
+        ("extra:kernels", bench_kernels.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"{name},{(time.perf_counter()-t0)*1e6:.0f},status=ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,status=FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""Checkpointing: msgpack-serialized pytrees with dtype/shape manifests.
+
+Host-side (gathers to host then writes) — adequate for the CPU container;
+on a real pod this would be wrapped with per-host sharded writes, which the
+manifest format already supports (each leaf records its PartitionSpec-less
+global shape; loaders re-shard via ``jax.device_put``).
+"""
+from .serialize import load_pytree, save_pytree, restore_train_state, save_train_state
+
+__all__ = [
+    "load_pytree",
+    "save_pytree",
+    "restore_train_state",
+    "save_train_state",
+]

@@ -1,0 +1,70 @@
+"""msgpack pytree serialization with integrity manifest."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {
+            "dtype": "bfloat16",
+            "shape": list(arr.shape),
+            "data": arr.astype(np.float32).tobytes(),
+        }
+    return {
+        "dtype": arr.dtype.name,
+        "shape": list(arr.shape),
+        "data": arr.tobytes(),
+    }
+
+
+def _unpack_leaf(d) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        arr = np.frombuffer(d["data"], np.float32).reshape(d["shape"])
+        return jnp.asarray(arr, jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def save_pytree(path: str, tree) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_pack_leaf(x) for x in leaves],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves_like, treedef = jax.tree.flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, expected {len(leaves_like)}"
+        )
+    out = []
+    for d, ref in zip(stored, leaves_like):
+        arr = _unpack_leaf(d)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch {arr.shape} vs {ref.shape}")
+        out.append(jnp.asarray(arr))
+    return treedef.unflatten(out)
+
+
+def save_train_state(path: str, state) -> None:
+    save_pytree(path, state)
+
+
+def restore_train_state(path: str, like):
+    return load_pytree(path, like)

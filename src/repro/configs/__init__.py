@@ -1,0 +1,5 @@
+"""Architecture + experiment configs."""
+from .base import ArchConfig
+from .registry import get_config, list_archs, smoke_config
+
+__all__ = ["ArchConfig", "get_config", "list_archs", "smoke_config"]

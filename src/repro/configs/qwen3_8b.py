@@ -1,0 +1,10 @@
+"""qwen3-8b — [dense] qk_norm, GQA [hf:Qwen/Qwen3-8B]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-8b",
+    arch_type="dense",
+    num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=12288, vocab_size=151936, head_dim=128,
+    qk_norm=True, rope_theta=1_000_000.0,
+)

@@ -1,0 +1,34 @@
+"""Core library: the paper's contribution (LocalAdaSEG) and its substrate."""
+from .adaseg import (
+    AdaSEGConfig,
+    AdaSEGState,
+    StepAux,
+    eta_of,
+    init,
+    local_step,
+    make_psum_sync,
+    run_local_adaseg,
+    sync_state,
+    sync_weighted_stacked,
+)
+from .metrics import kkt_residual
+from .types import MinimaxProblem, from_loss
+from . import projections, tree
+
+__all__ = [
+    "AdaSEGConfig",
+    "AdaSEGState",
+    "StepAux",
+    "MinimaxProblem",
+    "eta_of",
+    "from_loss",
+    "init",
+    "kkt_residual",
+    "local_step",
+    "make_psum_sync",
+    "projections",
+    "run_local_adaseg",
+    "sync_state",
+    "sync_weighted_stacked",
+    "tree",
+]

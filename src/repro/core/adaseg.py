@@ -1,0 +1,262 @@
+"""LocalAdaSEG — Algorithm 1 of the paper, as composable JAX functions.
+
+Per-worker state and the three ingredients of the method:
+
+1.  Extragradient double update from the (possibly synced) anchor z̃*:
+        z_t  = Π_Z[z̃* − η_t · G(z̃*, ξ₁)]          (exploration step)
+        z̃_t = Π_Z[z̃* − η_t · G(z_t, ξ₂)]          (anchor update)
+
+2.  AdaGrad-type local learning rate (Line 4):
+        η_t = D·α / sqrt(G₀² + Σ_{τ<t} (Z_τ)²),
+        (Z_t)² = (‖z_t − z̃*_{t−1}‖² + ‖z_t − z̃_t‖²) / (5 η_t²)
+
+3.  Inverse-stepsize weighted periodic averaging (Line 7):
+        w_t^m ∝ 1/η_t^m,  z̃° = Σ_m w_t^m z̃_{t−1}^m        every K steps.
+
+The sync is abstracted as ``sync_fn(z_tilde, inv_eta) -> z̃°`` so that the same
+step code runs in three harnesses:
+  * serial/vmap over a leading worker axis (CPU experiments, tests),
+  * ``shard_map`` with ``lax.psum`` over mesh worker axes (production),
+  * single worker (degenerates to the serial AdaSEG of Bach & Levy '19).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .tree import (
+    tree_axpy,
+    tree_norm_sq,
+    tree_scale,
+    tree_sub,
+    tree_where,
+    tree_zeros_like,
+)
+from .types import MinimaxProblem, draw
+
+PyTree = Any
+SyncFn = Callable[[PyTree, jax.Array], PyTree]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaSEGConfig:
+    """Hyper-parameters of LocalAdaSEG(G0, D; K, M, R; alpha)."""
+
+    g0: float          # initial guess of the gradient bound G
+    diameter: float    # D, diameter bound of Z (Assumption 1)
+    alpha: float = 1.0  # base lr: 1.0 nonsmooth (Thm 1), 1/sqrt(M) smooth (Thm 2)
+    k: int = 1         # communication interval K
+    average_output: bool = True  # return uniform iterate average (convex-concave)
+
+
+class AdaSEGState(NamedTuple):
+    """Per-worker state. In multi-worker harnesses every leaf gains a leading
+    worker axis (vmap) or is the per-shard value (shard_map)."""
+
+    z_tilde: PyTree       # z̃_t  — the anchor iterate
+    sum_sq: jax.Array     # Σ_τ (Z_τ)²  (f32 scalar)
+    t: jax.Array          # local step counter (int32)
+    z_bar: PyTree         # running uniform average of {z_τ}  (output iterate)
+    grad_sq_sum: jax.Array  # Σ_τ ‖g_τ‖² + ‖M_τ‖²  — the V_t(T) diagnostic (Fig E1d)
+    worker_id: jax.Array  # int32 — used by heterogeneous samplers
+
+
+class StepAux(NamedTuple):
+    eta: jax.Array
+    z_sq: jax.Array       # (Z_t)² increment
+    grad_norm_sq: jax.Array
+
+
+def eta_of(cfg: AdaSEGConfig, sum_sq: jax.Array) -> jax.Array:
+    return cfg.diameter * cfg.alpha / jnp.sqrt(cfg.g0 ** 2 + sum_sq)
+
+
+def init(problem: MinimaxProblem, cfg: AdaSEGConfig, rng,
+         worker_id=0) -> AdaSEGState:
+    z0 = problem.project(problem.init(rng))
+    return AdaSEGState(
+        z_tilde=z0,
+        sum_sq=jnp.float32(0.0),
+        t=jnp.int32(0),
+        z_bar=tree_zeros_like(z0),
+        grad_sq_sum=jnp.float32(0.0),
+        worker_id=jnp.int32(worker_id),
+    )
+
+
+def local_step(
+    problem: MinimaxProblem,
+    cfg: AdaSEGConfig,
+    state: AdaSEGState,
+    rng,
+    *,
+    enabled=None,
+) -> tuple[AdaSEGState, StepAux]:
+    """One extragradient step from the current anchor ``state.z_tilde``.
+
+    ``enabled`` (bool scalar, optional) masks the update — used by the
+    asynchronous variant where workers run heterogeneous K_m local steps per
+    round (Appendix E.1): disabled workers keep their state unchanged.
+    """
+    r1, r2 = jax.random.split(rng)
+    eta = eta_of(cfg, state.sum_sq)
+    z_star = state.z_tilde
+
+    m_t = problem.oracle(z_star, draw(problem, r1, state.worker_id))  # M_t
+    z_t = problem.project(tree_axpy(-eta, m_t, z_star))
+    g_t = problem.oracle(z_t, draw(problem, r2, state.worker_id))      # g_t
+    z_tilde_new = problem.project(tree_axpy(-eta, g_t, z_star))
+
+    z_sq = (
+        tree_norm_sq(tree_sub(z_t, z_star)) + tree_norm_sq(tree_sub(z_t, z_tilde_new))
+    ) / (5.0 * eta ** 2)
+    grad_norm_sq = tree_norm_sq(g_t) + tree_norm_sq(m_t)
+
+    t_new = state.t + 1
+    # Incremental uniform mean of the exploration iterates z_t (Line 14).
+    if cfg.average_output:
+        z_bar_new = jax.tree.map(
+            lambda zb, zt: zb + (zt - zb) / t_new.astype(zt.dtype),
+            state.z_bar,
+            z_t,
+        )
+    else:
+        z_bar_new = z_t
+
+    new = AdaSEGState(
+        z_tilde=z_tilde_new,
+        sum_sq=state.sum_sq + z_sq,
+        t=t_new,
+        z_bar=z_bar_new,
+        grad_sq_sum=state.grad_sq_sum + grad_norm_sq,
+        worker_id=state.worker_id,
+    )
+    if enabled is not None:
+        new = AdaSEGState(
+            z_tilde=tree_where(enabled, new.z_tilde, state.z_tilde),
+            sum_sq=jnp.where(enabled, new.sum_sq, state.sum_sq),
+            t=jnp.where(enabled, new.t, state.t),
+            z_bar=tree_where(enabled, new.z_bar, state.z_bar),
+            grad_sq_sum=jnp.where(enabled, new.grad_sq_sum, state.grad_sq_sum),
+            worker_id=state.worker_id,
+        )
+    aux = StepAux(eta=eta, z_sq=z_sq, grad_norm_sq=grad_norm_sq)
+    return new, aux
+
+
+# ---------------------------------------------------------------------------
+# Sync functions (Line 7): serial (stacked worker axis) and psum (shard_map).
+# ---------------------------------------------------------------------------
+
+def sync_weighted_stacked(z_tilde: PyTree, inv_eta: jax.Array) -> PyTree:
+    """Weighted average over a leading worker axis; returns the average
+    broadcast back to every worker (axis preserved)."""
+    w = inv_eta / jnp.sum(inv_eta)                      # (M,) simplex weights
+
+    def avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        mean = jnp.sum(wb * leaf, axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, leaf.shape)
+
+    return jax.tree.map(avg, z_tilde)
+
+
+def make_psum_sync(axis_names: tuple[str, ...]) -> SyncFn:
+    """Weighted average across mesh worker axes, for use inside shard_map.
+
+    The parameter-server's gather + weighted-average + broadcast collapses to
+    a single all-reduce of w·z̃ (plus a scalar all-reduce for the normalizer).
+    """
+
+    def sync(z_tilde: PyTree, inv_eta: jax.Array) -> PyTree:
+        denom = lax.psum(inv_eta, axis_names)
+        w = inv_eta / denom
+        return jax.tree.map(
+            lambda v: lax.psum((w.astype(v.dtype)) * v, axis_names), z_tilde
+        )
+
+    return sync
+
+
+def sync_state(state: AdaSEGState, cfg: AdaSEGConfig, sync_fn: SyncFn) -> AdaSEGState:
+    """Apply Line 5–8: replace every worker's anchor with the weighted average."""
+    inv_eta = 1.0 / eta_of(cfg, state.sum_sq)
+    return state._replace(z_tilde=sync_fn(state.z_tilde, inv_eta))
+
+
+# ---------------------------------------------------------------------------
+# Serial multi-worker driver (vmap over workers) — used by the paper-
+# experiment benchmarks and tests. Communication = weighted mean over axis 0.
+# ---------------------------------------------------------------------------
+
+def run_local_adaseg(
+    problem: MinimaxProblem,
+    cfg: AdaSEGConfig,
+    *,
+    num_workers: int,
+    rounds: int,
+    rng,
+    local_steps: jax.Array | None = None,
+    collect_aux: bool = True,
+):
+    """Run LocalAdaSEG with M stacked workers for R rounds of K local steps.
+
+    ``local_steps`` (int array of shape (M,), optional) gives heterogeneous
+    per-worker step counts K_m for the asynchronous variant; by default every
+    worker runs cfg.k steps per round. Returns ``(z_bar, history)`` where
+    z_bar is the global output iterate (Line 14) and history holds per-step
+    diagnostics stacked as (R, K, M).
+    """
+    m = num_workers
+    k = int(cfg.k)
+    if local_steps is None:
+        local_steps = jnp.full((m,), k, dtype=jnp.int32)
+    else:
+        local_steps = jnp.asarray(local_steps, dtype=jnp.int32)
+        k = int(jnp.max(local_steps))
+
+    init_rngs = jax.random.split(rng, m + 1)
+    rng, worker_rngs = init_rngs[0], init_rngs[1:]
+    state = jax.vmap(lambda r, w: init(problem, cfg, r, w))(
+        worker_rngs, jnp.arange(m, dtype=jnp.int32)
+    )
+
+    vstep = jax.vmap(
+        lambda st, r, en: local_step(problem, cfg, st, r, enabled=en)
+    )
+
+    def round_fn(state: AdaSEGState, rng_round):
+        # Line 5–8: weighted sync at the top of each round (t-1 ∈ S).
+        inv_eta = 1.0 / eta_of(cfg, state.sum_sq)  # (M,)
+        state = state._replace(
+            z_tilde=sync_weighted_stacked(state.z_tilde, inv_eta)
+        )
+        step_rngs = jax.random.split(rng_round, k * m).reshape(k, m, 2)
+
+        def body(st, inputs):
+            rngs, i = inputs
+            enabled = i < local_steps  # (M,) mask for async variant
+            st, aux = vstep(st, rngs, enabled)
+            return st, aux
+
+        state, aux = lax.scan(body, state, (step_rngs, jnp.arange(k)))
+        return state, aux
+
+    round_rngs = jax.random.split(rng, rounds)
+    state, history = lax.scan(round_fn, state, round_rngs)
+
+    # Global output: average worker means weighted by their step counts
+    # (uniform over all z_t^m as in Line 14).
+    counts = local_steps.astype(jnp.float32) * rounds
+    w = counts / jnp.sum(counts)
+
+    def global_avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(wb * leaf, axis=0)
+
+    z_bar = jax.tree.map(global_avg, state.z_bar)
+    return z_bar, (state, history if collect_aux else None)

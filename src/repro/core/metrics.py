@@ -1,0 +1,21 @@
+"""Solution-quality metrics for minimax problems.
+
+* KKT residual (the paper's Res(x, y), §4.1): ``‖z − Π_Z(z − G(z))‖`` with the
+  *mean* operator G — zero iff z is a saddle point.
+* Duality gap is problem-specific (needs inner max/min); problems that admit a
+  closed form (bilinear over a box) provide their own ``duality_gap``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .tree import tree_axpy, tree_norm_sq, tree_sub
+from .types import MinimaxProblem
+
+
+def kkt_residual(problem: MinimaxProblem, z) -> jnp.ndarray:
+    if problem.mean_oracle is None:
+        raise ValueError(f"problem {problem.name!r} has no mean_oracle")
+    g = problem.mean_oracle(z, None)
+    z_step = problem.project(tree_axpy(-1.0, g, z))
+    return jnp.sqrt(tree_norm_sq(tree_sub(z, z_step)))

@@ -1,0 +1,72 @@
+"""Euclidean projections Π_Z for the constraint sets used in the paper.
+
+The paper's experiments use the box C^n = [-1, 1]^n (bilinear game); the
+theory only needs a compact convex Z with diameter bound D (Assumption 1).
+We provide boxes, l2 balls, the probability simplex (for the robust-logistic
+example's dual block), and combinators to apply different projections to the
+primal and dual blocks of ``z = (x, y)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def identity():
+    return lambda z: z
+
+
+def box(lo: float = -1.0, hi: float = 1.0):
+    def proj(z):
+        return jax.tree.map(lambda v: jnp.clip(v, lo, hi), z)
+
+    return proj
+
+
+def l2_ball(radius: float = 1.0):
+    """Project every leaf jointly onto the l2 ball of the given radius.
+
+    Treats the whole pytree as one flattened vector (this matches the paper's
+    ‖z‖_Z norm on the product space).
+    """
+    from .tree import tree_norm, tree_scale
+
+    def proj(z):
+        n = tree_norm(z)
+        scale = jnp.minimum(1.0, radius / jnp.maximum(n, 1e-30))
+        return tree_scale(scale, z)
+
+    return proj
+
+
+def simplex():
+    """Project each leaf (vector) onto the probability simplex.
+
+    Standard sort-based algorithm (Held/Wolfe/Crowder); O(n log n), jittable.
+    """
+
+    def _proj_vec(v):
+        n = v.shape[-1]
+        u = jnp.sort(v, axis=-1)[..., ::-1]
+        css = jnp.cumsum(u, axis=-1) - 1.0
+        idx = jnp.arange(1, n + 1, dtype=v.dtype)
+        cond = u - css / idx > 0
+        rho = jnp.sum(cond, axis=-1, keepdims=True)  # number of positive terms
+        # gather css at rho-1
+        theta = jnp.take_along_axis(css, rho - 1, axis=-1) / rho.astype(v.dtype)
+        return jnp.maximum(v - theta, 0.0)
+
+    def proj(z):
+        return jax.tree.map(_proj_vec, z)
+
+    return proj
+
+
+def product(proj_x, proj_y):
+    """Apply proj_x to the primal block and proj_y to the dual block."""
+
+    def proj(z):
+        x, y = z
+        return (proj_x(x), proj_y(y))
+
+    return proj

@@ -1,0 +1,64 @@
+"""Pytree vector-space helpers used by every optimizer in the framework.
+
+All minimax state (the joint primal-dual iterate ``z = (x, y)``) is a pytree;
+these helpers implement the (Euclidean) vector-space operations the paper's
+analysis is written in: addition, scaling, inner products and the squared
+norm ``‖z‖² = ‖x‖² + ‖y‖²`` used in the adaptive learning-rate recursion.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(c, a: PyTree) -> PyTree:
+    return jax.tree.map(lambda v: c * v, a)
+
+
+def tree_axpy(c, a: PyTree, b: PyTree) -> PyTree:
+    """c * a + b."""
+    return jax.tree.map(lambda u, v: c * u + v, a, b)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    leaves = jax.tree.map(
+        lambda u, v: jnp.vdot(u.astype(jnp.float32), v.astype(jnp.float32)), a, b
+    )
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm_sq(a: PyTree) -> jax.Array:
+    leaves = jax.tree.map(lambda u: jnp.sum(jnp.square(u.astype(jnp.float32))), a)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_norm_sq(a))
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda v: v.astype(dtype), a)
+
+
+def tree_size(a: PyTree) -> int:
+    return sum(v.size for v in jax.tree.leaves(a))
+
+
+def tree_where(pred, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda u, v: jnp.where(pred, u, v), a, b)

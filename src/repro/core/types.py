@@ -1,0 +1,72 @@
+"""Problem abstraction for stochastic minimax optimization.
+
+A :class:`MinimaxProblem` packages everything LocalAdaSEG (and the baseline
+optimizers) need about problem (1) of the paper:
+
+    min_{x ∈ X} max_{y ∈ Y}  F(x, y) = E_ξ f(x, y, ξ)
+
+* ``init(rng)``     — an initial joint iterate ``z₀ = (x₀, y₀)`` (pytree pair).
+* ``sample(rng)``   — draw ξ (a pytree of arrays; for finite-sum problems a
+                      minibatch of data).
+* ``oracle(z, ξ)``  — the stochastic gradient field
+                      ``G(z, ξ) = [∂x f(x,y,ξ), −∂y f(x,y,ξ)]`` — i.e. a
+                      *descent* direction for both blocks, so every update is
+                      ``z ← Π_Z(z − η·G)``.
+* ``project(z)``    — Euclidean projection Π_Z onto the constraint set
+                      (identity for unconstrained problems).
+
+Minimization-only problems (LM training) use an empty ``y`` block; the same
+machinery applies verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+PyTree = Any
+OracleFn = Callable[[PyTree, PyTree], PyTree]          # (z, xi) -> G(z, xi)
+SampleFn = Callable[[Any], PyTree]                     # rng -> xi
+ProjectFn = Callable[[PyTree], PyTree]                 # z -> Pi_Z(z)
+InitFn = Callable[[Any], PyTree]                       # rng -> z0
+
+
+@dataclasses.dataclass(frozen=True)
+class MinimaxProblem:
+    init: InitFn
+    sample: SampleFn
+    oracle: OracleFn
+    project: ProjectFn
+    # Optional exact operator E[G(z, xi)] when available (bilinear, quadratic);
+    # used by metrics and by deterministic tests.
+    mean_oracle: OracleFn | None = None
+    # Human-readable name (shows up in benchmark CSVs).
+    name: str = "problem"
+    # Optional heterogeneous sampler: (rng, worker_id) -> xi. When set, the
+    # distributed drivers use it so each worker draws from its own local
+    # distribution (the paper's federated/Dirichlet setting, §4.2/E.2).
+    sample_worker: Any = None
+
+
+def draw(problem: "MinimaxProblem", rng, worker_id=None):
+    if problem.sample_worker is not None and worker_id is not None:
+        return problem.sample_worker(rng, worker_id)
+    return problem.sample(rng)
+
+
+def from_loss(loss_fn, init, sample, project=None, name="problem"):
+    """Build a MinimaxProblem from a scalar saddle loss f((x, y), xi).
+
+    The oracle is [∇x f, −∇y f] computed with one jax.grad call over the
+    joint pytree, then sign-flipping the dual block.
+    """
+    import jax
+
+    def oracle(z, xi):
+        gx, gy = jax.grad(lambda zz: loss_fn(zz, xi))(z)
+        return (gx, jax.tree.map(lambda v: -v, gy))
+
+    if project is None:
+        project = lambda z: z
+    return MinimaxProblem(
+        init=init, sample=sample, oracle=oracle, project=project, name=name
+    )

@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipelines."""
+from .synthetic import batch_struct, make_batch, sample_tokens

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``flash_attention`` — blockwise online-softmax attention (causal / sliding
+  window / softcap / GQA), VMEM-tiled via BlockSpec.
+* ``adaseg_update``  — fused LocalAdaSEG extragradient double-update +
+  (Z_t)² reduction, one HBM pass instead of ~9.
+* ``ssd_scan``       — Mamba2 SSD chunked scan (intra-chunk MXU matmuls +
+  inter-chunk recurrence over summary states).
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd wrapper, CPU interpret fallback) and ``ref.py`` (pure-jnp oracle).
+"""

@@ -1,0 +1,82 @@
+"""Fused LocalAdaSEG extragradient-update Pallas kernel.
+
+The optimizer hot loop is memory-bound: the naive implementation reads
+z*, M_t, g_t and writes z_t, z̃ plus re-reads both outputs to form the
+adaptive-learning-rate statistic (Z_t)² — ≈9 HBM passes over the parameter
+vector. This kernel fuses projection, both updates and the (Z_t)² partial
+reduction into a single pass: 3 reads + 2 writes, with the reduction
+accumulated in VMEM — a ~1.8× cut of optimizer-step HBM traffic.
+
+Layout: parameters are flattened and tiled as (num_blocks, block); grid is
+1-D over blocks; η arrives as a (1, 1) scalar tile; per-block (Z_t)²
+partials land in a (num_blocks,) output reduced by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _update_kernel(eta_ref, z_ref, m_ref, g_ref, zt_ref, ztl_ref, acc_ref,
+                   *, lo, hi):
+    eta = eta_ref[0, 0]
+    z = z_ref[...].astype(jnp.float32)                 # update math in f32
+    z_t = z - eta * m_ref[...].astype(jnp.float32)
+    z_tl = z - eta * g_ref[...].astype(jnp.float32)
+    if lo is not None:
+        z_t = jnp.clip(z_t, lo, hi)
+        z_tl = jnp.clip(z_tl, lo, hi)
+    zt_ref[...] = z_t.astype(zt_ref.dtype)
+    ztl_ref[...] = z_tl.astype(ztl_ref.dtype)
+    d1 = z_t - z
+    d2 = z_t - z_tl
+    acc_ref[0, 0] = jnp.sum(d1 * d1 + d2 * d2)
+
+
+def adaseg_update(
+    z_star, m_t, g_t, eta, *, lo=None, hi=None, block: int = 4096,
+    interpret: bool = False,
+):
+    """Flat 1-D leaf update. Returns (z_t, z_tilde, zsq_partial_sum)."""
+    (n,) = z_star.shape
+    pad = (-n) % block
+    if pad:
+        z_star = jnp.pad(z_star, (0, pad))
+        m_t = jnp.pad(m_t, (0, pad))
+        g_t = jnp.pad(g_t, (0, pad))
+    nb = (n + pad) // block
+    shape2 = (nb, block)
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+
+    kernel = functools.partial(_update_kernel, lo=lo, hi=hi)
+    z_t, z_tl, partials = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(shape2, z_star.dtype),
+            jax.ShapeDtypeStruct(shape2, z_star.dtype),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(eta_arr, z_star.reshape(shape2), m_t.reshape(shape2),
+      g_t.reshape(shape2))
+    return (
+        z_t.reshape(-1)[:n],
+        z_tl.reshape(-1)[:n],
+        jnp.sum(partials),
+    )

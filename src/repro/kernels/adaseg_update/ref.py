@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused LocalAdaSEG extragradient update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adaseg_update_ref(z_star, m_t, g_t, eta, lo=None, hi=None):
+    """Single-leaf fused EG update.
+
+    z_t  = Π(z* − η·m_t);  z̃ = Π(z* − η·g_t);
+    zsq_partial = ‖z_t − z*‖² + ‖z_t − z̃‖²   (caller divides by 5η²).
+
+    Returns (z_t, z_tilde, zsq_partial). Π is the box clip when lo/hi given.
+    """
+    z_t = z_star - eta * m_t
+    z_tilde = z_star - eta * g_t
+    if lo is not None:
+        z_t = jnp.clip(z_t, lo, hi)
+        z_tilde = jnp.clip(z_tilde, lo, hi)
+    d1 = (z_t - z_star).astype(jnp.float32)
+    d2 = (z_t - z_tilde).astype(jnp.float32)
+    return z_t, z_tilde, jnp.sum(d1 * d1 + d2 * d2)

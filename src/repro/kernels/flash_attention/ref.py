@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (S, T) logit matrix — O(S·T) memory, numerically exact
+reference for correctness sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q, k, v, *, causal=True, window=None, softcap=None, scale=None
+):
+    """q: (B, H, S, D); k, v: (B, Kh, T, D) with H % Kh == 0 (GQA).
+
+    Returns (B, H, S, D). Softmax in f32.
+    """
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else d**-0.5
+
+    qg = q.reshape(b, kh, g, s, d)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v)
+    return out.reshape(b, h, s, d)

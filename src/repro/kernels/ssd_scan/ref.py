@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD scan kernel: the sequential (recurrent)
+evaluation of the SSM — numerically the ground truth the chunked kernel and
+the jnp chunked implementation must both match.
+
+    h_t = exp(dt_t·a) ⊙ h_{t−1} + dt_t · x_t ⊗ B_t
+    y_t = C_t · h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c):
+    """x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, N)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+
+    def scan_fn(h_prev, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dt_t * a)                                  # (B,H)
+        h_new = h_prev * decay[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", x_t, b_t, dt_t
+        )
+        y_t = jnp.einsum("bhpn,bn->bhp", h_new, c_t)
+        return h_new, y_t
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        b.transpose(1, 0, 2).astype(jnp.float32),
+        c.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(scan_fn, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)  # (B, L, H, P)

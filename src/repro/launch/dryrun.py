@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production meshes, using ShapeDtypeStruct stand-ins (no device
+allocation), and dump memory/cost/collective analyses for §Roofline.
+
+MUST set XLA_FLAGS before any other import — jax locks the device count at
+first initialization.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --out dryrun.json
+"""
+import argparse
+import json
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..core.adaseg import AdaSEGConfig
+from ..roofline.analysis import analyze_compiled
+from .mesh import make_production_mesh
+from .shapes import INPUT_SHAPES, applicable_shapes, plan_for
+from .train import (
+    abstract_batches,
+    abstract_train_state,
+    make_round_fn,
+    make_shardings,
+)
+from .serve import (
+    ServePlan,
+    abstract_cache,
+    make_prefill_step,
+    make_serve_shardings,
+    make_serve_step,
+)
+
+
+def lower_train(arch: str, shape_name: str, mesh, *, k_local: int = 4,
+                worker_mode: str | None = None, accurate_cost: bool = False,
+                optimized: bool = False):
+    plan = plan_for(arch, shape_name, mesh, k_local=k_local,
+                    worker_mode=worker_mode, accurate_cost=accurate_cost)
+    if optimized:
+        import dataclasses as _dc
+
+        # Both MoE levers only help when 'data' is a pure batch/FSDP axis
+        # (hierarchical); in paper mode 'data' carries the per-worker
+        # parameter copies and the same constraints REGRESS collectives
+        # ×10-60 (measured — see EXPERIMENTS §Perf/optimized-sweep).
+        hier = plan.worker_mode == "hierarchical"
+        cfg = _dc.replace(plan.cfg, moe_shard_dispatch=hier)
+        pad = None
+        # VLM only: sharding the patch axis pays at 6404×4096; for the small
+        # whisper encoder (1500×768) it costs more than it saves (measured)
+        if cfg.cross_attn_every and cfg.encoder_seq % 256:
+            pad = (cfg.encoder_seq + 255) // 256 * 256  # 6404 → 6656
+        plan = _dc.replace(
+            plan, cfg=cfg, repair_model=hier, frontend_pad_to=pad,
+        )
+    round_fn = make_round_fn(plan)
+    state_sh, batch_sh = make_shardings(plan, mesh)
+    state = abstract_train_state(plan, mesh)
+    batches = abstract_batches(plan, mesh)
+    with mesh:
+        lowered = jax.jit(
+            round_fn,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+        ).lower(state, batches)
+        compiled = lowered.compile()
+    return lowered, compiled, plan
+
+
+def lower_serve(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    plan = ServePlan(cfg=cfg, batch=shape.batch, context_len=shape.seq)
+    step = make_serve_step(plan)
+    param_sh, cache_sh, tok_sh, pos_sh, fr_sh = make_serve_shardings(plan, mesh)
+
+    from .train import _spec_tree
+
+    params_abs, _ = _spec_tree(cfg)
+    cache_abs = abstract_cache(plan)
+    tok = jax.ShapeDtypeStruct((plan.batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((plan.batch,), jnp.int32)
+    args = [params_abs, cache_abs, tok, pos]
+    in_sh = [param_sh, cache_sh, tok_sh, pos_sh]
+    if plan.needs_frontend():
+        args.append(
+            jax.ShapeDtypeStruct(
+                (plan.batch, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+            )
+        )
+        in_sh.append(fr_sh)
+    with mesh:
+        lowered = jax.jit(
+            step,
+            in_shardings=tuple(in_sh),
+            out_shardings=(tok_sh, cache_sh),
+        ).lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled, plan
+
+
+def lower_prefill(arch: str, shape_name: str, mesh, *,
+                  accurate_cost: bool = False):
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    cfg = _dc.replace(cfg, param_dtype="bfloat16", compute_dtype="bfloat16",
+                      scan_layers=not accurate_cost)
+    shape = INPUT_SHAPES[shape_name]
+    plan = ServePlan(cfg=cfg, batch=shape.batch, context_len=shape.seq)
+    step = make_prefill_step(plan)
+    param_sh, _, _, pos_sh, fr_sh = make_serve_shardings(plan, mesh)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..sharding.specs import sanitize_spec
+    from .train import _spec_tree
+
+    params_abs, _ = _spec_tree(cfg)
+    tok = jax.ShapeDtypeStruct((plan.batch, shape.seq), jnp.int32)
+    tok_sh = NamedSharding(
+        mesh, sanitize_spec(P("data", None), tok.shape, mesh)
+    )
+    args = [params_abs, tok]
+    in_sh = [param_sh, tok_sh]
+    if plan.needs_frontend():
+        args.append(
+            jax.ShapeDtypeStruct(
+                (plan.batch, cfg.encoder_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+            )
+        )
+        in_sh.append(fr_sh)
+    with mesh:
+        lowered = jax.jit(
+            step, in_shardings=tuple(in_sh), out_shardings=pos_sh
+        ).lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled, plan
+
+
+def run_one(arch: str, shape_name: str, mesh, mesh_name: str, *,
+            k_local: int = 4, worker_mode: str | None = None,
+            accurate_cost: bool = False, optimized: bool = False) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        lowered, compiled, plan = lower_train(
+            arch, shape_name, mesh, k_local=k_local, worker_mode=worker_mode,
+            accurate_cost=accurate_cost, optimized=optimized,
+        )
+        extra = {"worker_mode": plan.worker_mode,
+                 "num_workers": plan.num_workers(mesh),
+                 "k_local": plan.k_local}
+    elif shape.kind == "prefill":
+        lowered, compiled, plan = lower_prefill(
+            arch, shape_name, mesh, accurate_cost=accurate_cost
+        )
+        extra = {}
+    else:
+        lowered, compiled, plan = lower_serve(arch, shape_name, mesh)
+        extra = {}
+    rec = analyze_compiled(lowered, compiled, mesh)
+    rec.update(
+        arch=arch, shape=shape_name, mesh=mesh_name, status="ok", **extra
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"),
+                    help="single = 16×16 (256 chips), multi = 2×16×16 (512)")
+    ap.add_argument("--k-local", type=int, default=4)
+    ap.add_argument("--worker-mode", default=None,
+                    choices=(None, "paper", "hierarchical"))
+    ap.add_argument("--optimized", action="store_true",
+                    help="§Perf levers on: repair_model, moe_shard_dispatch, "
+                         "frontend padding (chunked attention and last-token "
+                         "prefill head are always-on defaults)")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else list_archs()
+    records = []
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            shapes = [args.shape] if args.shape else applicable_shapes(arch)
+            for shape_name in shapes:
+                tag = f"{mesh_name} × {arch} × {shape_name}"
+                try:
+                    rec = run_one(arch, shape_name, mesh, mesh_name,
+                                  k_local=args.k_local,
+                                  worker_mode=args.worker_mode,
+                                  optimized=args.optimized)
+                    records.append(rec)
+                    print(f"[ok]   {tag}: "
+                          f"bytes/dev={rec['bytes_per_device']:.3e} "
+                          f"flops={rec['flops']:.3e} "
+                          f"coll_bytes={rec['collective_bytes']:.3e}")
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures += 1
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc(limit=3)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+    print(f"dry-run complete: {len(records)} ok, {failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

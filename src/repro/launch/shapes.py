@@ -1,0 +1,82 @@
+"""Assigned input shapes and per-(arch × shape) lowering plans."""
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs import get_config
+from ..core.adaseg import AdaSEGConfig
+from .mesh import num_workers, worker_axes_for
+from .train import TrainPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq: int
+    batch: int          # global
+    kind: str           # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention (DESIGN.md §long_500k skips):
+# SSM / hybrid / all-SWA / local+global run it; pure full-attention archs
+# and the enc-dec audio decoder skip it.
+LONG_CONTEXT_ARCHS = {
+    "mamba2-370m", "recurrentgemma-9b", "mixtral-8x22b", "gemma2-27b",
+}
+
+# Paper-faithful worker placement (M = every data shard) only fits HBM for
+# the small configs; the large ones use the hierarchical (pod-worker) mode.
+PAPER_MODE_ARCHS = {
+    "granite-moe-1b-a400m", "qwen2-0.5b", "mamba2-370m", "whisper-small",
+}
+
+
+def applicable_shapes(arch: str) -> list[str]:
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        shapes.append("long_500k")
+    return shapes
+
+
+def default_worker_mode(arch: str) -> str:
+    return "paper" if arch in PAPER_MODE_ARCHS else "hierarchical"
+
+
+def plan_for(arch: str, shape_name: str, mesh, *, k_local: int = 4,
+             worker_mode: str | None = None,
+             dtype: str = "bfloat16", accurate_cost: bool = False) -> TrainPlan:
+    """TrainPlan for a train-kind shape (bf16 params/compute for the
+    production lowering; the AdaSEG state stays f32).
+
+    ``accurate_cost=True`` unrolls both the layer-group scan and the K local
+    steps so XLA's cost analysis counts every executed op (while-loop bodies
+    are otherwise counted once) — slower to compile, used by §Roofline.
+    """
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(
+        cfg, param_dtype=dtype, compute_dtype=dtype,
+        scan_layers=not accurate_cost,
+    )
+    shape = INPUT_SHAPES[shape_name]
+    mode = worker_mode or default_worker_mode(arch)
+    m = num_workers(mesh, worker_axes_for(mesh, mode))
+    adaseg = AdaSEGConfig(
+        g0=1.0, diameter=10.0, alpha=1.0 / (m**0.5), k=k_local,
+        average_output=False,
+    )
+    return TrainPlan(
+        cfg=cfg,
+        adaseg=adaseg,
+        worker_mode=mode,
+        k_local=k_local,
+        global_batch=shape.batch,
+        seq=shape.seq,
+        scan_rounds=not accurate_cost,
+    )

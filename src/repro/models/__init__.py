@@ -1,0 +1,20 @@
+"""Model zoo: composable backbones for the assigned architectures."""
+from .transformer import (
+    cache_specs,
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+)
+
+__all__ = [
+    "cache_specs",
+    "decode_step",
+    "encode",
+    "forward",
+    "init_cache",
+    "init_model",
+    "loss_fn",
+]

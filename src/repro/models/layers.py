@@ -1,0 +1,133 @@
+"""Primitive layers: norms, projections, embeddings, RoPE, causal conv.
+
+Every ``init_*`` returns ``(params, specs)`` — a param pytree and a
+structurally identical :class:`jax.sharding.PartitionSpec` tree. Tensor-
+parallel placement follows the Megatron convention on the ``model`` mesh
+axis: column-parallel in-projections, row-parallel out-projections, vocab-
+sharded embeddings. GSPMD inserts the matching collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+MODEL = "model"
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# --- linear ------------------------------------------------------------------
+
+def init_linear(key, in_dim, out_dim, *, shard_out=True, bias=False,
+                dtype=jnp.float32, scale=None):
+    """weight (in, out). shard_out=True → column-parallel P(None, 'model');
+    shard_out=False → row-parallel P('model', None)."""
+    scale = scale if scale is not None else in_dim ** -0.5
+    p = {"w": _normal(key, (in_dim, out_dim), scale, dtype)}
+    s = {"w": P(None, MODEL) if shard_out else P(MODEL, None)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        s["b"] = P(MODEL) if shard_out else P(None)
+    return p, s
+
+
+def apply_linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# --- norms ---------------------------------------------------------------------
+
+def init_rmsnorm(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}, {"scale": P(None)}
+
+
+def apply_rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+def init_layernorm(dim, dtype=jnp.float32):
+    return (
+        {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+        {"scale": P(None), "bias": P(None)},
+    )
+
+
+def apply_layernorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# --- embedding -------------------------------------------------------------------
+
+def init_embedding(key, vocab, dim, dtype=jnp.float32):
+    p = {"table": _normal(key, (vocab, dim), 0.02, dtype)}
+    s = {"table": P(MODEL, None)}  # vocab-sharded
+    return p, s
+
+
+def apply_embedding(p, tokens):
+    return p["table"][tokens]
+
+
+# --- RoPE ----------------------------------------------------------------------
+
+def rope_frequencies(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                   # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- causal depthwise conv (mamba / RG-LRU temporal conv) -------------------------
+
+def init_conv1d(key, channels, width, dtype=jnp.float32):
+    p = {
+        "w": _normal(key, (width, channels), channels ** -0.5, dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+    s = {"w": P(None, MODEL), "b": P(MODEL)}
+    return p, s
+
+
+def apply_conv1d(p, x):
+    """Causal depthwise conv. x: (B, S, C) → (B, S, C)."""
+    width = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * p["w"][i] for i in range(width)
+    )
+    return out + p["b"]
+
+
+def conv1d_step(p, window, x_t):
+    """Single decode step. window: (B, width-1, C) past inputs; x_t: (B, C)."""
+    width = p["w"].shape[0]
+    full = jnp.concatenate([window, x_t[:, None, :]], axis=1)  # (B, width, C)
+    out = jnp.einsum("bwc,wc->bc", full, p["w"]) + p["b"]
+    return out, full[:, 1:, :]
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)

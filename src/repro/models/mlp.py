@@ -1,0 +1,40 @@
+"""Gated MLPs (SwiGLU / GeGLU) — Megatron col/row parallel placement."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import MODEL, _normal
+
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "gelu_plain": jax.nn.gelu}[name]
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff=None):
+    dm = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.activation in ("silu", "gelu")
+    p = {
+        "w_in": _normal(k1, (dm, ff), dm**-0.5, dtype),
+        "w_out": _normal(k3, (ff, dm), ff**-0.5, dtype),
+    }
+    s = {"w_in": P(None, MODEL), "w_out": P(MODEL, None)}
+    if gated:
+        p["w_gate"] = _normal(k2, (dm, ff), dm**-0.5, dtype)
+        s["w_gate"] = P(None, MODEL)
+    return p, s
+
+
+def apply_mlp(p, cfg: ArchConfig, x):
+    act = _act(cfg.activation)
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    return h @ p["w_out"]

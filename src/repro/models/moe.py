@@ -1,0 +1,117 @@
+"""Mixture-of-Experts layer with top-k routing and capacity-bounded dispatch.
+
+Expert-parallel placement: the expert axis of every expert weight is sharded
+on the ``model`` mesh axis, so the dispatch/combine einsums lower to the
+all-to-all-style collectives the roofline analysis tracks. Token dropping
+follows the standard capacity-factor discipline (dropped tokens pass through
+the residual). The router load-balance auxiliary loss (Switch/Mixtral style)
+is returned to be added to the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import MODEL, _normal
+from .mlp import _act
+
+
+def init_moe(key, cfg: ArchConfig):
+    dm, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": _normal(k1, (dm, e), dm**-0.5, jnp.float32),
+        "w_in": _normal(k2, (e, dm, ff), dm**-0.5, dtype),
+        "w_gate": _normal(k3, (e, dm, ff), dm**-0.5, dtype),
+        "w_out": _normal(k4, (e, ff, dm), ff**-0.5, dtype),
+    }
+    s = {
+        "router": P(None, None),
+        "w_in": P(MODEL, None, None),    # expert-parallel
+        "w_gate": P(MODEL, None, None),
+        "w_out": P(MODEL, None, None),
+    }
+    return p, s
+
+
+def _capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * num_tokens * cfg.experts_per_token
+              / cfg.num_experts)
+    return max(8, (cap + 7) // 8 * 8)  # pad to 8 for tiling
+
+
+def _constrain(v, *spec):
+    """Best-effort sharding hint — inert off-mesh / under unsupported vmap."""
+    try:
+        from jax.sharding import PartitionSpec
+        return jax.lax.with_sharding_constraint(v, PartitionSpec(*spec))
+    except Exception:  # noqa: BLE001 — no mesh in scope / vmap limitation
+        return v
+
+
+def apply_moe(p, cfg: ArchConfig, x, *, shard_dispatch: bool = False):
+    """x: (B, S, D) → (out (B, S, D), aux_loss scalar).
+
+    ``shard_dispatch`` (§Perf lever): constrain the (E, cap, D) dispatch
+    buffers to capacity-sharded-over-'data' so the expert einsums stay local
+    instead of GSPMD replicating them."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tokens = x.reshape(b * s, d)
+    n = tokens.shape[0]
+    cap = _capacity(cfg, n)
+
+    logits = (tokens.astype(jnp.float32) @ p["router"])          # (n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # (n, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)       # renormalize
+
+    # Load-balance aux loss (Switch): E · Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=0)                                 # mean router prob
+    ce = jnp.zeros((e,)).at[top_e.reshape(-1)].add(1.0) / (n * k)  # token frac
+    aux = e * jnp.sum(me * ce)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    # one-hot over experts per choice, cumsum over flattened (choice-major)
+    # order gives intra-expert positions; entries ≥ cap are dropped.
+    choice_eh = jax.nn.one_hot(top_e, e, dtype=jnp.int32)        # (n, k, E)
+    flat = choice_eh.reshape(n * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=0) - flat                   # (n·k, E)
+    pos = jnp.sum(pos_in_e * flat, axis=-1).reshape(n, k)        # (n, k)
+    keep = pos < cap
+
+    # dispatch: (n, k) → (E, cap) gather indices built by scatter
+    tok_ids = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k))
+    gate = jnp.where(keep, top_p, 0.0)
+    e_flat = jnp.where(keep, top_e, e)                           # drop → expert E
+    p_flat = jnp.where(keep, pos, cap - 1)
+    slot_tok = jnp.full((e + 1, cap), 0, jnp.int32)
+    slot_tok = slot_tok.at[e_flat.reshape(-1), p_flat.reshape(-1)].set(
+        tok_ids.reshape(-1)
+    )
+    slot_gate = jnp.zeros((e + 1, cap))
+    slot_gate = slot_gate.at[e_flat.reshape(-1), p_flat.reshape(-1)].add(
+        gate.reshape(-1)
+    )
+    slot_tok, slot_gate = slot_tok[:e], slot_gate[:e]            # (E, cap)
+
+    xe = tokens[slot_tok]                                        # (E, cap, D)
+    if shard_dispatch:
+        xe = _constrain(xe, None, "data", None)
+    act = _act(cfg.activation)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_in"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])               # (E, cap, D)
+    if shard_dispatch:
+        ye = _constrain(ye, None, "data", None)
+
+    # combine: weighted scatter-add back to token order
+    out = jnp.zeros((n, d), ye.dtype)
+    out = out.at[slot_tok.reshape(-1)].add(
+        (ye * slot_gate[..., None].astype(ye.dtype)).reshape(e * cap, d)
+    )
+    return out.reshape(b, s, d), aux

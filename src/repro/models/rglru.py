@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = exp(−c·softplus(Λ)·r_t)     per-channel decay, c = 8
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses ``lax.associative_scan`` over the linear recurrence (parallel,
+log-depth — the TPU-idiomatic replacement for Griffin's custom scan); decode
+keeps an O(d_rnn) hidden state plus the conv window. The block is the
+Griffin "recurrent block": x → [gate branch, rnn branch]; rnn branch goes
+conv1d → RG-LRU; merged as GeLU(gate) ⊙ h → out-projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import MODEL, _normal, apply_conv1d, conv1d_step, init_conv1d
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig):
+    dm, dr = cfg.d_model, cfg.d_rnn
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 6)
+    p = {
+        "in_proj": _normal(keys[0], (dm, 2 * dr), dm**-0.5, dtype),  # [gate, x]
+        "out_proj": _normal(keys[1], (dr, dm), dr**-0.5, dtype),
+        "w_a": _normal(keys[2], (dr, dr), dr**-0.5, dtype),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": _normal(keys[3], (dr, dr), dr**-0.5, dtype),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        # Λ init so that softplus(Λ) gives decay in [0.9, 0.999] range
+        "lam": jnp.linspace(-2.0, 2.0, dr).astype(jnp.float32),
+    }
+    s = {
+        "in_proj": P(None, MODEL),
+        "out_proj": P(MODEL, None),
+        "w_a": P(None, MODEL),
+        "b_a": P(MODEL),
+        "w_x": P(None, MODEL),
+        "b_x": P(MODEL),
+        "lam": P(MODEL),
+    }
+    p["conv"], s["conv"] = init_conv1d(keys[4], dr, cfg.rglru_conv_width, dtype)
+    return p, s
+
+
+def _gates(p, x):
+    """x: (..., dr) → decay a_t (f32) and gated input (x dtype)."""
+    r = jax.nn.sigmoid((x @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((x @ p["w_x"]).astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r        # ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    u = beta * i * x.astype(jnp.float32)
+    return a, u
+
+
+def apply_rglru(p, cfg: ArchConfig, x):
+    """Full-sequence Griffin recurrent block. x: (B, S, D) → (B, S, D)."""
+    dr = cfg.d_rnn
+    proj = x @ p["in_proj"]
+    gate, xr = jnp.split(proj, 2, axis=-1)
+    xr = apply_conv1d(p["conv"], xr)
+    a, u = _gates(p, xr)                                # (B, S, dr) f32
+
+    # h_t = a_t h_{t−1} + u_t  — associative scan with pairs (a, u)
+    def combine(lhs, rhs):
+        a1, u1 = lhs
+        a2, u2 = rhs
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    h = h.astype(x.dtype)
+    y = jax.nn.gelu(gate) * h
+    return y @ p["out_proj"]
+
+
+def init_rglru_cache(cfg: ArchConfig, batch, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, cfg.d_rnn), dtype),
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+    }
+
+
+def rglru_cache_specs(worker_axes=()):
+    data_axes = ("data",) if "data" not in worker_axes else ()
+    bspec = tuple(worker_axes) + data_axes
+    bs = bspec if bspec else None
+    return {"conv": P(bs, None, MODEL), "h": P(bs, MODEL)}
+
+
+def decode_rglru(p, cfg: ArchConfig, x_t, cache):
+    """One-token decode. x_t: (B, 1, D)."""
+    proj = x_t[:, 0, :] @ p["in_proj"]
+    gate, xr = jnp.split(proj, 2, axis=-1)
+    xr, conv_win = conv1d_step(p["conv"], cache["conv"], xr)
+    a, u = _gates(p, xr)
+    h = a * cache["h"] + u
+    y = jax.nn.gelu(gate) * h.astype(x_t.dtype)
+    return (y @ p["out_proj"])[:, None, :], {"conv": conv_win, "h": h}

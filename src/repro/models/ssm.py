@@ -1,0 +1,180 @@
+"""Mamba-2 block — SSD (state-space duality) formulation [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk work is dense
+(MXU-friendly) matmuls against a lower-triangular decay matrix; inter-chunk
+work is a tiny recurrence over per-chunk summary states — the TPU-idiomatic
+adaptation of Mamba2's CUDA scan kernel. Decode carries an O(H·P·N) state.
+
+Shapes: d_inner = expand·d_model, heads H = d_inner / P (P = head dim),
+state size N, single B/C group shared across heads (n_groups = 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import MODEL, _normal, apply_conv1d, apply_rmsnorm, conv1d_step, init_conv1d, init_rmsnorm
+
+
+def init_ssm(key, cfg: ArchConfig):
+    dm, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 5)
+    conv_ch = di + 2 * n  # conv over [x, B, C]
+    p = {
+        # in_proj → [z (gate, di), x (di), B (n), C (n), dt (h)]
+        "in_proj": _normal(keys[0], (dm, 2 * di + 2 * n + h), dm**-0.5, dtype),
+        "out_proj": _normal(keys[1], (di, dm), di**-0.5, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+    }
+    s = {
+        "in_proj": P(None, MODEL),
+        "out_proj": P(MODEL, None),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "dt_bias": P(None),
+    }
+    p["conv"], s["conv"] = init_conv1d(keys[2], conv_ch, cfg.ssm_conv_width, dtype)
+    p["norm"], s["norm"] = init_rmsnorm(di, dtype)
+    return p, s
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k].
+
+    x: (..., q) → (..., q, q) lower-triangular (−inf above diagonal).
+    """
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P) · dt: (B, L, H) (post-softplus) · a: (H,) (negative)
+    b, c: (B, L, N) (single group) → y: (B, L, H, P).
+    """
+    bsz, l, h, pdim = x.shape
+    n = b.shape[-1]
+    q = chunk
+    nc = l // q
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+
+    out_dtype = x.dtype
+    # SSD runs in f32: the cumulative decay products underflow in bf16
+    x = x.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+
+    # dt-discretized decay (log) and input
+    da = dt * a  # (B, L, H), ≤ 0
+    xdt = x * dt[..., None]
+
+    def r(t, shape):
+        return t.reshape(shape)
+
+    xc = r(xdt, (bsz, nc, q, h, pdim))
+    dac = r(da, (bsz, nc, q, h)).transpose(0, 1, 3, 2)       # (B,C,H,Q)
+    bc = r(b, (bsz, nc, q, n))
+    cc = r(c, (bsz, nc, q, n))
+
+    da_cum = jnp.cumsum(dac, axis=-1)                        # (B,C,H,Q)
+
+    # 1) intra-chunk (diagonal blocks): Y_d[i] = Σ_{j≤i} C_i·B_j e^{ΣdA} x_j
+    ldecay = jnp.exp(_segsum(dac))                           # (B,C,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # (B,C,Q,Q)
+    y_diag = jnp.einsum(
+        "bcij,bchij,bcjhp->bcihp", scores, ldecay, xc
+    )
+
+    # 2) chunk summary states: S_c = Σ_j e^{Σ_{j<k≤Q} dA} B_j x_j
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)        # (B,C,H,Q)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence over summary states
+    chunk_decay = jnp.exp(da_cum[..., -1])                   # (B,C,H)
+
+    def scan_fn(carry, inp):
+        s_c, g_c = inp
+        new = carry * g_c[..., None, None] + s_c
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((bsz, h, pdim, n), x.dtype)
+    _, states_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    states_in = states_in.transpose(1, 0, 2, 3, 4)           # (B,C,H,P,N)
+
+    # 4) inter-chunk output: Y_off[i] = C_i e^{Σ_{0<k≤i} dA} S_in
+    in_decay = jnp.exp(da_cum)                               # (B,C,H,Q)
+    y_off = jnp.einsum("bcin,bchi,bchpn->bcihp", cc, in_decay, states_in)
+
+    return (y_diag + y_off).reshape(bsz, l, h, pdim).astype(out_dtype)
+
+
+def apply_ssm(p, cfg: ArchConfig, x):
+    """Full-sequence Mamba2 block. x: (B, S, D) → (B, S, D)."""
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc = apply_conv1d(p["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(*xs.shape[:2], h, pd)
+    y = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk)
+    y = y + p["d_skip"][:, None].astype(y.dtype) * xh
+    y = y.reshape(*xs.shape)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def init_ssm_cache(cfg: ArchConfig, batch, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_ch = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def ssm_cache_specs(worker_axes=()):
+    data_axes = ("data",) if "data" not in worker_axes else ()
+    bspec = tuple(worker_axes) + data_axes
+    bs = bspec if bspec else None
+    return {"conv": P(bs, None, MODEL), "state": P(bs, MODEL, None, None)}
+
+
+def decode_ssm(p, cfg: ArchConfig, x_t, cache):
+    """One-token decode. x_t: (B, 1, D) → (out, new_cache)."""
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x_t[:, 0, :] @ p["in_proj"]                        # (B, ·)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_win = conv1d_step(p["conv"], cache["conv"], xbc)
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                      # (B, H)
+    xh = xs.reshape(-1, h, pd)
+    # state' = e^{dtA} state + dt · x ⊗ B ;  y = C·state' + D·x
+    state = cache["state"] * da[..., None, None]
+    state = state + jnp.einsum("bhp,bn,bh->bhpn", xh.astype(jnp.float32),
+                               b.astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bn->bhp", state, c.astype(jnp.float32)).astype(x_t.dtype)
+    y = y + p["d_skip"][:, None].astype(y.dtype) * xh
+    y = y.reshape(-1, di)
+    y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": conv_win, "state": state}

@@ -1,0 +1,26 @@
+"""Optimizer zoo + generic serial/local drivers (paper baselines)."""
+from .base import (
+    MinimaxOptimizer,
+    OptState,
+    average_stacked,
+    base_init,
+    minibatch,
+    run_local,
+    run_serial,
+)
+from .methods import adam_minimax, asmp, segda, sgda, ump
+
+__all__ = [
+    "MinimaxOptimizer",
+    "OptState",
+    "adam_minimax",
+    "asmp",
+    "average_stacked",
+    "base_init",
+    "minibatch",
+    "run_local",
+    "run_serial",
+    "segda",
+    "sgda",
+    "ump",
+]

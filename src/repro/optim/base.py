@@ -1,0 +1,174 @@
+"""Unified functional interface for stochastic minimax optimizers.
+
+Every optimizer in the zoo (the paper's comparison set, §4.1 Fig. 4) is a
+pair of pure functions over an :class:`OptState`:
+
+    init(problem, rng)          -> OptState
+    step(problem, state, rng)   -> OptState
+
+with optimizer-specific extras living in ``state.inner``. Two generic
+drivers consume them:
+
+* :func:`run_serial`  — single worker, T steps (and, combined with
+  :func:`minibatch`, the paper's MB-* baselines: R steps of batch K·M).
+* :func:`run_local`   — M stacked workers, R rounds × K local steps with
+  periodic (optionally weighted) iterate averaging — the Local* family
+  (LocalSGDA, LocalSEGDA, Local Adam; LocalAdaSEG itself lives in
+  ``repro.core.adaseg`` with its inverse-η weighting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.tree import tree_zeros_like
+from ..core.types import MinimaxProblem
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    z: PyTree        # current (anchor) iterate
+    z_bar: PyTree    # running uniform average of exploration iterates
+    t: jax.Array     # step count (int32)
+    inner: PyTree    # optimizer-specific state
+    worker_id: jax.Array = None  # int32 — heterogeneous sampler tag
+
+
+@dataclasses.dataclass(frozen=True)
+class MinimaxOptimizer:
+    name: str
+    init: Callable[[MinimaxProblem, Any], OptState]
+    step: Callable[[MinimaxProblem, OptState, Any], OptState]
+    # Scalar weight for periodic averaging; LocalAdaSEG-style optimizers
+    # return 1/η, plain optimizers return 1 (uniform FedAvg weighting).
+    sync_weight: Callable[[OptState], jax.Array] = staticmethod(
+        lambda s: jnp.float32(1.0)
+    )
+
+
+def base_init(problem: MinimaxProblem, rng, inner: PyTree = (),
+              worker_id=0) -> OptState:
+    z0 = problem.project(problem.init(rng))
+    return OptState(z=z0, z_bar=tree_zeros_like(z0), t=jnp.int32(0),
+                    inner=inner, worker_id=jnp.int32(worker_id))
+
+
+def update_mean(z_bar: PyTree, z_new: PyTree, t_new: jax.Array) -> PyTree:
+    return jax.tree.map(
+        lambda zb, zt: zb + (zt - zb) / t_new.astype(zt.dtype), z_bar, z_new
+    )
+
+
+def minibatch(problem: MinimaxProblem, batch: int) -> MinimaxProblem:
+    """Average the stochastic oracle over ``batch`` iid samples (variance/B)."""
+
+    def sample(rng):
+        return jax.vmap(problem.sample)(jax.random.split(rng, batch))
+
+    sample_worker = None
+    if problem.sample_worker is not None:
+        def sample_worker(rng, worker_id):  # noqa: F811
+            return jax.vmap(
+                lambda r: problem.sample_worker(r, worker_id)
+            )(jax.random.split(rng, batch))
+
+    def oracle(z, xis):
+        gs = jax.vmap(lambda xi: problem.oracle(z, xi))(xis)
+        return jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
+
+    return dataclasses.replace(
+        problem, sample=sample, oracle=oracle, sample_worker=sample_worker,
+        name=f"{problem.name}@mb{batch}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def run_serial(
+    opt: MinimaxOptimizer,
+    problem: MinimaxProblem,
+    steps: int,
+    rng,
+    record_every: int = 1,
+):
+    """Run ``steps`` optimizer steps; return final state + recorded averages.
+
+    Records ``z_bar`` (the convex-combination output iterate) every
+    ``record_every`` steps, stacked on axis 0 — what the benchmark plots use.
+    """
+    state = opt.init(problem, rng)
+    chunks = steps // record_every
+
+    def chunk_fn(state, rng_c):
+        rngs = jax.random.split(rng_c, record_every)
+
+        def body(st, r):
+            return opt.step(problem, st, r), None
+
+        state, _ = lax.scan(body, state, rngs)
+        return state, state.z_bar
+
+    rng, sub = jax.random.split(rng)
+    state, history = lax.scan(chunk_fn, state, jax.random.split(sub, chunks))
+    return state, history
+
+
+def average_stacked(z: PyTree, weights: jax.Array) -> PyTree:
+    """Weighted mean over the leading worker axis, broadcast back."""
+    w = weights / jnp.sum(weights)
+
+    def avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        mean = jnp.sum(wb * leaf, axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, leaf.shape)
+
+    return jax.tree.map(avg, z)
+
+
+def run_local(
+    opt: MinimaxOptimizer,
+    problem: MinimaxProblem,
+    *,
+    num_workers: int,
+    local_k: int,
+    rounds: int,
+    rng,
+):
+    """Local-update periodic-averaging wrapper (the Local* baseline family).
+
+    Each round: average all workers' current iterates z (weighted by
+    ``opt.sync_weight``), then run ``local_k`` independent local steps.
+    Optimizer inner state (moments, accumulators) stays local — matching
+    Local Adam of Beznosikov et al. Returns the final state plus the
+    per-round global output-average history.
+    """
+    m = num_workers
+    rng, sub = jax.random.split(rng)
+    state = jax.vmap(
+        lambda r, w: opt.init(problem, r)._replace(worker_id=w)
+    )(jax.random.split(sub, m), jnp.arange(m, dtype=jnp.int32))
+    vstep = jax.vmap(lambda st, r: opt.step(problem, st, r))
+    vweight = jax.vmap(opt.sync_weight)
+
+    def round_fn(state, rng_round):
+        z_avg = average_stacked(state.z, vweight(state))
+        state = state._replace(z=z_avg)
+        rngs = jax.random.split(rng_round, local_k * m).reshape(local_k, m, 2)
+
+        def body(st, r):
+            return vstep(st, r), None
+
+        state, _ = lax.scan(body, state, rngs)
+        # Global output = uniform mean of worker averages (all t equal here).
+        out = jax.tree.map(lambda v: jnp.mean(v, axis=0), state.z_bar)
+        return state, out
+
+    state, history = lax.scan(round_fn, state, jax.random.split(rng, rounds))
+    return state, history

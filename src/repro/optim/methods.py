@@ -1,0 +1,179 @@
+"""The optimizer zoo: every baseline the paper compares against (§4, Fig. 4).
+
+All methods act on the descent field G(z, ξ) = [∂x f, −∂y f]:
+
+* :func:`sgda`   — (stochastic) simultaneous gradient descent-ascent
+                   [LocalSGDA base, Deng & Mahdavi '21].
+* :func:`segda`  — stochastic extragradient (Korpelevich / Nemirovski's
+                   mirror-prox, Euclidean) with constant lr
+                   [MB-SEGDA / LocalSEGDA base].
+* :func:`adam_minimax` — Adam applied per-coordinate to G
+                   [Local Adam base, Beznosikov et al. '21].
+* :func:`ump`    — Universal Mirror-Prox, the serial adaptive EG of
+                   Bach & Levy '19 (what LocalAdaSEG runs locally)
+                   [MB-UMP].
+* :func:`asmp`   — Adaptive Single-gradient Mirror-Prox, the optimistic /
+                   past-gradient variant of Ene & Nguyen '20: one oracle call
+                   per iteration [MB-ASMP].
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.tree import tree_axpy, tree_norm_sq, tree_sub, tree_zeros_like
+from ..core.types import MinimaxProblem, draw
+from .base import MinimaxOptimizer, OptState, base_init, update_mean
+
+PyTree = Any
+
+
+def sgda(lr: float) -> MinimaxOptimizer:
+    def step(problem: MinimaxProblem, state: OptState, rng) -> OptState:
+        g = problem.oracle(state.z, draw(problem, rng, state.worker_id))
+        z_new = problem.project(tree_axpy(-lr, g, state.z))
+        t_new = state.t + 1
+        return OptState(
+            z=z_new,
+            z_bar=update_mean(state.z_bar, z_new, t_new),
+            t=t_new,
+            inner=(),
+            worker_id=state.worker_id,
+        )
+
+    return MinimaxOptimizer(name=f"sgda(lr={lr})", init=base_init, step=step)
+
+
+def segda(lr: float) -> MinimaxOptimizer:
+    def step(problem: MinimaxProblem, state: OptState, rng) -> OptState:
+        r1, r2 = jax.random.split(rng)
+        m = problem.oracle(state.z, draw(problem, r1, state.worker_id))
+        w = problem.project(tree_axpy(-lr, m, state.z))          # exploration
+        g = problem.oracle(w, draw(problem, r2, state.worker_id))
+        z_new = problem.project(tree_axpy(-lr, g, state.z))      # anchor
+        t_new = state.t + 1
+        return OptState(
+            z=z_new,
+            z_bar=update_mean(state.z_bar, w, t_new),
+            t=t_new,
+            inner=(),
+            worker_id=state.worker_id,
+        )
+
+    return MinimaxOptimizer(name=f"segda(lr={lr})", init=base_init, step=step)
+
+
+def adam_minimax(
+    lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+) -> MinimaxOptimizer:
+    def init(problem, rng):
+        st = base_init(problem, rng)
+        zeros = tree_zeros_like(st.z)
+        return st._replace(inner={"m": zeros, "v": zeros})
+
+    def step(problem: MinimaxProblem, state: OptState, rng) -> OptState:
+        g = problem.oracle(state.z, draw(problem, rng, state.worker_id))
+        t_new = state.t + 1
+        tf = t_new.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, state.inner["m"], g)
+        v = jax.tree.map(
+            lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, state.inner["v"], g
+        )
+        mhat_scale = 1.0 / (1.0 - b1**tf)
+        vhat_scale = 1.0 / (1.0 - b2**tf)
+        z_new = problem.project(
+            jax.tree.map(
+                lambda z, mm, vv: z
+                - lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps),
+                state.z,
+                m,
+                v,
+            )
+        )
+        return OptState(
+            z=z_new,
+            z_bar=update_mean(state.z_bar, z_new, t_new),
+            t=t_new,
+            inner={"m": m, "v": v},
+            worker_id=state.worker_id,
+        )
+
+    return MinimaxOptimizer(name=f"adam(lr={lr})", init=init, step=step)
+
+
+def ump(g0: float, diameter: float, alpha: float = 1.0) -> MinimaxOptimizer:
+    """Universal Mirror-Prox (Bach & Levy '19): adaptive extragradient.
+
+    Identical to one LocalAdaSEG worker (K→∞, M=1); its 1/η is exposed as
+    the sync weight so ``run_local(ump, ...)`` is *unweighted-sync* ablation
+    of LocalAdaSEG, while ``repro.core`` carries the paper's weighted version.
+    """
+
+    def init(problem, rng):
+        st = base_init(problem, rng)
+        return st._replace(inner={"sum_sq": jnp.float32(0.0)})
+
+    def step(problem: MinimaxProblem, state: OptState, rng) -> OptState:
+        r1, r2 = jax.random.split(rng)
+        eta = diameter * alpha / jnp.sqrt(g0**2 + state.inner["sum_sq"])
+        m = problem.oracle(state.z, draw(problem, r1, state.worker_id))
+        w = problem.project(tree_axpy(-eta, m, state.z))
+        g = problem.oracle(w, draw(problem, r2, state.worker_id))
+        z_new = problem.project(tree_axpy(-eta, g, state.z))
+        z_sq = (
+            tree_norm_sq(tree_sub(w, state.z)) + tree_norm_sq(tree_sub(w, z_new))
+        ) / (5.0 * eta**2)
+        t_new = state.t + 1
+        return OptState(
+            z=z_new,
+            z_bar=update_mean(state.z_bar, w, t_new),
+            t=t_new,
+            inner={"sum_sq": state.inner["sum_sq"] + z_sq},
+            worker_id=state.worker_id,
+        )
+
+    def sync_weight(state: OptState) -> jax.Array:
+        return jnp.sqrt(g0**2 + state.inner["sum_sq"]) / (diameter * alpha)
+
+    return MinimaxOptimizer(
+        name=f"ump(g0={g0})", init=init, step=step, sync_weight=sync_weight
+    )
+
+
+def asmp(g0: float, diameter: float, alpha: float = 1.0) -> MinimaxOptimizer:
+    """Adaptive Single-gradient Mirror-Prox (Ene & Nguyen '20).
+
+    Optimistic variant: the extrapolation reuses the PREVIOUS gradient, so
+    each iteration makes a single oracle call. Learning rate adapts to the
+    accumulated prediction error ‖g_t − g_{t−1}‖².
+    """
+
+    def init(problem, rng):
+        st = base_init(problem, rng)
+        return st._replace(
+            inner={"sum_sq": jnp.float32(0.0), "g_prev": tree_zeros_like(st.z)}
+        )
+
+    def step(problem: MinimaxProblem, state: OptState, rng) -> OptState:
+        eta = diameter * alpha / jnp.sqrt(g0**2 + state.inner["sum_sq"])
+        w = problem.project(tree_axpy(-eta, state.inner["g_prev"], state.z))
+        g = problem.oracle(w, draw(problem, rng, state.worker_id))
+        z_new = problem.project(tree_axpy(-eta, g, state.z))
+        err_sq = tree_norm_sq(tree_sub(g, state.inner["g_prev"]))
+        t_new = state.t + 1
+        return OptState(
+            z=z_new,
+            z_bar=update_mean(state.z_bar, w, t_new),
+            t=t_new,
+            inner={"sum_sq": state.inner["sum_sq"] + err_sq, "g_prev": g},
+            worker_id=state.worker_id,
+        )
+
+    def sync_weight(state: OptState) -> jax.Array:
+        return jnp.sqrt(g0**2 + state.inner["sum_sq"]) / (diameter * alpha)
+
+    return MinimaxOptimizer(
+        name=f"asmp(g0={g0})", init=init, step=step, sync_weight=sync_weight
+    )

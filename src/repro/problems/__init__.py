@@ -1,0 +1,13 @@
+"""Minimax problem instances used by the paper's experiments (+ extras)."""
+from .bilinear import BilinearGame, make_bilinear_game
+from .quadratic import make_quadratic_game
+from .robust import make_robust_logistic
+from .wgan import make_wgan_problem
+
+__all__ = [
+    "BilinearGame",
+    "make_bilinear_game",
+    "make_quadratic_game",
+    "make_robust_logistic",
+    "make_wgan_problem",
+]

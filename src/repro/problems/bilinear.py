@@ -1,0 +1,91 @@
+"""Stochastic bilinear minimax game with box constraints (paper §4.1).
+
+    min_{x ∈ C^n} max_{y ∈ C^n}  E_ξ [ xᵀA y + (b+ξ)ᵀx + (c+ξ)ᵀy ],
+    C^n = [-1, 1]^n,  ξ ~ N(0, σ² I).
+
+Dataset generation follows the paper: b, c ~ U[-1,1]^n; A = Ā / max(b_max,
+c_max) with Ā a random symmetric matrix in [-1,1]^{n×n} (symmetric, NOT
+semidefinite). Quality metrics:
+
+* KKT residual Res(x,y)² = ‖x − Π(x − (Ay+b))‖² + ‖y − Π(y + (Aᵀx+c))‖²
+  (the paper's §4.1 criterion),
+* exact duality gap over the box (closed form via the l1 norm).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core import projections
+from ..core.types import MinimaxProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class BilinearGame:
+    a: jax.Array          # (n, n) symmetric coupling matrix
+    b: jax.Array          # (n,)
+    c: jax.Array          # (n,)
+    sigma: float          # oracle noise level
+    problem: MinimaxProblem
+
+    @property
+    def n(self) -> int:
+        return self.b.shape[0]
+
+    def residual(self, z) -> jax.Array:
+        """Paper's KKT residual Res(x, y)."""
+        x, y = z
+        rx = x - jnp.clip(x - (self.a @ y + self.b), -1.0, 1.0)
+        ry = y - jnp.clip(y + (self.a.T @ x + self.c), -1.0, 1.0)
+        return jnp.sqrt(jnp.sum(rx**2) + jnp.sum(ry**2))
+
+    def duality_gap(self, z) -> jax.Array:
+        """Exact DualGap(z̄) over the box: inner max/min are l1 norms."""
+        x, y = z
+        max_y = self.b @ x + jnp.sum(jnp.abs(self.a.T @ x + self.c))
+        min_x = self.c @ y - jnp.sum(jnp.abs(self.a @ y + self.b))
+        return max_y - min_x
+
+
+def make_bilinear_game(
+    rng, n: int = 10, sigma: float = 0.1, name: str = "bilinear"
+) -> BilinearGame:
+    r_a, r_b, r_c = jax.random.split(rng, 3)
+    b = jax.random.uniform(r_b, (n,), minval=-1.0, maxval=1.0)
+    c = jax.random.uniform(r_c, (n,), minval=-1.0, maxval=1.0)
+    a_bar = jax.random.uniform(r_a, (n, n), minval=-1.0, maxval=1.0)
+    a_bar = 0.5 * (a_bar + a_bar.T)
+    a = a_bar / jnp.maximum(jnp.max(jnp.abs(b)), jnp.max(jnp.abs(c)))
+
+    def init(rng):
+        rx, ry = jax.random.split(rng)
+        x0 = jax.random.uniform(rx, (n,), minval=-1.0, maxval=1.0)
+        y0 = jax.random.uniform(ry, (n,), minval=-1.0, maxval=1.0)
+        return (x0, y0)
+
+    def sample(rng):
+        return sigma * jax.random.normal(rng, (n,))
+
+    def oracle(z, xi):
+        # Descent form G = [∂x F, −∂y F]: the update z ← Π(z − ηG) descends
+        # in x and ascends in y.
+        x, y = z
+        gx = a @ y + b + xi
+        gy = a.T @ x + c + xi
+        return (gx, -gy)
+
+    def mean_oracle(z, _):
+        x, y = z
+        return (a @ y + b, -(a.T @ x + c))
+
+    problem = MinimaxProblem(
+        init=init,
+        sample=sample,
+        oracle=oracle,
+        project=projections.box(-1.0, 1.0),
+        mean_oracle=mean_oracle,
+        name=name,
+    )
+    return BilinearGame(a=a, b=b, c=c, sigma=sigma, problem=problem)

@@ -1,0 +1,91 @@
+"""Strongly-convex-strongly-concave quadratic saddle problem.
+
+    F(x, y) = ½ xᵀP x − ½ yᵀQ y + xᵀA y + bᵀx + cᵀy,   P, Q ≻ 0.
+
+Smooth (Assumption 4 with L = ‖[P A; Aᵀ Q]‖) with a unique saddle point
+available in closed form — the workhorse for exactness tests of every
+optimizer in the zoo, and the "smooth case" (Theorem 2) validation problem.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core import projections
+from ..core.types import MinimaxProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadraticGame:
+    p: jax.Array
+    q: jax.Array
+    a: jax.Array
+    b: jax.Array
+    c: jax.Array
+    sigma: float
+    problem: MinimaxProblem
+    z_star: tuple[jax.Array, jax.Array]
+
+    def distance_to_saddle(self, z) -> jax.Array:
+        x, y = z
+        xs, ys = self.z_star
+        return jnp.sqrt(jnp.sum((x - xs) ** 2) + jnp.sum((y - ys) ** 2))
+
+
+def make_quadratic_game(
+    rng,
+    n: int = 10,
+    sigma: float = 0.1,
+    mu: float = 1.0,
+    radius: float = 10.0,
+) -> QuadraticGame:
+    r_p, r_q, r_a, r_b, r_c = jax.random.split(rng, 5)
+
+    def psd(r):
+        m = jax.random.normal(r, (n, n)) / jnp.sqrt(n)
+        return m @ m.T + mu * jnp.eye(n)
+
+    p, q = psd(r_p), psd(r_q)
+    a = jax.random.normal(r_a, (n, n)) / jnp.sqrt(n)
+    b = jax.random.normal(r_b, (n,))
+    c = jax.random.normal(r_c, (n,))
+
+    # Saddle: Px + Ay = −b ;  Aᵀx − Qy = −c.
+    block = jnp.block([[p, a], [a.T, -q]])
+    rhs = jnp.concatenate([-b, -c])
+    sol = jnp.linalg.solve(block, rhs)
+    z_star = (sol[:n], sol[n:])
+
+    def init(rng):
+        rx, ry = jax.random.split(rng)
+        return (
+            jax.random.normal(rx, (n,)),
+            jax.random.normal(ry, (n,)),
+        )
+
+    def sample(rng):
+        return sigma * jax.random.normal(rng, (2 * n,))
+
+    def oracle(z, xi):
+        x, y = z
+        gx = p @ x + a @ y + b + xi[:n]
+        gy = a.T @ x - q @ y + c + xi[n:]
+        return (gx, -gy)
+
+    def mean_oracle(z, _):
+        x, y = z
+        return (p @ x + a @ y + b, -(a.T @ x - q @ y + c))
+
+    problem = MinimaxProblem(
+        init=init,
+        sample=sample,
+        oracle=oracle,
+        project=projections.l2_ball(radius),
+        mean_oracle=mean_oracle,
+        name="quadratic",
+    )
+    return QuadraticGame(
+        p=p, q=q, a=a, b=b, c=c, sigma=sigma, problem=problem, z_star=z_star
+    )

@@ -1,0 +1,2 @@
+"""Roofline-term extraction from compiled artifacts."""
+from .analysis import analyze_compiled, collective_stats, model_flops

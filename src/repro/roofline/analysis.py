@@ -1,0 +1,129 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs        / peak_FLOP/s          (197 Tbf16/s·chip)
+    memory     = HLO_bytes        / HBM_bw               (819 GB/s·chip)
+    collective = collective_bytes / link_bw              (~50 GB/s/link ICI)
+
+``cost_analysis()`` on a GSPMD-partitioned module reports *per-device*
+FLOPs/bytes (the module is the per-device program), so no further division
+by chip count is applied. collective_bytes is not in cost_analysis — we
+parse the post-partitioning HLO and sum the result-shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.7 = bf16[16,4096]{1,0} all-gather(bf16[1,4096]{1,0} %x)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes + counts of every collective in the HLO."""
+    bytes_by_kind: dict[str, int] = {}
+    count_by_kind: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        # cheap pre-filter
+        if "all-" not in line and "reduce-scatter" not in line and \
+                "collective-permute" not in line:
+            continue
+        if "-done(" in line:  # async pair: count the -start only
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        b = _shape_bytes(dtype, dims)
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+    return {
+        "bytes_by_kind": bytes_by_kind,
+        "count_by_kind": count_by_kind,
+        "total_bytes": int(sum(bytes_by_kind.values())),
+    }
+
+
+def _cost_value(cost, key, default=0.0):
+    try:
+        return float(cost.get(key, default))
+    except AttributeError:
+        return default
+
+
+def analyze_compiled(lowered, compiled, mesh) -> dict:
+    from .hlo_parse import collective_stats_v2
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats_v2(hlo, mesh)
+
+    flops = _cost_value(cost, "flops")
+    hbm_bytes = _cost_value(cost, "bytes accessed")
+    bytes_per_device = float(
+        getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        + getattr(mem, "temp_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0)
+    )
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = coll["total_bytes"] / ICI_BW
+    terms = {
+        "compute": t_compute, "memory": t_memory, "collective": t_collective
+    }
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll["total_bytes"],
+        "collectives": coll["count_by_kind"],
+        "collective_bytes_by_kind": coll["bytes_by_kind"],
+        "collective_bytes_by_axis": coll.get("bytes_by_axis", {}),
+        "bytes_per_device": bytes_per_device,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": max(terms, key=terms.get),
+        "num_devices": int(mesh.size),
+    }
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """6·N·D rule of thumb (per forward+backward over D tokens)."""
+    return 6.0 * n_params_active * tokens

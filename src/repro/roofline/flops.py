@@ -1,0 +1,154 @@
+"""Analytic FLOP / parameter / HBM-byte accounting per architecture.
+
+XLA's cost_analysis counts while-loop (scanned-layer) bodies once, and full
+unrolling does not compile within budget for the ≥27B configs — so the
+roofline compute term uses this exact matmul-level estimator (the standard
+MaxText-style accounting), cross-validated against unrolled HLO counts on
+the small architectures (see EXPERIMENTS.md §Roofline/validation).
+
+Conventions: a (m×k)·(k×n) matmul is 2·m·k·n FLOPs; backward = 2× forward;
+rematerialized training forward is recomputed once inside backward, so a
+train step costs (1 + 1·remat + 2) × forward; an extragradient local step
+makes TWO gradient calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FlopsBreakdown:
+    forward: float            # per-sample forward FLOPs
+    params: float             # total parameter count
+    params_active: float      # active per token (MoE: top-k experts only)
+
+    def train_step(self, remat: bool = True) -> float:
+        """fwd + bwd (+ remat re-forward) for ONE gradient call."""
+        return self.forward * (4.0 if remat else 3.0)
+
+    def eg_local_step(self, remat: bool = True) -> float:
+        return 2.0 * self.train_step(remat)
+
+
+def _attn_flops(cfg: ArchConfig, s: int, window: int | None,
+                kv_len: int | None = None) -> float:
+    """Per-sample attention-layer FLOPs for query length s."""
+    d, h, kh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    proj = 2.0 * s * d * dh * (2 * h + 2 * kh)     # q,k,v,o projections
+    if kv_len is None:
+        # causal self-attention: average context s/2, or ≈window when it
+        # clips (small overcount for the first `window` positions)
+        avg = window if (window and window < s) else s / 2.0
+    else:
+        avg = kv_len
+    qk_av = 2.0 * 2.0 * s * avg * h * dh           # logits + prob·V
+    return proj + qk_av
+
+
+def _mlp_flops(cfg: ArchConfig, s: int) -> float:
+    gated = cfg.activation in ("silu", "gelu")
+    return 2.0 * s * cfg.d_model * cfg.d_ff * (3 if gated else 2)
+
+
+def _moe_flops(cfg: ArchConfig, s: int) -> float:
+    router = 2.0 * s * cfg.d_model * cfg.num_experts
+    # capacity-padded expert compute: E·cap tokens, cap from capacity_factor
+    eff_tokens = s * cfg.experts_per_token * cfg.capacity_factor
+    expert = 2.0 * eff_tokens * cfg.d_model * cfg.d_ff * 3
+    return router + expert
+
+
+def _ssm_flops(cfg: ArchConfig, s: int) -> float:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p, q = cfg.ssm_head_dim, cfg.ssm_chunk
+    proj = 2.0 * s * d * (2 * di + 2 * n + h) + 2.0 * s * di * d
+    conv = 2.0 * s * (di + 2 * n) * cfg.ssm_conv_width
+    # SSD per chunk: scores Q²N + y_diag Q²HP + states/y_off 2·QHPN
+    per_chunk = 2.0 * (q * q * n + q * q * h * p + 2 * q * h * p * n)
+    ssd = (s / q) * per_chunk
+    return proj + conv + ssd
+
+
+def _rglru_flops(cfg: ArchConfig, s: int) -> float:
+    d, dr = cfg.d_model, cfg.d_rnn
+    proj = 2.0 * s * d * 2 * dr + 2.0 * s * dr * d
+    gates = 2.0 * s * dr * dr * 2
+    return proj + gates
+
+
+def _layer_params(cfg: ArchConfig, kind: dict) -> tuple[float, float]:
+    """(total, active-per-token) params of one layer."""
+    d, h, kh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    if kind["kind"] == "attn":
+        mix = d * dh * (2 * h + 2 * kh)
+    elif kind["kind"] == "ssm":
+        di, n = cfg.d_inner, cfg.ssm_state
+        mix = d * (2 * di + 2 * n + cfg.ssm_heads) + di * d
+    else:
+        dr = cfg.d_rnn
+        mix = d * 2 * dr + dr * d + 2 * dr * dr
+    if kind.get("cross_attn"):
+        mix += d * dh * (2 * h + 2 * kh)
+    gated = 3 if cfg.activation in ("silu", "gelu") else 2
+    if kind.get("moe"):
+        total_mlp = cfg.num_experts * d * cfg.d_ff * 3 + d * cfg.num_experts
+        active_mlp = cfg.experts_per_token * d * cfg.d_ff * 3
+    elif cfg.d_ff > 0:
+        total_mlp = active_mlp = gated * d * cfg.d_ff
+    else:
+        total_mlp = active_mlp = 0
+    return mix + total_mlp, mix + active_mlp
+
+
+def estimate(cfg: ArchConfig, seq: int, *, kv_len: int | None = None,
+             decode: bool = False) -> FlopsBreakdown:
+    """Per-sample forward FLOPs + parameter counts.
+
+    ``decode=True``: seq is ignored for queries (1 token) and ``kv_len``
+    gives the attention context length.
+    """
+    s = 1 if decode else seq
+    fwd = 0.0
+    params_total = cfg.vocab_size * cfg.d_model
+    params_active = params_total
+    for kind in cfg.layer_kinds():
+        pt, pa = _layer_params(cfg, kind)
+        params_total += pt
+        params_active += pa
+        if kind["kind"] == "attn":
+            if decode:
+                ctx = min(kind["window"] or kv_len, kv_len)
+                fwd += _attn_flops(cfg, 1, None, kv_len=ctx)
+            else:
+                fwd += _attn_flops(cfg, s, kind["window"])
+        elif kind["kind"] == "ssm":
+            fwd += _ssm_flops(cfg, s)
+        else:
+            fwd += _rglru_flops(cfg, s)
+        if kind.get("cross_attn") and cfg.encoder_seq:
+            fwd += _attn_flops(cfg, s, None, kv_len=cfg.encoder_seq)
+        if kind.get("moe"):
+            fwd += _moe_flops(cfg, s)
+        elif cfg.d_ff > 0:
+            fwd += _mlp_flops(cfg, s)
+    # encoder (whisper): full non-causal stack over encoder_seq
+    if cfg.is_encoder_decoder:
+        se = cfg.encoder_seq
+        enc = cfg.encoder_layers * (
+            _attn_flops(cfg, se, None, kv_len=se) + _mlp_flops(cfg, se)
+        )
+        fwd += enc
+        params_total += cfg.encoder_layers * (
+            cfg.d_model * cfg.head_dim_ * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+            + 3 * cfg.d_model * cfg.d_ff
+        )
+    # lm head
+    fwd += 2.0 * s * cfg.d_model * cfg.vocab_size
+    if not cfg.tie_embeddings:
+        params_total += cfg.d_model * cfg.vocab_size
+        params_active += cfg.d_model * cfg.vocab_size
+    return FlopsBreakdown(
+        forward=fwd, params=params_total, params_active=params_active
+    )

@@ -1,0 +1,203 @@
+"""Trip-count- and mesh-axis-aware collective accounting from HLO text.
+
+XLA's ``cost_analysis`` counts a ``while`` body once, but a scanned layer
+stack executes it ``known_trip_count`` times; and for LocalAdaSEG the key
+question is *which mesh axis* each collective crosses (worker-sync traffic
+is amortized 1/K, tensor-parallel traffic is not). This module parses the
+post-partitioning HLO:
+
+1. splits it into named computations,
+2. reads every ``while`` instruction's body/condition and
+   ``known_trip_count`` backend config,
+3. propagates execution multipliers from ENTRY through (possibly nested)
+   while bodies,
+4. decodes ``replica_groups`` (explicit ``{{0,1},{2,3}}``, iota
+   ``[G,S]<=[N]`` and transposed-iota ``[G,S]<=[a,b]T(p)`` forms) and maps
+   each collective onto the mesh axes its groups span.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\("
+)
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=(%[\w\.\-]+), body=(%[\w\.\-]+)"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,{} ]*)\}\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([\d,{} ]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its instruction lines. ENTRY is named 'ENTRY'."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and stripped.endswith("{"):
+            m = re.match(r"(ENTRY\s+)?(%[\w\.\-]+)", stripped)
+            if m:
+                cur = "ENTRY" if m.group(1) else m.group(2)
+                comps[cur] = []
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def while_multipliers(comps: dict[str, list[str]]) -> dict[str, int]:
+    """Execution count per computation, via whiles reachable from ENTRY."""
+    # computation -> [(child_comp, trip)] for its while instructions
+    edges: dict[str, list[tuple[str, int]]] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.groups()
+            t = _TRIP_RE.search(line)
+            trip = int(t.group(1)) if t else 1
+            edges.setdefault(name, []).append((body, trip))
+            edges.setdefault(name, []).append((cond, trip + 1))
+    mult: dict[str, int] = {k: 0 for k in comps}
+    if "ENTRY" in mult:
+        mult["ENTRY"] = 1
+    # propagate (computations form a DAG of calls; iterate to fixpoint)
+    for _ in range(len(comps)):
+        changed = False
+        for parent, children in edges.items():
+            for child, trip in children:
+                want = mult.get(parent, 0) * trip
+                if child in mult and want > mult[child]:
+                    mult[child] = want
+                    changed = True
+        if not changed:
+            break
+    # non-while computations (fusions, reducers) keep their parent's count
+    # implicitly — collectives never appear inside fusions, so computations
+    # never reached through whiles score max(1, ·) when scanning ENTRY-level.
+    return mult
+
+
+def _decode_groups(line: str) -> list[list[int]] | None:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s, dims, perm = m.groups()
+        dims = [int(d) for d in dims.split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if perm:
+            arr = arr.transpose([int(p) for p in perm.split(",")])
+        return arr.reshape(int(g), int(s)).tolist()
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return [
+            [int(x) for x in grp.split(",") if x.strip()]
+            for grp in m.group(1).split("},{")
+        ]
+    m = _PAIRS_RE.search(line)
+    if m:  # collective-permute: treat each pair as a group
+        flat = [int(x) for x in re.findall(r"\d+", m.group(1))]
+        return [flat[i : i + 2] for i in range(0, len(flat), 2)]
+    return None
+
+
+def classify_axes(groups, mesh) -> str:
+    """Which mesh axes do the groups span? Returns e.g. 'model', 'data',
+    'pod,data', or 'unknown'."""
+    if not groups:
+        return "unknown"
+    shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+    id_to_coord = {}
+    for idx, dev in np.ndenumerate(mesh.devices):
+        id_to_coord[dev.id] = idx
+    varying: set[str] = set()
+    for grp in groups:
+        if len(grp) < 2:
+            continue
+        coords = [id_to_coord.get(d) for d in grp]
+        if any(c is None for c in coords):
+            return "unknown"
+        base = coords[0]
+        for c in coords[1:]:
+            for ax_i, (a, b) in enumerate(zip(base, c)):
+                if a != b:
+                    varying.add(mesh.axis_names[ax_i])
+    return ",".join(
+        a for a in mesh.axis_names if a in varying
+    ) or "self"
+
+
+def collective_stats_v2(hlo: str, mesh=None) -> dict:
+    comps = split_computations(hlo)
+    mult = while_multipliers(comps)
+    bytes_by_kind: dict[str, int] = {}
+    count_by_kind: dict[str, int] = {}
+    bytes_by_axis: dict[str, int] = {}
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if name != "ENTRY" and m == 0:
+            # Not reached through a while. Collectives normally live in
+            # ENTRY or while bodies; a stray one (e.g. inside a called
+            # conditional branch) is counted once.
+            m = 1 if any(_COLL_RE.search(ln) for ln in lines) else 0
+        if m == 0:
+            continue
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if not cm:
+                continue
+            if "-done(" in line:
+                continue
+            kind = cm.group("kind")
+            # result may be a tuple type — XLA combines many all-reduces
+            # into one tuple-shaped op; sum every element's bytes.
+            b1 = sum(
+                _shape_bytes(d, s) for d, s in _TYPE_RE.findall(
+                    cm.group("result")
+                )
+            )
+            groups = _decode_groups(line)
+            if kind == "reduce-scatter" and groups:
+                # result is the scattered shard — scale to the full operand
+                b1 *= max(len(g) for g in groups)
+            b = b1 * m
+            bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + b
+            count_by_kind[kind] = count_by_kind.get(kind, 0) + m
+            if mesh is not None:
+                axis = classify_axes(groups, mesh)
+                bytes_by_axis[axis] = bytes_by_axis.get(axis, 0) + b
+    return {
+        "bytes_by_kind": bytes_by_kind,
+        "count_by_kind": count_by_kind,
+        "bytes_by_axis": bytes_by_axis,
+        "total_bytes": int(sum(bytes_by_kind.values())),
+    }

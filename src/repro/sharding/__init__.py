@@ -1,0 +1,8 @@
+"""Sharding rules and PartitionSpec utilities."""
+from .specs import (
+    abstract_like,
+    build_param_shardings,
+    fsdp_spec,
+    sanitize_spec,
+    stack_spec,
+)

@@ -1,0 +1,57 @@
+"""Checkpoint round-trip tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.int32),
+              "d": jnp.full((2, 2), 0.5, jnp.bfloat16)},
+    }
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, tree)
+    restored = load_pytree(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, {"a": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        load_pytree(path, {"a": jnp.zeros((4,))})
+
+
+def test_leaf_count_mismatch_rejected(tmp_path):
+    path = str(tmp_path / "ckpt.msgpack")
+    save_pytree(path, {"a": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        load_pytree(path, {"a": jnp.zeros((3,)), "b": jnp.zeros((3,))})
+
+
+def test_train_state_roundtrip(tmp_path):
+    from repro.configs import smoke_config
+    from repro.core.adaseg import AdaSEGConfig
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.train import TrainPlan, init_train_state
+
+    plan = TrainPlan(
+        cfg=smoke_config("qwen2-0.5b"),
+        adaseg=AdaSEGConfig(g0=1.0, diameter=1.0, alpha=1.0, k=1),
+        worker_mode="paper", k_local=1, global_batch=2, seq=8,
+    )
+    mesh = make_test_mesh(1, 1)
+    state = init_train_state(jax.random.PRNGKey(0), plan, mesh)
+    path = str(tmp_path / "state.msgpack")
+    save_pytree(path, state)
+    restored = load_pytree(path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))

@@ -1,0 +1,138 @@
+"""Unit + property tests for the core LocalAdaSEG algorithm (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaSEGConfig,
+    eta_of,
+    init,
+    local_step,
+    run_local_adaseg,
+    sync_weighted_stacked,
+)
+from repro.problems import make_bilinear_game, make_quadratic_game
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+
+
+def test_eta_schedule_matches_hand_rolled(game):
+    """η_t = D·α/sqrt(G0² + Σ (Z_τ)²), recomputed from the aux trace."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+    state = init(game.problem, cfg, jax.random.PRNGKey(1))
+    rngs = jax.random.split(jax.random.PRNGKey(2), 20)
+    etas, zsqs = [], []
+    for r in rngs:
+        state, aux = local_step(game.problem, cfg, state, r)
+        etas.append(float(aux.eta))
+        zsqs.append(float(aux.z_sq))
+    expected = [cfg.diameter * cfg.alpha / np.sqrt(cfg.g0**2 + sum(zsqs[:i]))
+                for i in range(len(zsqs))]
+    np.testing.assert_allclose(etas, expected, rtol=1e-5)
+
+
+def test_eta_monotone_nonincreasing(game):
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+    state = init(game.problem, cfg, jax.random.PRNGKey(1))
+    last = np.inf
+    for r in jax.random.split(jax.random.PRNGKey(3), 50):
+        state, aux = local_step(game.problem, cfg, state, r)
+        assert float(aux.eta) <= last + 1e-12
+        last = float(aux.eta)
+
+
+def test_z_bounded_by_projection(game):
+    """All iterates stay in the box (Assumption 1 enforcement)."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+    state = init(game.problem, cfg, jax.random.PRNGKey(1))
+    for r in jax.random.split(jax.random.PRNGKey(4), 20):
+        state, _ = local_step(game.problem, cfg, state, r)
+        for leaf in jax.tree.leaves(state.z_tilde):
+            assert jnp.all(jnp.abs(leaf) <= 1.0 + 1e-6)
+
+
+def test_sync_weights_form_simplex():
+    z = {"x": jnp.arange(12.0).reshape(4, 3)}
+    inv_eta = jnp.array([1.0, 2.0, 3.0, 4.0])
+    out = sync_weighted_stacked(z, inv_eta)
+    # all workers share the same average afterwards
+    for m in range(1, 4):
+        np.testing.assert_allclose(out["x"][0], out["x"][m], rtol=1e-6)
+    w = inv_eta / inv_eta.sum()
+    np.testing.assert_allclose(
+        out["x"][0], (w[:, None] * z["x"]).sum(0), rtol=1e-6
+    )
+
+
+def test_single_worker_sync_is_noop(game):
+    """With M=1 the weighted sync must leave the iterate unchanged, so
+    LocalAdaSEG degenerates to the serial adaptive EG of Bach & Levy."""
+    from repro.core import sync_state
+
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=10)
+    state = init(game.problem, cfg, jax.random.PRNGKey(7))
+    stacked = jax.tree.map(lambda v: v[None] if hasattr(v, "ndim") else v,
+                           state)
+    synced = sync_state(stacked, cfg, sync_weighted_stacked)
+    for a, b in zip(jax.tree.leaves(stacked.z_tilde),
+                    jax.tree.leaves(synced.z_tilde)):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    # determinism of the full driver
+    z1, _ = run_local_adaseg(
+        game.problem, cfg, num_workers=1, rounds=4, rng=jax.random.PRNGKey(7)
+    )
+    z2, _ = run_local_adaseg(
+        game.problem, cfg, num_workers=1, rounds=4, rng=jax.random.PRNGKey(7)
+    )
+    for a, b in zip(jax.tree.leaves(z1), jax.tree.leaves(z2)):
+        np.testing.assert_allclose(a, b, rtol=0, atol=0)
+
+
+def test_convergence_bilinear(game):
+    z0 = game.problem.init(jax.random.PRNGKey(1))
+    r0 = float(game.residual(z0))
+    cfg = AdaSEGConfig(g0=1.0, diameter=float(np.sqrt(40.0)), alpha=1.0, k=50)
+    zbar, _ = run_local_adaseg(
+        game.problem, cfg, num_workers=4, rounds=20, rng=jax.random.PRNGKey(2)
+    )
+    r = float(game.residual(zbar))
+    assert r < r0 / 10, (r0, r)
+    assert float(game.duality_gap(zbar)) >= -1e-5
+
+
+def test_convergence_quadratic_smooth():
+    qg = make_quadratic_game(jax.random.PRNGKey(5), n=10, sigma=0.1)
+    m = 4
+    cfg = AdaSEGConfig(g0=1.0, diameter=10.0, alpha=1.0 / np.sqrt(m), k=10)
+    zbar, _ = run_local_adaseg(
+        qg.problem, cfg, num_workers=m, rounds=100, rng=jax.random.PRNGKey(6)
+    )
+    assert float(qg.distance_to_saddle(zbar)) < 0.2
+
+
+def test_async_variant_converges(game):
+    """Heterogeneous K_m (Appendix E.1) still converges."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=float(np.sqrt(40.0)), alpha=1.0, k=50)
+    zbar, (state, _) = run_local_adaseg(
+        game.problem, cfg, num_workers=4, rounds=20,
+        rng=jax.random.PRNGKey(8),
+        local_steps=jnp.array([50, 45, 40, 35]),
+    )
+    assert float(game.residual(zbar)) < 0.5
+    # workers really did different numbers of steps
+    np.testing.assert_array_equal(
+        np.asarray(state.t), np.array([50, 45, 40, 35]) * 20
+    )
+
+
+def test_output_average_in_domain(game):
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+    zbar, _ = run_local_adaseg(
+        game.problem, cfg, num_workers=3, rounds=5, rng=jax.random.PRNGKey(9)
+    )
+    for leaf in jax.tree.leaves(zbar):
+        assert jnp.all(jnp.abs(leaf) <= 1.0 + 1e-6)

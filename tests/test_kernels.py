@@ -1,0 +1,126 @@
+"""Per-kernel correctness sweeps: Pallas (interpret mode) vs pure-jnp oracle
+across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.adaseg_update.kernel import adaseg_update
+from repro.kernels.adaseg_update.ref import adaseg_update_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (1, 2, 2, 64, 32),      # MHA
+    (2, 4, 2, 128, 64),     # GQA 2:1
+    (1, 8, 1, 64, 64),      # MQA
+    (1, 4, 4, 96, 32),      # non-power-of-two seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(b, h, kh, s, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, kh, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, kh, s, d), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("feature", ["window", "softcap", "noncausal", "scale"])
+def test_flash_attention_features(feature):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 4, 128, 64))
+    k = jax.random.normal(ks[1], (2, 2, 128, 64))
+    v = jax.random.normal(ks[2], (2, 2, 128, 64))
+    kwargs = {
+        "window": dict(causal=True, window=32),
+        "softcap": dict(causal=True, softcap=20.0),
+        "noncausal": dict(causal=False),
+        "scale": dict(causal=True, scale=0.05),
+    }[feature]
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True,
+                          **kwargs)
+    ref = attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Output must not depend on the BlockSpec tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    outs = [
+        flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+        for bq, bk in [(32, 32), (64, 128), (256, 64), (128, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [64, 1000, 4096, 5000])
+@pytest.mark.parametrize("box", [None, (-1.0, 1.0)])
+def test_adaseg_update_kernel(n, box):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    z = jax.random.normal(ks[0], (n,))
+    m = jax.random.normal(ks[1], (n,))
+    g = jax.random.normal(ks[2], (n,))
+    lo, hi = box if box else (None, None)
+    z_t, z_tl, part = adaseg_update(z, m, g, 0.3, lo=lo, hi=hi,
+                                    block=1024, interpret=True)
+    rz, rtl, rpart = adaseg_update_ref(z, m, g, 0.3, lo=lo, hi=hi)
+    np.testing.assert_allclose(z_t, rz, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(z_tl, rtl, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(part), float(rpart), rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adaseg_update_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    z = jax.random.normal(ks[0], (512,), dtype)
+    m = jax.random.normal(ks[1], (512,), dtype)
+    g = jax.random.normal(ks[2], (512,), dtype)
+    z_t, z_tl, part = adaseg_update(z, m, g, 0.1, block=128, interpret=True)
+    rz, rtl, rpart = adaseg_update_ref(z, m, g, jnp.asarray(0.1, dtype))
+    np.testing.assert_allclose(
+        z_t.astype(np.float32), rz.astype(np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("l,chunk", [(64, 8), (64, 16), (128, 64), (96, 32)])
+@pytest.mark.parametrize("h,p,n", [(2, 16, 32), (4, 32, 16)])
+def test_ssd_scan_kernel(l, chunk, h, p, n):
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (2, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    b = jax.random.normal(ks[3], (2, l, n))
+    c = jax.random.normal(ks[4], (2, l, n))
+    out = ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=True)
+    ref = ssd_ref(x, dt, a, b, c)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(6), 5)
+    x = jax.random.normal(ks[0], (1, 128, 2, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 128, 2)))
+    a = -jnp.exp(jax.random.normal(ks[2], (2,)))
+    b = jax.random.normal(ks[3], (1, 128, 8))
+    c = jax.random.normal(ks[4], (1, 128, 8))
+    outs = [ssd_scan(x, dt, a, b, c, chunk=ch, interpret=True)
+            for ch in (8, 16, 32, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced config, one forward + one LocalAdaSEG
+train step on CPU; asserts output shapes and absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.core.adaseg import AdaSEGConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import (
+    TrainPlan,
+    init_train_state,
+    make_batches,
+    make_round_fn,
+)
+from repro.models import forward, init_model, loss_fn
+from repro.models.transformer import encode
+
+ARCHS = list_archs()
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.encoder_seq:
+        batch["frontend"] = 0.1 * jax.random.normal(
+            rng, (B, cfg.encoder_seq, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    assert cfg.num_layers >= 12
+    assert cfg.vocab_size > 1000
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = smoke_config(arch)
+    params, specs = init_model(jax.random.PRNGKey(0), cfg)
+    assert jax.tree.structure(params) == jax.tree.structure(specs)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    enc = None
+    if cfg.is_encoder_decoder:
+        enc = encode(params, cfg, batch["frontend"])
+        assert enc.shape == (B, cfg.encoder_seq, cfg.d_model)
+    elif cfg.cross_attn_every:
+        enc = batch["frontend"]
+    logits, aux = forward(params, cfg, batch["tokens"], enc_states=enc)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One LocalAdaSEG round (2 workers × 2 local EG steps) on CPU."""
+    cfg = smoke_config(arch)
+    mesh = make_test_mesh(1, 1)
+    plan = TrainPlan(
+        cfg=cfg,
+        adaseg=AdaSEGConfig(g0=5.0, diameter=1.0, alpha=1.0, k=2,
+                            average_output=False),
+        worker_mode="paper",
+        k_local=2,
+        global_batch=2,
+        seq=S,
+    )
+    state = init_train_state(jax.random.PRNGKey(0), plan, mesh)
+    batches = make_batches(jax.random.PRNGKey(1), plan, mesh)
+    round_fn = jax.jit(make_round_fn(plan))
+    new_state, metrics = round_fn(state, batches)
+    assert bool(jnp.all(jnp.isfinite(metrics["loss"])))
+    assert float(new_state.sum_sq.sum()) > 0.0
+    assert int(new_state.t) == 2
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(
+            jax.tree.leaves(new_state.params), jax.tree.leaves(state.params)
+        )
+    )
+    assert moved
+
+
+def test_loss_decreases_qwen2_smoke():
+    """A few hundred LocalAdaSEG steps reduce LM loss on the synthetic
+    Markov-Zipf stream (end-to-end trainability)."""
+    cfg = smoke_config("qwen2-0.5b")
+    mesh = make_test_mesh(1, 1)
+    plan = TrainPlan(
+        cfg=cfg,
+        adaseg=AdaSEGConfig(g0=20.0, diameter=2.0, alpha=1.0, k=5,
+                            average_output=False),
+        worker_mode="paper",
+        k_local=5,
+        global_batch=4,
+        seq=32,
+    )
+    state = init_train_state(jax.random.PRNGKey(0), plan, mesh)
+    round_fn = jax.jit(make_round_fn(plan))
+    losses = []
+    for r in range(12):
+        batches = make_batches(jax.random.PRNGKey(100 + r), plan, mesh)
+        state, metrics = round_fn(state, batches)
+        losses.append(float(metrics["loss"].mean()))
+    assert losses[-1] < losses[0] - 0.3, losses

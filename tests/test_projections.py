@@ -1,0 +1,80 @@
+"""Hypothesis property tests for the projection operators (Π_Z invariants)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import projections
+
+_vec = hnp.arrays(
+    np.float32,
+    st.integers(2, 16),
+    elements=st.floats(-10, 10, width=32, allow_nan=False),
+)
+
+
+@given(_vec)
+@settings(max_examples=50, deadline=None)
+def test_box_idempotent(v):
+    proj = projections.box(-1.0, 1.0)
+    once = proj(jnp.asarray(v))
+    twice = proj(once)
+    np.testing.assert_allclose(once, twice)
+    assert jnp.all(jnp.abs(once) <= 1.0)
+
+
+@given(_vec, _vec)
+@settings(max_examples=50, deadline=None)
+def test_box_nonexpansive(u, v):
+    n = min(len(u), len(v))
+    u, v = jnp.asarray(u[:n]), jnp.asarray(v[:n])
+    proj = projections.box(-1.0, 1.0)
+    d_before = float(jnp.linalg.norm(u - v))
+    d_after = float(jnp.linalg.norm(proj(u) - proj(v)))
+    assert d_after <= d_before + 1e-5
+
+
+@given(_vec)
+@settings(max_examples=50, deadline=None)
+def test_l2_ball_radius(v):
+    proj = projections.l2_ball(2.5)
+    out = proj(jnp.asarray(v))
+    assert float(jnp.linalg.norm(out)) <= 2.5 + 1e-4
+
+
+@given(_vec)
+@settings(max_examples=50, deadline=None)
+def test_l2_ball_identity_inside(v):
+    v = jnp.asarray(v)
+    r = float(jnp.linalg.norm(v)) + 1.0
+    out = projections.l2_ball(r)(v)
+    np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-6)
+
+
+@given(_vec)
+@settings(max_examples=50, deadline=None)
+def test_simplex_output_valid(v):
+    out = projections.simplex()(jnp.asarray(v))
+    assert jnp.all(out >= -1e-6)
+    np.testing.assert_allclose(float(jnp.sum(out)), 1.0, rtol=1e-4)
+
+
+@given(_vec)
+@settings(max_examples=30, deadline=None)
+def test_simplex_idempotent(v):
+    proj = projections.simplex()
+    once = proj(jnp.asarray(v))
+    twice = proj(once)
+    np.testing.assert_allclose(once, twice, rtol=1e-4, atol=1e-6)
+
+
+def test_product_projection():
+    proj = projections.product(
+        projections.box(-1.0, 1.0), projections.simplex()
+    )
+    x = jnp.array([3.0, -2.0])
+    y = jnp.array([0.5, 0.5, 3.0])
+    px, py = proj((x, y))
+    assert jnp.all(jnp.abs(px) <= 1.0)
+    np.testing.assert_allclose(float(py.sum()), 1.0, rtol=1e-5)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants beyond projections."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import AdaSEGConfig, sync_weighted_stacked
+from repro.core.adaseg import eta_of
+from repro.roofline.hlo_parse import _decode_groups, classify_axes
+
+_pos_floats = st.floats(0.01, 100.0, width=32, allow_nan=False,
+                        allow_subnormal=False)
+
+
+@given(st.lists(st.floats(0.01, 100.0), min_size=2, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_sync_is_convex_combination(inv_eta):
+    """The synced anchor lies in the convex hull of worker anchors —
+    componentwise between min and max — for ANY positive weights."""
+    inv_eta = np.asarray(inv_eta, np.float32)
+    m = len(inv_eta)
+    z = {"w": jnp.asarray(np.random.RandomState(0).randn(m, 5), jnp.float32)}
+    out = sync_weighted_stacked(z, jnp.asarray(inv_eta))
+    lo = jnp.min(z["w"], axis=0)
+    hi = jnp.max(z["w"], axis=0)
+    assert bool(jnp.all(out["w"][0] >= lo - 1e-5))
+    assert bool(jnp.all(out["w"][0] <= hi + 1e-5))
+
+
+@given(hnp.arrays(np.float32, st.integers(1, 20),
+                  elements=st.floats(0, 1000, width=32, allow_nan=False)))
+@settings(max_examples=50, deadline=None)
+def test_eta_antitone_in_accumulator(z_sqs):
+    """η is antitone in Σ(Z_τ)² for any nonnegative increment sequence."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=3.0, alpha=1.0, k=1)
+    acc = np.concatenate([[0.0], np.cumsum(z_sqs)])
+    etas = [float(eta_of(cfg, jnp.float32(a))) for a in acc]
+    assert all(a >= b - 1e-9 for a, b in zip(etas, etas[1:]))
+    assert etas[0] == cfg.diameter * cfg.alpha / cfg.g0
+
+
+@given(st.floats(0.01, 100.0), st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_eta_scale_covariance(d, alpha):
+    """η scales linearly in D·α (the theory's D-dependence)."""
+    cfg1 = AdaSEGConfig(g0=1.0, diameter=d, alpha=alpha, k=1)
+    cfg2 = AdaSEGConfig(g0=1.0, diameter=2 * d, alpha=alpha, k=1)
+    s = jnp.float32(3.7)
+    np.testing.assert_allclose(
+        2 * float(eta_of(cfg1, s)), float(eta_of(cfg2, s)), rtol=1e-6
+    )
+
+
+# --- HLO parser properties ---------------------------------------------------
+
+def test_iota_replica_groups_decode():
+    assert _decode_groups("replica_groups=[2,2]<=[4]") == [[0, 1], [2, 3]]
+    assert _decode_groups("replica_groups=[2,2]<=[2,2]T(1,0)") == [
+        [0, 2], [1, 3]
+    ]
+    assert _decode_groups("replica_groups={{0,1},{2,3}}") == [[0, 1], [2, 3]]
+
+
+@given(st.sampled_from([(2, 2), (4, 2), (2, 4), (4, 4)]))
+@settings(max_examples=12, deadline=None)
+def test_iota_decode_partitions_devices(shape):
+    g, s = shape
+    groups = _decode_groups(f"replica_groups=[{g},{s}]<=[{g*s}]")
+    flat = sorted(d for grp in groups for d in grp)
+    assert flat == list(range(g * s))        # exact partition
+    assert all(len(grp) == s for grp in groups)
+
+
+def test_classify_axes_abstract():
+    """Axis classification against a mesh with known device layout."""
+    import dataclasses
+
+    class FakeDev:
+        def __init__(self, i):
+            self.id = i
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 2}
+        devices = np.array([[FakeDev(0), FakeDev(1)],
+                            [FakeDev(2), FakeDev(3)]])
+
+    mesh = FakeMesh()
+    assert classify_axes([[0, 1], [2, 3]], mesh) == "model"
+    assert classify_axes([[0, 2], [1, 3]], mesh) == "data"
+    assert classify_axes([[0, 1, 2, 3]], mesh) == "data,model"

@@ -1,0 +1,42 @@
+"""Roofline HLO-parser tests on synthetic HLO text."""
+from repro.roofline.analysis import collective_stats, model_flops
+
+HLO = """
+HloModule jit_round_fn
+
+fused_computation {
+  ...
+}
+
+ENTRY main {
+  %p0 = bf16[16,4096]{1,0} parameter(0)
+  %ag = bf16[256,4096]{1,0} all-gather(bf16[16,4096]{1,0} %p0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %ars = f32[2048]{0} all-reduce-start(f32[2048]{0} %y), to_apply=%add
+  %ard = f32[2048]{0} all-reduce-done(f32[2048]{0} %ars)
+  %rs = bf16[8,128]{1,0} reduce-scatter(bf16[64,128]{1,0} %z), dimensions={0}
+  %a2a = f32[4,256]{1,0} all-to-all(f32[4,256]{1,0} %w), dimensions={0}
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %v), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_bytes_counted():
+    stats = collective_stats(HLO)
+    by = stats["bytes_by_kind"]
+    assert by["all-gather"] == 256 * 4096 * 2
+    # plain all-reduce + async start counted once each
+    assert by["all-reduce"] == 1024 * 4 + 2048 * 4
+    assert by["reduce-scatter"] == 8 * 128 * 2
+    assert by["all-to-all"] == 4 * 256 * 4
+    assert by["collective-permute"] == 2 * 4
+    assert stats["count_by_kind"]["all-reduce"] == 2
+
+
+def test_done_not_double_counted():
+    stats = collective_stats(HLO)
+    assert stats["count_by_kind"]["all-reduce"] == 2  # ar + ars, not ard
+
+
+def test_model_flops():
+    assert model_flops(1e9, 1e6) == 6e15

@@ -1,0 +1,57 @@
+"""Unit tests for PartitionSpec utilities and the distributed sync math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from jax.sharding import AbstractMesh
+
+from repro.sharding.specs import fsdp_spec, sanitize_spec, stack_spec
+
+
+def _mesh22():
+    # device-free stand-in: spec logic reads only shape/axis names
+    return AbstractMesh((2, 2), ("data", "model"))
+
+
+def test_stack_spec():
+    assert stack_spec(P(None, "model"), ("pod", "data")) == P(
+        ("pod", "data"), None, "model"
+    )
+    assert stack_spec(P("model"), ("data",)) == P("data", "model")
+    assert stack_spec(P(), ()) == P(None)
+
+
+def test_sanitize_drops_nondivisible():
+    mesh = _mesh22()
+    # 7 not divisible by model=2 → dropped
+    assert sanitize_spec(P(None, "model"), (4, 7), mesh) == P(None, None)
+    assert sanitize_spec(P(None, "model"), (4, 8), mesh) == P(None, "model")
+    # tuple axes partially kept
+    got = sanitize_spec(P(("data", "model"), None), (2, 8), mesh)
+    assert got == P("data", None)
+
+
+def test_fsdp_spec_picks_first_free_divisible_dim():
+    mesh = _mesh22()
+    assert fsdp_spec(P(None, "model"), (4, 8), mesh) == P("data", "model")
+    # dim0 occupied → dim1
+    assert fsdp_spec(P("model", None), (4, 8), mesh) == P("model", "data")
+    # 1-D leaves untouched
+    assert fsdp_spec(P(None), (4,), mesh) == P(None)
+    # nothing divisible → unchanged
+    assert fsdp_spec(P(None, "model"), (3, 8), mesh) == P(None, "model")
+
+
+def test_weighted_sync_math_matches_serial():
+    """The stacked weighted average equals the explicit PS-model average."""
+    from repro.core import sync_weighted_stacked
+
+    m, d = 4, 6
+    z = {"w": jnp.arange(m * d, dtype=jnp.float32).reshape(m, d)}
+    inv_eta = jnp.array([0.5, 1.0, 1.5, 2.0])
+    w = np.asarray(inv_eta / inv_eta.sum())
+    expect = (w[:, None] * np.asarray(z["w"])).sum(0)
+    got = sync_weighted_stacked(z, inv_eta)
+    for i in range(m):
+        np.testing.assert_allclose(got["w"][i], expect, rtol=1e-6)
