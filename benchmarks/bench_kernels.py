@@ -7,18 +7,77 @@ numbers are the analytic HBM-traffic / FLOP models reported alongside:
 * adaseg_update: fused = 3 reads + 2 writes of the parameter vector vs
   ~9 passes unfused → traffic ratio 5/9.
 * flash attention: O(S·W) compute for sliding windows vs O(S²) dense.
+
+The ``step[...]`` rows time the full optimizer step through both step
+backends (``core.adaseg.local_step``) on a ≥1M-parameter pytree — the
+comparison the tentpole cares about: reference tree ops vs the fused
+explore/anchor kernel path.
 """
 from __future__ import annotations
+
+import functools
+import statistics
+import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import AdaSEGConfig, init, local_step, projections
+from repro.core.types import MinimaxProblem
 from repro.kernels.adaseg_update.ops import adaseg_tree_update
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan.ref import ssd_ref
 from repro.models.ssm import ssd_chunked
 
 from .common import emit, timed
+
+
+def bench_step_backends(n: int = 1 << 20) -> None:
+    """Fused Pallas step vs reference tree-op step, identical problem.
+
+    The pytree is {x: (n,), y: (n/4,)} → 1.25M params at the default n;
+    the oracle is a cheap linear field so the timing isolates the update
+    machinery (projection, double update, (Z_t)²/‖G‖² statistics).
+    """
+
+    def pinit(rng):
+        r1, r2 = jax.random.split(rng)
+        return {"x": 0.1 * jax.random.normal(r1, (n,)),
+                "y": 0.1 * jax.random.normal(r2, (n // 4,))}
+
+    def sample(rng):
+        return jax.random.normal(rng, (2,))
+
+    def oracle(z, xi):
+        return jax.tree.map(lambda v: 0.3 * v + xi[0] * 1e-3, z)
+
+    prob = MinimaxProblem(init=pinit, sample=sample, oracle=oracle,
+                          project=projections.box(-1.0, 1.0), name="bench")
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=1)
+    state = init(prob, cfg, jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    params = sum(v.size for v in jax.tree.leaves(state.z_tilde))
+
+    steps = {b: jax.jit(functools.partial(local_step, prob, cfg, backend=b))
+             for b in ("reference", "fused")}
+    for fn in steps.values():
+        jax.block_until_ready(fn(state, rng))       # compile
+
+    # Interleaved medians: CPU wall-time is noisy, alternate the backends.
+    times = {b: [] for b in steps}
+    for _ in range(6):
+        for b, fn in steps.items():
+            t0 = time.perf_counter()
+            for _ in range(5):
+                out = fn(state, rng)
+            jax.block_until_ready(out)
+            times[b].append((time.perf_counter() - t0) / 5 * 1e6)
+    med = {b: statistics.median(ts) for b, ts in times.items()}
+    emit(f"step[reference,params={params}]", med["reference"],
+         "backend=tree_ops;hbm_passes~9")
+    emit(f"step[fused,params={params}]", med["fused"],
+         f"backend=pallas_explore_anchor;hbm_passes~7;"
+         f"speedup_vs_reference={med['reference'] / med['fused']:.2f}x")
 
 
 def run() -> None:
@@ -35,6 +94,9 @@ def run() -> None:
     emit("kernel[adaseg_update_ref,n=1M]", us,
          f"hbm_bytes_fused={bytes_fused};unfused={bytes_unfused};"
          f"traffic_ratio={bytes_fused/bytes_unfused:.2f}")
+
+    # --- full optimizer step: fused Pallas backend vs reference tree ops ---
+    bench_step_backends()
 
     # --- attention: dense vs sliding window FLOPs --------------------------
     b, h, s, d, w = 1, 4, 1024, 64, 128

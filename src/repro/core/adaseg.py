@@ -16,8 +16,24 @@ Per-worker state and the three ingredients of the method:
 The sync is abstracted as ``sync_fn(z_tilde, inv_eta) -> z̃°`` so that the same
 step code runs in three harnesses:
   * serial/vmap over a leading worker axis (CPU experiments, tests),
-  * ``shard_map`` with ``lax.psum`` over mesh worker axes (production),
+  * ``shard_map`` with ``lax.psum`` over mesh worker axes (production —
+    see ``launch.sharded.run_local_adaseg_sharded``),
   * single worker (degenerates to the serial AdaSEG of Bach & Levy '19).
+
+Step backends
+-------------
+The inner extragradient update is pluggable (``backend=`` on
+:func:`local_step` / :func:`run_local_adaseg`):
+
+* ``"reference"`` — naive pytree ops (this module): ~9 HBM passes over the
+  parameter vector per step; always available, always correct.
+* ``"fused"``     — the Pallas kernels in ``kernels.adaseg_update``: the
+  η computation, projection, both updates and the (Z_t)²/‖G‖² reductions
+  fuse into an exploration pass + an anchor pass (interpret mode off-TPU).
+  Selected whenever the problem's projection carries a static spec
+  (``projections.spec_of`` — identity/box/l2-ball, which covers the
+  paper's BilinearGame and WGAN problems); opaque projections silently
+  fall back to the reference math so semantics never fork.
 """
 from __future__ import annotations
 
@@ -28,6 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import projections
 from .tree import (
     tree_axpy,
     tree_norm_sq,
@@ -95,26 +112,58 @@ def local_step(
     rng,
     *,
     enabled=None,
+    backend: str = "reference",
 ) -> tuple[AdaSEGState, StepAux]:
     """One extragradient step from the current anchor ``state.z_tilde``.
 
     ``enabled`` (bool scalar, optional) masks the update — used by the
     asynchronous variant where workers run heterogeneous K_m local steps per
     round (Appendix E.1): disabled workers keep their state unchanged.
+
+    ``backend`` selects the update implementation (see module docstring):
+    ``"reference"`` runs naive tree ops; ``"fused"`` routes through the
+    Pallas extragradient kernels when ``problem.project`` carries a static
+    projection spec, and falls back to the reference math otherwise.
     """
+    if backend not in ("reference", "fused"):
+        raise ValueError(f"unknown step backend {backend!r}")
+    spec = projections.spec_of(problem.project) if backend == "fused" else None
+
     r1, r2 = jax.random.split(rng)
     eta = eta_of(cfg, state.sum_sq)
     z_star = state.z_tilde
-
     m_t = problem.oracle(z_star, draw(problem, r1, state.worker_id))  # M_t
-    z_t = problem.project(tree_axpy(-eta, m_t, z_star))
-    g_t = problem.oracle(z_t, draw(problem, r2, state.worker_id))      # g_t
-    z_tilde_new = problem.project(tree_axpy(-eta, g_t, z_star))
 
-    z_sq = (
-        tree_norm_sq(tree_sub(z_t, z_star)) + tree_norm_sq(tree_sub(z_t, z_tilde_new))
-    ) / (5.0 * eta ** 2)
-    grad_norm_sq = tree_norm_sq(g_t) + tree_norm_sq(m_t)
+    if spec is not None:
+        # Fused path: η recomputed in-kernel from Σ(Z_τ)², projection and
+        # the (Z_t)²/‖G‖² reductions fused into the two update passes.
+        from ..kernels.adaseg_update.ops import (
+            adaseg_tree_anchor,
+            adaseg_tree_explore,
+        )
+
+        d_alpha = cfg.diameter * cfg.alpha
+        z_t, m_sq = adaseg_tree_explore(
+            z_star, m_t, sum_sq=state.sum_sq, g0=cfg.g0, d_alpha=d_alpha,
+            proj=spec,
+        )
+        g_t = problem.oracle(z_t, draw(problem, r2, state.worker_id))  # g_t
+        z_tilde_new, stat, g_sq = adaseg_tree_anchor(
+            z_star, z_t, g_t, sum_sq=state.sum_sq, g0=cfg.g0,
+            d_alpha=d_alpha, proj=spec,
+        )
+        z_sq = stat / (5.0 * eta ** 2)
+        grad_norm_sq = g_sq + m_sq
+    else:
+        z_t = problem.project(tree_axpy(-eta, m_t, z_star))
+        g_t = problem.oracle(z_t, draw(problem, r2, state.worker_id))  # g_t
+        z_tilde_new = problem.project(tree_axpy(-eta, g_t, z_star))
+
+        z_sq = (
+            tree_norm_sq(tree_sub(z_t, z_star))
+            + tree_norm_sq(tree_sub(z_t, z_tilde_new))
+        ) / (5.0 * eta ** 2)
+        grad_norm_sq = tree_norm_sq(g_t) + tree_norm_sq(m_t)
 
     t_new = state.t + 1
     # Incremental uniform mean of the exploration iterates z_t (Line 14).
@@ -202,12 +251,15 @@ def run_local_adaseg(
     rng,
     local_steps: jax.Array | None = None,
     collect_aux: bool = True,
+    backend: str = "reference",
 ):
     """Run LocalAdaSEG with M stacked workers for R rounds of K local steps.
 
     ``local_steps`` (int array of shape (M,), optional) gives heterogeneous
     per-worker step counts K_m for the asynchronous variant; by default every
-    worker runs cfg.k steps per round. Returns ``(z_bar, history)`` where
+    worker runs cfg.k steps per round. ``backend`` selects the step
+    implementation (``"reference"`` tree ops or the ``"fused"`` Pallas
+    kernels — see module docstring). Returns ``(z_bar, history)`` where
     z_bar is the global output iterate (Line 14) and history holds per-step
     diagnostics stacked as (R, K, M).
     """
@@ -226,7 +278,8 @@ def run_local_adaseg(
     )
 
     vstep = jax.vmap(
-        lambda st, r, en: local_step(problem, cfg, st, r, enabled=en)
+        lambda st, r, en: local_step(problem, cfg, st, r, enabled=en,
+                                     backend=backend)
     )
 
     def round_fn(state: AdaSEGState, rng_round):

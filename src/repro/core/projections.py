@@ -12,14 +12,31 @@ import jax
 import jax.numpy as jnp
 
 
+def spec_of(proj_fn):
+    """Static description of a projection, or None when opaque.
+
+    The fused Pallas step backend (``core.adaseg.local_step(backend="fused")``)
+    uses this to fuse the projection into the update kernel: ``("identity",)``,
+    ``("box", lo, hi)`` and ``("l2", radius)`` are recognized; projections
+    without a spec (simplex, product combinators, hand-written callables)
+    make the fused backend fall back to reference tree-op semantics.
+    """
+    return getattr(proj_fn, "spec", None)
+
+
 def identity():
-    return lambda z: z
+    def proj(z):
+        return z
+
+    proj.spec = ("identity",)
+    return proj
 
 
 def box(lo: float = -1.0, hi: float = 1.0):
     def proj(z):
         return jax.tree.map(lambda v: jnp.clip(v, lo, hi), z)
 
+    proj.spec = ("box", float(lo), float(hi))
     return proj
 
 
@@ -36,6 +53,7 @@ def l2_ball(radius: float = 1.0):
         scale = jnp.minimum(1.0, radius / jnp.maximum(n, 1e-30))
         return tree_scale(scale, z)
 
+    proj.spec = ("l2", float(radius))
     return proj
 
 

@@ -61,12 +61,14 @@ def from_loss(loss_fn, init, sample, project=None, name="problem"):
     """
     import jax
 
+    from . import projections
+
     def oracle(z, xi):
         gx, gy = jax.grad(lambda zz: loss_fn(zz, xi))(z)
         return (gx, jax.tree.map(lambda v: -v, gy))
 
     if project is None:
-        project = lambda z: z
+        project = projections.identity()
     return MinimaxProblem(
         init=init, sample=sample, oracle=oracle, project=project, name=name
     )

@@ -2,8 +2,11 @@
 
 * ``flash_attention`` — blockwise online-softmax attention (causal / sliding
   window / softcap / GQA), VMEM-tiled via BlockSpec.
-* ``adaseg_update``  — fused LocalAdaSEG extragradient double-update +
-  (Z_t)² reduction, one HBM pass instead of ~9.
+* ``adaseg_update``  — fused LocalAdaSEG extragradient update kernels
+  (explore/anchor/one-shot): η-from-Σ(Z_τ)² computed in-register, box clip
+  or two-pass l2-ball projection, and the (Z_t)²/‖G‖² reductions fused into
+  the update passes. This is the production step path — selected by
+  ``core.adaseg.local_step(backend="fused")``.
 * ``ssd_scan``       — Mamba2 SSD chunked scan (intra-chunk MXU matmuls +
   inter-chunk recurrence over summary states).
 

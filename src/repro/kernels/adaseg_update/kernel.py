@@ -1,15 +1,39 @@
-"""Fused LocalAdaSEG extragradient-update Pallas kernel.
+"""Fused LocalAdaSEG extragradient-update Pallas kernels.
 
 The optimizer hot loop is memory-bound: the naive implementation reads
 z*, M_t, g_t and writes z_t, z̃ plus re-reads both outputs to form the
 adaptive-learning-rate statistic (Z_t)² — ≈9 HBM passes over the parameter
-vector. This kernel fuses projection, both updates and the (Z_t)² partial
-reduction into a single pass: 3 reads + 2 writes, with the reduction
-accumulated in VMEM — a ~1.8× cut of optimizer-step HBM traffic.
+vector. The kernels here fuse the learning-rate computation, the projection,
+the updates and the (Z_t)² partial reduction so each pass over HBM does all
+the element-wise work at once.
+
+Three per-leaf primitives (composed over pytrees by :mod:`.ops`, and into
+the optimizer step by ``core.adaseg.local_step(backend="fused")``):
+
+* :func:`adaseg_explore` — exploration half-step z_t = Π(z* − η·M_t) with a
+  fused ‖M_t‖² reduction (1 output pass instead of update + norm passes).
+* :func:`adaseg_anchor`  — anchor half-step z̃ = Π(z* − η·g_t) that also
+  accumulates the (Z_t)² statistic ‖z_t − z*‖² + ‖z_t − z̃‖² and ‖g_t‖²
+  in the same pass.
+* :func:`adaseg_update`  — the one-shot double update (both M_t and g_t
+  known), used by benchmarks and parity tests.
+
+η fusion: instead of materializing η on the host, each kernel can take the
+running AdaGrad accumulator Σ(Z_τ)² as its SMEM scalar and compute
+η = D·α/√(G₀² + Σ(Z_τ)²) in-register (``sum_sq=...`` instead of ``eta=...``).
+
+Projections: the box clip Π_[lo,hi] fuses into every kernel directly. The
+l2-ball projection needs the *global* norm of the candidate point, so it is
+a two-pass scheme: pass 1 writes the raw (unprojected) update and reduces
+per-block partial squared norms (``want_norm=True`` / :func:`adaseg_raw`),
+the caller folds the partials into the scale min(1, r/‖·‖), and pass 2
+(:func:`adaseg_finish`) applies the scale while accumulating (Z_t)².
 
 Layout: parameters are flattened and tiled as (num_blocks, block); grid is
-1-D over blocks; η arrives as a (1, 1) scalar tile; per-block (Z_t)²
-partials land in a (num_blocks,) output reduced by the caller.
+1-D over blocks; scalars arrive as SMEM tiles; per-block partial reductions
+land in (num_blocks, ·) SMEM outputs reduced by the caller. Partial sums
+mask the zero-padding of the last block so a box with lo > 0 cannot leak
+clip(0) into the statistic.
 """
 from __future__ import annotations
 
@@ -21,12 +45,106 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _update_kernel(eta_ref, z_ref, m_ref, g_ref, zt_ref, ztl_ref, acc_ref,
-                   *, lo, hi):
-    eta = eta_ref[0, 0]
+def _resolve_eta(sched_ref, *, fuse_eta, g0_sq, d_alpha):
+    """η from the SMEM schedule scalar: either η itself, or the AdaGrad
+    accumulator Σ(Z_τ)² with η = D·α/√(G₀² + Σ) computed in-register."""
+    s = sched_ref[0, 0]
+    if fuse_eta:
+        return d_alpha / jnp.sqrt(g0_sq + s)
+    return s
+
+
+def _pad_mask(n, block):
+    """(1, block) validity mask for the current grid block (pad rows are
+    zero-filled; only the statistic reductions need masking)."""
+    i = pl.program_id(0)
+    idx = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    return idx < n
+
+
+def _sched_arg(eta, sum_sq):
+    """(SMEM scalar, fuse_eta flag) from the mutually-exclusive η inputs."""
+    if (eta is None) == (sum_sq is None):
+        raise ValueError("pass exactly one of eta= or sum_sq=")
+    if sum_sq is not None:
+        return jnp.asarray(sum_sq, jnp.float32).reshape(1, 1), True
+    return jnp.asarray(eta, jnp.float32).reshape(1, 1), False
+
+
+def _tile(x, block):
+    (n,) = x.shape
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x.reshape((n + pad) // block, block)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies.
+# ---------------------------------------------------------------------------
+
+def _explore_kernel(sched_ref, z_ref, m_ref, out_ref, acc_ref, *,
+                    lo, hi, fuse_eta, g0_sq, d_alpha, want_norm):
+    eta = _resolve_eta(sched_ref, fuse_eta=fuse_eta, g0_sq=g0_sq,
+                       d_alpha=d_alpha)
     z = z_ref[...].astype(jnp.float32)                 # update math in f32
+    m = m_ref[...].astype(jnp.float32)
+    out = z - eta * m
+    if lo is not None:
+        out = jnp.clip(out, lo, hi)
+    out_ref[...] = out.astype(out_ref.dtype)
+    # Raw/l2 pass 1: partial ‖out‖² (pad contributes exact zeros).
+    acc_ref[0, 0] = jnp.sum(out * out) if want_norm else jnp.float32(0.0)
+    acc_ref[0, 1] = jnp.sum(m * m)                     # fused ‖M_t‖² partial
+
+
+def _anchor_kernel(sched_ref, z_ref, zt_ref, g_ref, ztl_ref, acc_ref, *,
+                   lo, hi, fuse_eta, g0_sq, d_alpha, n, block):
+    eta = _resolve_eta(sched_ref, fuse_eta=fuse_eta, g0_sq=g0_sq,
+                       d_alpha=d_alpha)
+    z = z_ref[...].astype(jnp.float32)
+    zt = zt_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ztl = z - eta * g
+    if lo is not None:
+        ztl = jnp.clip(ztl, lo, hi)
+    ztl_ref[...] = ztl.astype(ztl_ref.dtype)
+    d1 = zt - z
+    d2 = zt - ztl
+    stat = jnp.where(_pad_mask(n, block), d1 * d1 + d2 * d2, 0.0)
+    acc_ref[0, 0] = jnp.sum(stat)
+    acc_ref[0, 1] = jnp.sum(g * g)                     # fused ‖g_t‖² partial
+
+
+def _finish_kernel(scales_ref, z_ref, zt_raw_ref, ztl_raw_ref,
+                   zt_ref, ztl_ref, acc_ref, *, n, block):
+    s_t = scales_ref[0, 0]
+    s_l = scales_ref[0, 1]
+    z = z_ref[...].astype(jnp.float32)
+    zt = s_t * zt_raw_ref[...].astype(jnp.float32)
+    ztl = s_l * ztl_raw_ref[...].astype(jnp.float32)
+    zt_ref[...] = zt.astype(zt_ref.dtype)
+    ztl_ref[...] = ztl.astype(ztl_ref.dtype)
+    d1 = zt - z
+    d2 = zt - ztl
+    stat = jnp.where(_pad_mask(n, block), d1 * d1 + d2 * d2, 0.0)
+    acc_ref[0, 0] = jnp.sum(stat)
+
+
+def _update_kernel(sched_ref, z_ref, m_ref, g_ref, zt_ref, ztl_ref, acc_ref,
+                   *, lo, hi, fuse_eta, g0_sq, d_alpha, raw_norms, n, block):
+    eta = _resolve_eta(sched_ref, fuse_eta=fuse_eta, g0_sq=g0_sq,
+                       d_alpha=d_alpha)
+    z = z_ref[...].astype(jnp.float32)
     z_t = z - eta * m_ref[...].astype(jnp.float32)
     z_tl = z - eta * g_ref[...].astype(jnp.float32)
+    if raw_norms:
+        # l2 pass 1: write raw candidates, reduce their squared norms.
+        zt_ref[...] = z_t.astype(zt_ref.dtype)
+        ztl_ref[...] = z_tl.astype(ztl_ref.dtype)
+        acc_ref[0, 0] = jnp.sum(z_t * z_t)
+        acc_ref[0, 1] = jnp.sum(z_tl * z_tl)
+        return
     if lo is not None:
         z_t = jnp.clip(z_t, lo, hi)
         z_tl = jnp.clip(z_tl, lo, hi)
@@ -34,49 +152,152 @@ def _update_kernel(eta_ref, z_ref, m_ref, g_ref, zt_ref, ztl_ref, acc_ref,
     ztl_ref[...] = z_tl.astype(ztl_ref.dtype)
     d1 = z_t - z
     d2 = z_t - z_tl
-    acc_ref[0, 0] = jnp.sum(d1 * d1 + d2 * d2)
+    stat = jnp.where(_pad_mask(n, block), d1 * d1 + d2 * d2, 0.0)
+    acc_ref[0, 0] = jnp.sum(stat)
+    acc_ref[0, 1] = jnp.float32(0.0)
 
 
-def adaseg_update(
-    z_star, m_t, g_t, eta, *, lo=None, hi=None, block: int = 4096,
-    interpret: bool = False,
-):
-    """Flat 1-D leaf update. Returns (z_t, z_tilde, zsq_partial_sum)."""
+# ---------------------------------------------------------------------------
+# Per-leaf entry points (flat 1-D vectors; pytree composition in ops.py).
+# ---------------------------------------------------------------------------
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM)
+
+
+def _vec_spec(block):
+    return pl.BlockSpec((1, block), lambda i: (i, 0))
+
+
+def _acc_spec(width):
+    return pl.BlockSpec((1, width), lambda i: (i, 0), memory_space=pltpu.SMEM)
+
+
+def adaseg_explore(z_star, m_t, eta=None, *, sum_sq=None, g0=0.0,
+                   d_alpha=1.0, lo=None, hi=None, want_norm=False,
+                   block: int = 4096, interpret: bool = False):
+    """Exploration half-step z_t = Π_box(z* − η·m_t) on a flat leaf.
+
+    Returns ``(z_t, norm_partial, msq_partial)`` — ``norm_partial`` is
+    ‖z_t‖² when ``want_norm`` (the l2 two-pass raw mode; pass ``lo=None``),
+    else 0; ``msq_partial`` is the fused ‖m_t‖² reduction.
+    """
     (n,) = z_star.shape
-    pad = (-n) % block
-    if pad:
-        z_star = jnp.pad(z_star, (0, pad))
-        m_t = jnp.pad(m_t, (0, pad))
-        g_t = jnp.pad(g_t, (0, pad))
-    nb = (n + pad) // block
-    shape2 = (nb, block)
-    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    sched, fuse = _sched_arg(eta, sum_sq)
+    nb = (n + (-n) % block) // block
+    kernel = functools.partial(
+        _explore_kernel, lo=lo, hi=hi, fuse_eta=fuse, g0_sq=g0 ** 2,
+        d_alpha=d_alpha, want_norm=want_norm,
+    )
+    out, acc = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[_scalar_spec(), _vec_spec(block), _vec_spec(block)],
+        out_specs=[_vec_spec(block), _acc_spec(2)],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), z_star.dtype),
+            jax.ShapeDtypeStruct((nb, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sched, _tile(z_star, block), _tile(m_t, block))
+    return out.reshape(-1)[:n], jnp.sum(acc[:, 0]), jnp.sum(acc[:, 1])
 
-    kernel = functools.partial(_update_kernel, lo=lo, hi=hi)
-    z_t, z_tl, partials = pl.pallas_call(
+
+def adaseg_anchor(z_star, z_t, g_t, eta=None, *, sum_sq=None, g0=0.0,
+                  d_alpha=1.0, lo=None, hi=None, block: int = 4096,
+                  interpret: bool = False):
+    """Anchor half-step z̃ = Π_box(z* − η·g_t) given the materialized z_t.
+
+    Returns ``(z_tilde, stat_partial, gsq_partial)`` with
+    ``stat_partial = ‖z_t − z*‖² + ‖z_t − z̃‖²`` (caller divides by 5η²).
+    """
+    (n,) = z_star.shape
+    sched, fuse = _sched_arg(eta, sum_sq)
+    nb = (n + (-n) % block) // block
+    kernel = functools.partial(
+        _anchor_kernel, lo=lo, hi=hi, fuse_eta=fuse, g0_sq=g0 ** 2,
+        d_alpha=d_alpha, n=n, block=block,
+    )
+    ztl, acc = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[_scalar_spec(), _vec_spec(block), _vec_spec(block),
+                  _vec_spec(block)],
+        out_specs=[_vec_spec(block), _acc_spec(2)],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), z_star.dtype),
+            jax.ShapeDtypeStruct((nb, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sched, _tile(z_star, block), _tile(z_t, block), _tile(g_t, block))
+    return ztl.reshape(-1)[:n], jnp.sum(acc[:, 0]), jnp.sum(acc[:, 1])
+
+
+def adaseg_finish(z_star, zt_raw, ztl_raw, scale_t, scale_tl, *,
+                  block: int = 4096, interpret: bool = False):
+    """l2 pass 2: scale raw candidates onto the ball, fuse the (Z_t)² stat.
+
+    Returns ``(z_t, z_tilde, stat_partial)``.
+    """
+    (n,) = z_star.shape
+    nb = (n + (-n) % block) // block
+    scales = jnp.stack([
+        jnp.asarray(scale_t, jnp.float32), jnp.asarray(scale_tl, jnp.float32)
+    ]).reshape(1, 2)
+    kernel = functools.partial(_finish_kernel, n=n, block=block)
+    z_t, z_tl, acc = pl.pallas_call(
         kernel,
         grid=(nb,),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, block), lambda i: (i, 0)),
-            pl.BlockSpec((1, block), lambda i: (i, 0)),
-            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            _vec_spec(block), _vec_spec(block), _vec_spec(block),
         ],
-        out_specs=[
-            pl.BlockSpec((1, block), lambda i: (i, 0)),
-            pl.BlockSpec((1, block), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0), memory_space=pltpu.SMEM),
-        ],
+        out_specs=[_vec_spec(block), _vec_spec(block), _acc_spec(1)],
         out_shape=[
-            jax.ShapeDtypeStruct(shape2, z_star.dtype),
-            jax.ShapeDtypeStruct(shape2, z_star.dtype),
+            jax.ShapeDtypeStruct((nb, block), z_star.dtype),
+            jax.ShapeDtypeStruct((nb, block), z_star.dtype),
             jax.ShapeDtypeStruct((nb, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(eta_arr, z_star.reshape(shape2), m_t.reshape(shape2),
-      g_t.reshape(shape2))
-    return (
-        z_t.reshape(-1)[:n],
-        z_tl.reshape(-1)[:n],
-        jnp.sum(partials),
+    )(scales, _tile(z_star, block), _tile(zt_raw, block),
+      _tile(ztl_raw, block))
+    return z_t.reshape(-1)[:n], z_tl.reshape(-1)[:n], jnp.sum(acc)
+
+
+def adaseg_update(
+    z_star, m_t, g_t, eta=None, *, sum_sq=None, g0=0.0, d_alpha=1.0,
+    lo=None, hi=None, raw_norms: bool = False, block: int = 4096,
+    interpret: bool = False,
+):
+    """One-shot fused EG double update on a flat leaf (both oracles known).
+
+    Default mode returns ``(z_t, z_tilde, zsq_partial_sum)`` with the box
+    clip applied when ``lo``/``hi`` are given. ``raw_norms=True`` is the l2
+    two-pass raw mode: no projection, and the partials are
+    ``(‖z_t‖², ‖z̃‖²)`` for the caller's ball-scale computation.
+    """
+    (n,) = z_star.shape
+    sched, fuse = _sched_arg(eta, sum_sq)
+    nb = (n + (-n) % block) // block
+    kernel = functools.partial(
+        _update_kernel, lo=lo, hi=hi, fuse_eta=fuse, g0_sq=g0 ** 2,
+        d_alpha=d_alpha, raw_norms=raw_norms, n=n, block=block,
     )
+    z_t, z_tl, acc = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[_scalar_spec(), _vec_spec(block), _vec_spec(block),
+                  _vec_spec(block)],
+        out_specs=[_vec_spec(block), _vec_spec(block), _acc_spec(2)],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), z_star.dtype),
+            jax.ShapeDtypeStruct((nb, block), z_star.dtype),
+            jax.ShapeDtypeStruct((nb, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sched, _tile(z_star, block), _tile(m_t, block), _tile(g_t, block))
+    z_t = z_t.reshape(-1)[:n]
+    z_tl = z_tl.reshape(-1)[:n]
+    if raw_norms:
+        return z_t, z_tl, (jnp.sum(acc[:, 0]), jnp.sum(acc[:, 1]))
+    return z_t, z_tl, jnp.sum(acc[:, 0])

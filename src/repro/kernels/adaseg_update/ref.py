@@ -1,17 +1,33 @@
-"""Pure-jnp oracle for the fused LocalAdaSEG extragradient update."""
+"""Pure-jnp oracles for the fused LocalAdaSEG extragradient kernels.
+
+One reference per kernel primitive in :mod:`.kernel`, with identical
+semantics (f32 update math, same partial definitions) so kernel parity
+tests can compare leaf-by-leaf.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def adaseg_update_ref(z_star, m_t, g_t, eta, lo=None, hi=None):
+def _eta_ref(eta, sum_sq, g0, d_alpha):
+    if (eta is None) == (sum_sq is None):
+        raise ValueError("pass exactly one of eta= or sum_sq=")
+    if sum_sq is not None:
+        return d_alpha / jnp.sqrt(g0 ** 2 + jnp.asarray(sum_sq, jnp.float32))
+    return eta
+
+
+def adaseg_update_ref(z_star, m_t, g_t, eta=None, lo=None, hi=None, *,
+                      sum_sq=None, g0=0.0, d_alpha=1.0):
     """Single-leaf fused EG update.
 
     z_t  = Π(z* − η·m_t);  z̃ = Π(z* − η·g_t);
     zsq_partial = ‖z_t − z*‖² + ‖z_t − z̃‖²   (caller divides by 5η²).
 
     Returns (z_t, z_tilde, zsq_partial). Π is the box clip when lo/hi given.
+    η is computed from the AdaGrad accumulator when ``sum_sq`` is given.
     """
+    eta = _eta_ref(eta, sum_sq, g0, d_alpha)
     z_t = z_star - eta * m_t
     z_tilde = z_star - eta * g_t
     if lo is not None:
@@ -20,3 +36,38 @@ def adaseg_update_ref(z_star, m_t, g_t, eta, lo=None, hi=None):
     d1 = (z_t - z_star).astype(jnp.float32)
     d2 = (z_t - z_tilde).astype(jnp.float32)
     return z_t, z_tilde, jnp.sum(d1 * d1 + d2 * d2)
+
+
+def adaseg_explore_ref(z_star, m_t, eta=None, *, sum_sq=None, g0=0.0,
+                       d_alpha=1.0, lo=None, hi=None, want_norm=False):
+    """Reference for :func:`kernel.adaseg_explore`: (z_t, norm², ‖m‖²)."""
+    eta = _eta_ref(eta, sum_sq, g0, d_alpha)
+    out = z_star - eta * m_t
+    if lo is not None:
+        out = jnp.clip(out, lo, hi)
+    outf = out.astype(jnp.float32)
+    norm = jnp.sum(outf * outf) if want_norm else jnp.float32(0.0)
+    mf = m_t.astype(jnp.float32)
+    return out, norm, jnp.sum(mf * mf)
+
+
+def adaseg_anchor_ref(z_star, z_t, g_t, eta=None, *, sum_sq=None, g0=0.0,
+                      d_alpha=1.0, lo=None, hi=None):
+    """Reference for :func:`kernel.adaseg_anchor`: (z̃, stat, ‖g‖²)."""
+    eta = _eta_ref(eta, sum_sq, g0, d_alpha)
+    ztl = z_star - eta * g_t
+    if lo is not None:
+        ztl = jnp.clip(ztl, lo, hi)
+    d1 = (z_t - z_star).astype(jnp.float32)
+    d2 = (z_t - ztl).astype(jnp.float32)
+    gf = g_t.astype(jnp.float32)
+    return ztl, jnp.sum(d1 * d1 + d2 * d2), jnp.sum(gf * gf)
+
+
+def adaseg_finish_ref(z_star, zt_raw, ztl_raw, scale_t, scale_tl):
+    """Reference for :func:`kernel.adaseg_finish`: (z_t, z̃, stat)."""
+    z_t = (scale_t * zt_raw.astype(jnp.float32)).astype(z_star.dtype)
+    ztl = (scale_tl * ztl_raw.astype(jnp.float32)).astype(z_star.dtype)
+    d1 = (z_t - z_star).astype(jnp.float32)
+    d2 = (z_t - ztl).astype(jnp.float32)
+    return z_t, ztl, jnp.sum(d1 * d1 + d2 * d2)

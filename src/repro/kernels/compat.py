@@ -1,0 +1,20 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+JAX renamed ``pltpu.TPUCompilerParams`` (≤ 0.4.x) to ``pltpu.CompilerParams``
+(0.5+); the seed code was written against the new name and broke on the
+pinned 0.4.37 toolchain. Route every kernel through this helper so the repo
+runs on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(*, dimension_semantics=None, **kwargs):
+    """Build TPU compiler params under whichever name this JAX exposes."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = dimension_semantics
+    return cls(**kwargs)

@@ -1,1 +1,2 @@
-"""Launchers: production mesh, dry-run, train/serve drivers."""
+"""Launchers: production mesh, dry-run, train/serve drivers, and the
+shard_map LocalAdaSEG driver (``sharded.run_local_adaseg_sharded``)."""

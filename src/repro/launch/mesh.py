@@ -8,7 +8,10 @@ import jax
 
 
 def _mesh(shape, axes):
-    from jax.sharding import AxisType
+    try:
+        from jax.sharding import AxisType  # JAX >= 0.5
+    except ImportError:
+        return jax.make_mesh(shape, axes)
 
     return jax.make_mesh(
         shape, axes, axis_types=(AxisType.Auto,) * len(axes)

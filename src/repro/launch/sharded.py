@@ -1,0 +1,119 @@
+"""shard_map production driver for LocalAdaSEG.
+
+The serial driver (``core.adaseg.run_local_adaseg``) stacks M workers on a
+leading axis and vmaps the step — fine for CPU experiments, but every
+worker's parameters live on one device. This driver places one worker (or
+one worker group) per mesh shard with ``shard_map``: each shard runs its K
+local steps independently, and the paper's Parameter-Server round
+(Line 5–8: gather → inverse-stepsize weighted average → broadcast)
+collapses to a single ``lax.psum`` all-reduce of w·z̃ per round via
+``core.adaseg.make_psum_sync`` — the K-amortized communication pattern the
+paper's bounds are about.
+
+RNG derivation is bit-identical to the serial driver, so for a given seed
+``run_local_adaseg_sharded`` reproduces ``run_local_adaseg`` trajectories
+exactly (up to all-reduce summation order) — the parity tests in
+``tests/test_distributed.py`` pin this. The step backend is pluggable here
+exactly as in the serial driver (``backend="reference" | "fused"``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.adaseg import (
+    AdaSEGConfig,
+    eta_of,
+    init,
+    local_step,
+    make_psum_sync,
+)
+from ..core.types import MinimaxProblem
+
+
+def _worker_count(mesh, worker_axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in worker_axes)
+
+
+def run_local_adaseg_sharded(
+    problem: MinimaxProblem,
+    cfg: AdaSEGConfig,
+    *,
+    mesh,
+    worker_axes: tuple[str, ...] = ("data",),
+    rounds: int,
+    rng,
+    backend: str = "reference",
+    collect_aux: bool = False,
+):
+    """Run LocalAdaSEG with one worker per shard of ``worker_axes``.
+
+    Returns ``(z_bar, (state, history))`` exactly like the serial driver:
+    ``z_bar`` is the global output iterate (replicated), ``state`` carries
+    the leading worker axis (sharded over ``worker_axes``), and ``history``
+    holds per-step diagnostics stacked as (R, K, M) when ``collect_aux``.
+    Uniform K per worker (the paper's synchronous Parameter-Server setting);
+    use the serial driver for the heterogeneous-K asynchronous variant.
+    """
+    if not worker_axes:
+        raise ValueError("worker_axes must name at least one mesh axis")
+    m = _worker_count(mesh, worker_axes)
+    k = int(cfg.k)
+
+    # Identical rng derivation to run_local_adaseg: worker inits from
+    # split(rng, M+1)[1:], then per-round step rngs split(round_rng, K·M)
+    # laid out as (K, M, 2) — transposed here to a leading worker axis.
+    init_rngs = jax.random.split(rng, m + 1)
+    rng0, worker_rngs = init_rngs[0], init_rngs[1:]
+    round_rngs = jax.random.split(rng0, rounds)
+    step_rngs = jax.vmap(
+        lambda r: jax.random.split(r, k * m).reshape(k, m, 2)
+    )(round_rngs)                                     # (R, K, M, 2)
+    step_rngs = jnp.transpose(step_rngs, (2, 0, 1, 3))  # (M, R, K, 2)
+    worker_ids = jnp.arange(m, dtype=jnp.int32)
+
+    sync = make_psum_sync(worker_axes)
+    lead = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+
+    def shard_fn(w_rng, s_rngs, wid):
+        # Per-shard shapes: w_rng (1, 2), s_rngs (1, R, K, 2), wid (1,).
+        state = init(problem, cfg, w_rng[0], wid[0])
+
+        def round_fn(st, rngs_round):
+            # Line 5–8: weighted sync at the top of each round, as one
+            # all-reduce of w·z̃ across the worker axes.
+            inv_eta = 1.0 / eta_of(cfg, st.sum_sq)
+            st = st._replace(z_tilde=sync(st.z_tilde, inv_eta))
+
+            def body(s, r):
+                return local_step(problem, cfg, s, r, backend=backend)
+
+            return lax.scan(body, st, rngs_round)
+
+        state, hist = lax.scan(round_fn, state, s_rngs[0])
+
+        # Line 14 global output: uniform average of worker means.
+        z_bar = jax.tree.map(
+            lambda v: lax.psum(v, worker_axes) / m, state.z_bar
+        )
+        state_out = jax.tree.map(lambda v: v[None], state)
+        hist_out = jax.tree.map(lambda v: v[:, :, None], hist)  # (R, K, 1)
+        return z_bar, state_out, hist_out
+
+    spec_w = P(lead)
+    fn = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(spec_w, P(lead, None, None, None), spec_w),
+        # Prefix specs: z_bar replicated (post-psum), state leaves carry the
+        # leading worker axis, history is (R, K, M) with M sharded.
+        out_specs=(P(), spec_w, P(None, None, lead)),
+        check_rep=False,
+    )
+    z_bar, state, hist = jax.jit(fn)(worker_rngs, step_rngs, worker_ids)
+    return z_bar, (state, hist if collect_aux else None)

@@ -20,6 +20,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from ..core import projections
 from ..core.types import MinimaxProblem
 
 PyTree = Any
@@ -128,7 +129,7 @@ def make_wgan_problem(
         init=init,
         sample=sample,
         oracle=oracle,
-        project=lambda z: z,
+        project=projections.identity(),
         name="wgan_gp",
     )
     return WGANProblem(

@@ -58,6 +58,42 @@ def test_psum_sync_equals_stacked_sync():
     assert "PSUM_SYNC_OK" in out
 
 
+def test_sharded_driver_matches_serial_both_backends():
+    """run_local_adaseg_sharded (shard_map + psum sync, 4 workers on a 4×2
+    mesh) must reproduce the serial vmap driver's trajectory for BOTH step
+    backends — reference tree ops and the fused Pallas kernels — within the
+    PR's rtol=1e-5 acceptance bar on the bilinear game."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import AdaSEGConfig, run_local_adaseg
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.sharded import run_local_adaseg_sharded
+        from repro.problems import make_bilinear_game
+
+        game = make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+        cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+        mesh = make_test_mesh(4, 2)
+        for backend in ("reference", "fused"):
+            z_ser, (s_ser, _) = run_local_adaseg(
+                game.problem, cfg, num_workers=4, rounds=4,
+                rng=jax.random.PRNGKey(2), backend=backend)
+            z_sh, (s_sh, hist) = run_local_adaseg_sharded(
+                game.problem, cfg, mesh=mesh, worker_axes=("data",),
+                rounds=4, rng=jax.random.PRNGKey(2), backend=backend,
+                collect_aux=True)
+            for a, b in zip(jax.tree.leaves(z_ser), jax.tree.leaves(z_sh)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(s_ser.sum_sq),
+                                       np.asarray(s_sh.sum_sq), rtol=1e-5)
+            np.testing.assert_array_equal(np.asarray(s_ser.t),
+                                          np.asarray(s_sh.t))
+            assert hist.eta.shape == (4, 5, 4)   # (R, K, M)
+        print("SHARDED_PARITY_OK")
+    """)
+    assert "SHARDED_PARITY_OK" in out
+
+
 def test_train_round_multidevice_matches_singledevice():
     """One LocalAdaSEG round on a 4×2 mesh must equal the same round on one
     device (GSPMD partitioning is semantics-preserving for our round_fn)."""

@@ -86,6 +86,93 @@ def test_adaseg_update_kernel(n, box):
     np.testing.assert_allclose(float(part), float(rpart), rtol=1e-4)
 
 
+def test_adaseg_update_fused_eta_matches_host_eta():
+    """η = D·α/√(G₀²+Σ) computed in-kernel must equal passing η directly."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    n = 1000
+    z, m, g = (jax.random.normal(k, (n,)) for k in ks)
+    g0, d_alpha, sum_sq = 1.5, 2.0, 7.0
+    eta = d_alpha / np.sqrt(g0**2 + sum_sq)
+    z_t, z_tl, part = adaseg_update(
+        z, m, g, sum_sq=jnp.float32(sum_sq), g0=g0, d_alpha=d_alpha,
+        lo=-1.0, hi=1.0, block=256, interpret=True,
+    )
+    rz, rtl, rpart = adaseg_update_ref(z, m, g, eta, lo=-1.0, hi=1.0)
+    np.testing.assert_allclose(z_t, rz, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(z_tl, rtl, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(part), float(rpart), rtol=1e-5)
+
+
+def test_adaseg_update_pad_mask_box_above_zero():
+    """A box with lo > 0 must not leak clip(0) from the zero-padded tail
+    into the (Z_t)² statistic (n chosen to force padding)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    n = 1000  # pad = 24 at block=128
+    z, m, g = (jax.random.normal(k, (n,)) for k in ks)
+    z_t, z_tl, part = adaseg_update(z, m, g, 0.3, lo=0.5, hi=1.0,
+                                    block=128, interpret=True)
+    rz, rtl, rpart = adaseg_update_ref(z, m, g, 0.3, lo=0.5, hi=1.0)
+    np.testing.assert_allclose(z_t, rz, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(part), float(rpart), rtol=1e-5)
+
+
+def test_adaseg_explore_anchor_match_refs():
+    """The step-path primitives (explore + anchor) against their oracles."""
+    from repro.kernels.adaseg_update.kernel import (adaseg_anchor,
+                                                    adaseg_explore)
+    from repro.kernels.adaseg_update.ref import (adaseg_anchor_ref,
+                                                 adaseg_explore_ref)
+
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    n = 777
+    z, m, g = (jax.random.normal(k, (n,)) for k in ks)
+    kw = dict(sum_sq=jnp.float32(3.0), g0=1.0, d_alpha=2.0)
+    z_t, nrm, msq = adaseg_explore(z, m, lo=-1.0, hi=1.0, block=256,
+                                   interpret=True, **kw)
+    rz, rnrm, rmsq = adaseg_explore_ref(z, m, lo=-1.0, hi=1.0, **kw)
+    np.testing.assert_allclose(z_t, rz, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(msq), float(rmsq), rtol=1e-5)
+
+    ztl, stat, gsq = adaseg_anchor(z, z_t, g, lo=-1.0, hi=1.0, block=256,
+                                   interpret=True, **kw)
+    rtl, rstat, rgsq = adaseg_anchor_ref(z, rz, g, lo=-1.0, hi=1.0, **kw)
+    np.testing.assert_allclose(ztl, rtl, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(stat), float(rstat), rtol=1e-5)
+    np.testing.assert_allclose(float(gsq), float(rgsq), rtol=1e-5)
+
+
+def test_adaseg_tree_update_l2_matches_tree_reference():
+    """The kernel two-pass l2 scheme == reference tree-level projection."""
+    from repro.core import projections
+    from repro.core.tree import tree_norm
+    from repro.kernels.adaseg_update.ops import adaseg_tree_update
+
+    ks = jax.random.split(jax.random.PRNGKey(8), 6)
+    tree = {"a": jax.random.normal(ks[0], (300,)),
+            "b": jax.random.normal(ks[1], (4, 50))}
+    m = {"a": jax.random.normal(ks[2], (300,)),
+         "b": jax.random.normal(ks[3], (4, 50))}
+    g = {"a": jax.random.normal(ks[4], (300,)),
+         "b": jax.random.normal(ks[5], (4, 50))}
+    radius, eta = 1.2, 0.4
+    z_t, z_tl, z_sq = adaseg_tree_update(tree, m, g, eta,
+                                         proj=("l2", radius), block=128)
+
+    proj = projections.l2_ball(radius)
+    from repro.core.tree import tree_axpy, tree_norm_sq, tree_sub
+
+    rz_t = proj(tree_axpy(-eta, m, tree))
+    rz_tl = proj(tree_axpy(-eta, g, tree))
+    rz_sq = (tree_norm_sq(tree_sub(rz_t, tree))
+             + tree_norm_sq(tree_sub(rz_t, rz_tl))) / (5.0 * eta**2)
+    for k in tree:
+        np.testing.assert_allclose(z_t[k], rz_t[k], rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(z_tl[k], rz_tl[k], rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(z_sq), float(rz_sq), rtol=1e-4)
+    # the candidates genuinely left the ball, so the scaling pass fired
+    assert float(tree_norm(z_t)) <= radius + 1e-5
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_adaseg_update_dtypes(dtype):
     ks = jax.random.split(jax.random.PRNGKey(4), 3)

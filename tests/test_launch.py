@@ -35,11 +35,11 @@ def test_long_context_skips_documented():
 
 def _abstract_mesh(pods=None, data=2, model=2):
     """Device-free mesh stand-in: shape/axis logic works on 1-device CPU."""
-    from jax.sharding import AbstractMesh
+    from repro.sharding.specs import abstract_mesh
 
     if pods:
-        return AbstractMesh((pods, data, model), ("pod", "data", "model"))
-    return AbstractMesh((data, model), ("data", "model"))
+        return abstract_mesh((pods, data, model), ("pod", "data", "model"))
+    return abstract_mesh((data, model), ("data", "model"))
 
 
 def test_worker_axes_modes():

