@@ -2,18 +2,23 @@
 worker) vs synchronous, and vs single-thread SEGDA with M·K·R iterations.
 
 'Asynch-50' = K_m ∈ {50,45,40,35}; 'Synch-50' = K=50 everywhere.
+
+Runs on the Parameter-Server engine (``repro.ps``): the synchronous variants
+are a ``UniformSchedule``, the asynchronous ones a ``FixedSchedule`` — the
+engine reproduces the old hand-built ``local_steps`` arrays bit-exactly and
+additionally reports the communication volume from its trace.
 """
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AdaSEGConfig, run_local_adaseg
+from repro.core import AdaSEGConfig
 from repro.optim import run_serial, segda
 from repro.problems import make_bilinear_game
+from repro.ps import FixedSchedule, PSConfig, PSEngine, UniformSchedule
 
 from .common import emit
 
@@ -28,23 +33,27 @@ def run(seed: int = 0) -> dict:
     out = {}
 
     variants = {
-        "Synch-50": jnp.array([50, 50, 50, 50]),
-        "Asynch-50": jnp.array([50, 45, 40, 35]),
-        "Synch-100": jnp.array([100, 100, 100, 100]),
-        "Asynch-100": jnp.array([100, 90, 80, 70]),
+        "Synch-50": UniformSchedule(50),
+        "Asynch-50": FixedSchedule((50, 45, 40, 35)),
+        "Synch-100": UniformSchedule(100),
+        "Asynch-100": FixedSchedule((100, 90, 80, 70)),
     }
-    for name, ks in variants.items():
-        cfg = AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=int(ks.max()))
-        t0 = time.perf_counter()
-        zbar, _ = run_local_adaseg(
-            p, cfg, num_workers=M, rounds=R, rng=jax.random.PRNGKey(seed + 1),
-            local_steps=ks,
+    for name, schedule in variants.items():
+        cfg = PSConfig(
+            adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0,
+                                k=schedule.max_steps(M)),
+            num_workers=M, rounds=R, schedule=schedule,
         )
+        engine = PSEngine(p, cfg, rng=jax.random.PRNGKey(seed + 1))
+        t0 = time.perf_counter()
+        zbar = engine.run()
         dt = time.perf_counter() - t0
         res = float(game.residual(zbar))
         out[name] = res
         emit(f"async[{name}]", dt * 1e6,
-             f"residual={res:.4f};rounds={R};steps={int(ks.sum()) * R}")
+             f"residual={res:.4f};rounds={R};"
+             f"steps={engine.trace.total_steps};"
+             f"bytes_up={engine.trace.total_bytes_up:.0f}")
 
     # single-thread SEGDA with M·K·R iterations, batch = 1 (paper E.1 second)
     t0 = time.perf_counter()

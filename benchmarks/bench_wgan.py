@@ -17,37 +17,11 @@ import jax.numpy as jnp
 from repro.core import AdaSEGConfig, run_local_adaseg
 from repro.optim import adam_minimax, asmp, minibatch, run_local, run_serial, ump
 from repro.problems import make_wgan_problem
-from repro.problems.wgan import _mixture_sample
+from repro.ps import heterogeneous_wgan
 
 from .common import emit
 
 M, K, R = 4, 20, 40
-MODES = 8
-
-
-def _dirichlet_mode_logits(rng, alpha: float, workers: int) -> jax.Array:
-    w = jax.random.dirichlet(rng, alpha * jnp.ones(MODES), (workers,))
-    return jnp.log(w + 1e-8)                      # (M, modes)
-
-
-def _heterogeneous(problem, wg, mode_logits):
-    """Per-worker real-data distribution over mixture modes."""
-
-    def sample_worker(rng, worker_id):
-        r_mode, r_noise, r_z, r_eps = jax.random.split(rng, 4)
-        logits = mode_logits[worker_id]
-        k = jax.random.categorical(r_mode, logits, shape=(wg.batch,))
-        theta = 2.0 * jnp.pi * k.astype(jnp.float32) / MODES
-        centers = 2.0 * jnp.stack([jnp.cos(theta), jnp.sin(theta)], -1)
-        real = centers + 0.05 * jax.random.normal(r_noise, (wg.batch, 2))
-        return {
-            "real": real,
-            "z": jax.random.normal(r_z, (wg.batch, wg.latent_dim)),
-            "eps": jax.random.uniform(r_eps, (wg.batch, 1)),
-        }
-
-    return dataclasses.replace(problem, sample_worker=sample_worker,
-                               name=problem.name + "@hetero")
 
 
 def run(seed: int = 0, heterogeneous: bool = False, alpha: float = 0.6):
@@ -55,8 +29,8 @@ def run(seed: int = 0, heterogeneous: bool = False, alpha: float = 0.6):
     p = wg.problem
     tag = f"hetero(a={alpha})" if heterogeneous else "homog"
     if heterogeneous:
-        logits = _dirichlet_mode_logits(jax.random.PRNGKey(seed + 9), alpha, M)
-        p = _heterogeneous(p, wg, logits)
+        p = heterogeneous_wgan(wg, M, jax.random.PRNGKey(seed + 9),
+                               alpha=alpha)
     eval_rng = jax.random.PRNGKey(seed + 5)
     out = {}
 

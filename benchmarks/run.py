@@ -6,6 +6,7 @@ docstring for the figure it reproduces):
     fig3   bench_bilinear_ksweep      K/σ sweep on the bilinear game
     fig4   bench_bilinear_optimizers  optimizer-zoo comparison
     figE1  bench_async                async/heterogeneous-K + SEGDA-MKR
+    extra  bench_ps                   PS runtime: compression/dropout/hetero
     figE1d bench_vt_growth            V_t cumulative gradient growth
     figE2  bench_wgan                 WGAN-GP (homog + Dirichlet hetero)
     extra  bench_robust               robust logistic (beyond paper)
@@ -29,6 +30,7 @@ def main() -> int:
         bench_bilinear_ksweep,
         bench_bilinear_optimizers,
         bench_kernels,
+        bench_ps,
         bench_robust,
         bench_vt_growth,
         bench_wgan,
@@ -38,6 +40,7 @@ def main() -> int:
         ("fig3:bilinear_ksweep", bench_bilinear_ksweep.main),
         ("fig4:bilinear_optimizers", bench_bilinear_optimizers.main),
         ("figE1:async", bench_async.main),
+        ("extra:ps_runtime", bench_ps.main),
         ("figE1d:vt_growth", bench_vt_growth.main),
         ("figE2-E5:wgan", bench_wgan.main),
         ("thm1-2-5:alpha_regimes", bench_alpha_theory.main),

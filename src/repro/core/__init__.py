@@ -10,6 +10,7 @@ from .adaseg import (
     run_local_adaseg,
     sync_state,
     sync_weighted_stacked,
+    weighted_worker_average,
 )
 from .metrics import kkt_residual
 from .types import MinimaxProblem, from_loss
@@ -31,4 +32,5 @@ __all__ = [
     "sync_state",
     "sync_weighted_stacked",
     "tree",
+    "weighted_worker_average",
 ]

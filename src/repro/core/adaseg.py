@@ -237,6 +237,19 @@ def sync_state(state: AdaSEGState, cfg: AdaSEGConfig, sync_fn: SyncFn) -> AdaSEG
     return state._replace(z_tilde=sync_fn(state.z_tilde, inv_eta))
 
 
+def weighted_worker_average(z_stacked: PyTree, counts: jax.Array) -> PyTree:
+    """Line 14 global output: average a leading worker axis with weights
+    ∝ per-worker step counts (uniform over all z_t^m). Shared by the serial
+    driver and the PS engine so both compute the identical expression."""
+    w = counts.astype(jnp.float32) / jnp.sum(counts.astype(jnp.float32))
+
+    def avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(wb * leaf, axis=0)
+
+    return jax.tree.map(avg, z_stacked)
+
+
 # ---------------------------------------------------------------------------
 # Serial multi-worker driver (vmap over workers) — used by the paper-
 # experiment benchmarks and tests. Communication = weighted mean over axis 0.
@@ -305,11 +318,5 @@ def run_local_adaseg(
     # Global output: average worker means weighted by their step counts
     # (uniform over all z_t^m as in Line 14).
     counts = local_steps.astype(jnp.float32) * rounds
-    w = counts / jnp.sum(counts)
-
-    def global_avg(leaf):
-        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
-        return jnp.sum(wb * leaf, axis=0)
-
-    z_bar = jax.tree.map(global_avg, state.z_bar)
+    z_bar = weighted_worker_average(state.z_bar, counts)
     return z_bar, (state, history if collect_aux else None)

@@ -1,2 +1,9 @@
 """Deterministic synthetic data pipelines."""
-from .synthetic import batch_struct, make_batch, sample_tokens
+from .synthetic import (
+    batch_struct,
+    dirichlet_proportions,
+    group_sampling_logits,
+    make_batch,
+    quantile_groups,
+    sample_tokens,
+)

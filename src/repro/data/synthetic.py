@@ -46,6 +46,47 @@ def make_batch(rng, cfg: ArchConfig, batch: int, seq: int) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Dirichlet heterogeneity helpers — the federated/Parameter-Server data layer
+# (``repro.ps.partition``) carves per-worker oracles with these.
+# ---------------------------------------------------------------------------
+
+def dirichlet_proportions(rng, num_workers: int, num_groups: int,
+                          alpha: float) -> jax.Array:
+    """(num_workers, num_groups) rows on the simplex, p_m ~ Dir(alpha·1).
+
+    ``alpha → 0`` gives near-disjoint group ownership (maximal heterogeneity),
+    ``alpha → ∞`` recovers the uniform/homogeneous split — the standard
+    federated-learning skew knob (Hsu et al. '19).
+    """
+    return jax.random.dirichlet(
+        rng, alpha * jnp.ones(num_groups), (num_workers,)
+    )
+
+
+def group_sampling_logits(proportions: jax.Array, group_of: jax.Array,
+                          eps: float = 1e-8) -> jax.Array:
+    """Per-worker categorical logits over items from per-group proportions.
+
+    ``proportions`` is (M, G) Dirichlet rows, ``group_of`` maps each of the
+    n items to its group; the result is (M, n) logits such that worker m
+    draws item i with probability ∝ p_m[group_of[i]] — a soft Dirichlet
+    partition that keeps every per-worker sampler jittable (no ragged index
+    sets)."""
+    p_items = proportions[:, group_of]                     # (M, n)
+    p_items = p_items / jnp.sum(p_items, axis=1, keepdims=True)
+    return jnp.log(p_items + eps)
+
+
+def quantile_groups(values: jax.Array, num_groups: int) -> jax.Array:
+    """Assign each entry of ``values`` to one of ``num_groups`` equal-mass
+    quantile bins (int32). Used to carve feature-space groups for problems
+    without natural labels."""
+    n = values.shape[0]
+    ranks = jnp.argsort(jnp.argsort(values))
+    return (ranks * num_groups // n).astype(jnp.int32)
+
+
 def batch_struct(cfg: ArchConfig, lead: tuple[int, ...], batch: int, seq: int,
                  dtype=None) -> dict:
     """ShapeDtypeStruct batch description with optional leading dims

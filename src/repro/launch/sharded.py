@@ -15,9 +15,21 @@ RNG derivation is bit-identical to the serial driver, so for a given seed
 exactly (up to all-reduce summation order) — the parity tests in
 ``tests/test_distributed.py`` pin this. The step backend is pluggable here
 exactly as in the serial driver (``backend="reference" | "fused"``).
+
+Heterogeneous local work (the asynchronous variant of Appendix E.1) is
+supported via ``local_steps``: per-worker K_m with the same ``enabled``
+masking semantics as the serial driver, parity-pinned against it. The
+Line-7 sync is a hook: pass ``sync_fn(z_tilde, inv_eta)`` — or, for codecs
+that need randomness, ``sync_fn(z_tilde, inv_eta, rng)`` — to replace the
+dense psum with e.g. a compressed-psum from ``repro.ps.compress``
+(``make_compressed_psum_sync``). Sync rngs are derived eagerly on the host
+(fold_in(round_rng, 7), split per worker — the PS engine's derivation):
+with the default non-partitionable threefry, key derivation inside the jit
+that feeds a shard_map would be re-sharded and silently change the stream.
 """
 from __future__ import annotations
 
+import inspect
 import math
 
 import jax
@@ -50,6 +62,8 @@ def run_local_adaseg_sharded(
     rng,
     backend: str = "reference",
     collect_aux: bool = False,
+    local_steps=None,
+    sync_fn=None,
 ):
     """Run LocalAdaSEG with one worker per shard of ``worker_axes``.
 
@@ -57,13 +71,34 @@ def run_local_adaseg_sharded(
     ``z_bar`` is the global output iterate (replicated), ``state`` carries
     the leading worker axis (sharded over ``worker_axes``), and ``history``
     holds per-step diagnostics stacked as (R, K, M) when ``collect_aux``.
-    Uniform K per worker (the paper's synchronous Parameter-Server setting);
-    use the serial driver for the heterogeneous-K asynchronous variant.
+
+    ``local_steps`` (int array of shape (M,), optional) gives heterogeneous
+    per-worker step counts K_m — the asynchronous Parameter-Server variant —
+    with the same masking semantics as the serial driver (workers beyond
+    their K_m hold their state; the Line-14 output weights workers by their
+    realized step counts). ``sync_fn`` overrides the Line-7 all-reduce
+    (default: ``make_psum_sync(worker_axes)``); a 3-argument hook also
+    receives a per-worker, per-round rng for stochastic codecs.
     """
     if not worker_axes:
         raise ValueError("worker_axes must name at least one mesh axis")
     m = _worker_count(mesh, worker_axes)
-    k = int(cfg.k)
+
+    has_ls = local_steps is not None
+    if has_ls:
+        ls = jnp.asarray(local_steps, dtype=jnp.int32)
+        if ls.shape != (m,):
+            raise ValueError(f"local_steps must have shape ({m},), got {ls.shape}")
+        k = int(jnp.max(ls))
+    else:
+        ls = None
+        k = int(cfg.k)
+
+    sync = sync_fn if sync_fn is not None else make_psum_sync(worker_axes)
+    wants_rng = (
+        sync_fn is not None
+        and len(inspect.signature(sync_fn).parameters) >= 3
+    )
 
     # Identical rng derivation to run_local_adaseg: worker inits from
     # split(rng, M+1)[1:], then per-round step rngs split(round_rng, K·M)
@@ -77,43 +112,81 @@ def run_local_adaseg_sharded(
     step_rngs = jnp.transpose(step_rngs, (2, 0, 1, 3))  # (M, R, K, 2)
     worker_ids = jnp.arange(m, dtype=jnp.int32)
 
-    sync = make_psum_sync(worker_axes)
     lead = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    spec_w = P(lead)
 
-    def shard_fn(w_rng, s_rngs, wid):
-        # Per-shard shapes: w_rng (1, 2), s_rngs (1, R, K, 2), wid (1,).
+    operands = [worker_rngs, step_rngs, worker_ids]
+    in_specs = [spec_w, P(lead, None, None, None), spec_w]
+    if has_ls:
+        operands.append(ls)
+        in_specs.append(spec_w)
+    if wants_rng:
+        sync_rngs = jax.vmap(
+            lambda r: jax.random.split(jax.random.fold_in(r, 7), m)
+        )(round_rngs)                                 # (R, M, 2)
+        operands.append(jnp.transpose(sync_rngs, (1, 0, 2)))  # (M, R, 2)
+        in_specs.append(P(lead, None, None))
+
+    def shard_fn(w_rng, s_rngs, wid, *rest):
+        # Per-shard shapes: w_rng (1, 2), s_rngs (1, R, K, 2), wid (1,),
+        # then optionally ls (1,) and sync_rngs (1, R, 2).
+        rest = list(rest)
+        k_m = rest.pop(0)[0] if has_ls else None
+        sy_rngs = rest.pop(0)[0] if wants_rng else jnp.zeros(
+            (rounds, 2), jnp.uint32
+        )
         state = init(problem, cfg, w_rng[0], wid[0])
 
-        def round_fn(st, rngs_round):
+        def round_fn(st, inputs):
+            rngs_round, sync_rng = inputs
             # Line 5–8: weighted sync at the top of each round, as one
-            # all-reduce of w·z̃ across the worker axes.
+            # all-reduce of (possibly compressed) w·z̃ across worker axes.
             inv_eta = 1.0 / eta_of(cfg, st.sum_sq)
-            st = st._replace(z_tilde=sync(st.z_tilde, inv_eta))
+            if wants_rng:
+                st = st._replace(z_tilde=sync(st.z_tilde, inv_eta, sync_rng))
+            else:
+                st = st._replace(z_tilde=sync(st.z_tilde, inv_eta))
+
+            if has_ls:
+                def body(s, inp):
+                    r, i = inp
+                    return local_step(problem, cfg, s, r,
+                                      enabled=i < k_m, backend=backend)
+
+                return lax.scan(body, st, (rngs_round, jnp.arange(k)))
 
             def body(s, r):
                 return local_step(problem, cfg, s, r, backend=backend)
 
             return lax.scan(body, st, rngs_round)
 
-        state, hist = lax.scan(round_fn, state, s_rngs[0])
+        state, hist = lax.scan(round_fn, state, (s_rngs[0], sy_rngs))
 
-        # Line 14 global output: uniform average of worker means.
-        z_bar = jax.tree.map(
-            lambda v: lax.psum(v, worker_axes) / m, state.z_bar
-        )
+        # Line 14 global output: worker means weighted by realized step
+        # counts (uniform K degenerates to the plain mean).
+        if has_ls:
+            count_m = (k_m * rounds).astype(jnp.float32)
+            w_m = count_m / lax.psum(count_m, worker_axes)
+            z_bar = jax.tree.map(
+                lambda v: lax.psum(w_m.astype(v.dtype) * v, worker_axes),
+                state.z_bar,
+            )
+        else:
+            z_bar = jax.tree.map(
+                lambda v: lax.psum(v, worker_axes) / m, state.z_bar
+            )
         state_out = jax.tree.map(lambda v: v[None], state)
         hist_out = jax.tree.map(lambda v: v[:, :, None], hist)  # (R, K, 1)
         return z_bar, state_out, hist_out
 
-    spec_w = P(lead)
     fn = shard_map(
         shard_fn,
         mesh=mesh,
-        in_specs=(spec_w, P(lead, None, None, None), spec_w),
+        in_specs=tuple(in_specs),
         # Prefix specs: z_bar replicated (post-psum), state leaves carry the
         # leading worker axis, history is (R, K, M) with M sharded.
         out_specs=(P(), spec_w, P(None, None, lead)),
         check_rep=False,
     )
-    z_bar, state, hist = jax.jit(fn)(worker_rngs, step_rngs, worker_ids)
+    z_bar, state, hist = jax.jit(fn)(*operands)
     return z_bar, (state, hist if collect_aux else None)

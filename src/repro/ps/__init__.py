@@ -1,0 +1,90 @@
+"""Parameter-Server runtime: LocalAdaSEG's Algorithm 1 as a distributed-
+system simulator — heterogeneity, compression, faults and resume.
+
+The one-shot drivers (``core.adaseg.run_local_adaseg``,
+``launch.sharded.run_local_adaseg_sharded``) execute an *idealized* PS: every
+worker synchronous, every message dense, nobody ever dies. This package turns
+the round loop into a configurable runtime. Map from engine hooks to the
+paper's Algorithm 1 (LocalAdaSEG) line numbers:
+
+====================  =====================================================
+Algorithm 1           engine hook
+====================  =====================================================
+Line 3–4              ``WorkerSchedule`` → per-round K_m^r local
+(local extragradient  extragradient steps, run by ``core.adaseg.local_step``
+steps, adaptive η)    with the ``enabled`` mask; η stays the worker-local
+                      AdaGrad rate — stragglers simply take fewer steps.
+Line 5                ``SyncCompressor`` → each survivor uploads a
+(workers → server)    compressed w·z̃ message (bytes-up telemetry); biased
+                      codecs run under error feedback.
+Line 6                ``FaultPolicy`` → the inverse-stepsize weights
+(weights w ∝ 1/η)     w_m ∝ 1/η_m are renormalized over the round's
+                      survivors; dead workers keep their stale anchor.
+Line 7                server sums the decompressed messages — identity
+(weighted average)    compression reproduces ``sync_weighted_stacked``
+                      bit-exactly; sharded execution collapses this to one
+                      ``lax.psum`` all-reduce.
+Line 8                survivors receive the new anchor z̃° (bytes-down
+(server → workers)    telemetry).
+Line 14               ``PSEngine.z_bar`` → worker means weighted by
+(global output z̄)     *realized* step counts (``weighted_worker_average``).
+====================  =====================================================
+
+``PSEngine`` drives both execution paths (serial vmap / ``shard_map`` with a
+compressed psum) with ``backend="reference" | "fused"`` passing through to
+the step kernels, records per-round traces (``ps.trace``), and checkpoints
+mid-stream via ``checkpoint.serialize`` — schedules and fault traces are
+deterministic functions of their seeds, so a resumed run replays the exact
+same scenario. ``ps.partition`` carves Dirichlet-skewed per-worker oracles
+so homogeneous vs heterogeneous data is a config flag.
+"""
+from .compress import (
+    IdentityCompressor,
+    StochasticQuantizeCompressor,
+    SyncCompressor,
+    TopKCompressor,
+    dense_bytes,
+    make_compressed_psum_sync,
+)
+from .engine import PSConfig, PSEngine
+from .faults import BernoulliFaults, FaultPolicy, NoFaults, OutageFaults
+from .partition import (
+    heterogeneous_bilinear,
+    heterogeneous_robust,
+    heterogeneous_wgan,
+    heterogenize,
+)
+from .schedule import (
+    ElasticSchedule,
+    FixedSchedule,
+    StragglerSchedule,
+    UniformSchedule,
+    WorkerSchedule,
+)
+from .trace import RoundRecord, TraceRecorder
+
+__all__ = [
+    "BernoulliFaults",
+    "ElasticSchedule",
+    "FaultPolicy",
+    "FixedSchedule",
+    "IdentityCompressor",
+    "NoFaults",
+    "OutageFaults",
+    "PSConfig",
+    "PSEngine",
+    "RoundRecord",
+    "StochasticQuantizeCompressor",
+    "StragglerSchedule",
+    "SyncCompressor",
+    "TopKCompressor",
+    "TraceRecorder",
+    "UniformSchedule",
+    "WorkerSchedule",
+    "dense_bytes",
+    "heterogeneous_bilinear",
+    "heterogeneous_robust",
+    "heterogeneous_wgan",
+    "heterogenize",
+    "make_compressed_psum_sync",
+]

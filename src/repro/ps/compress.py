@@ -1,0 +1,158 @@
+"""Sync compressors: lossy codecs for the uphill w·z̃ messages (Line 5/7).
+
+Each worker sends its weighted anchor ``w_m · z̃_m`` to the server; the
+server sums the (decompressed) messages — so compressing the *messages*
+preserves the Line-7 semantics exactly in the identity case and degrades it
+gracefully otherwise. We simulate the codec: :meth:`SyncCompressor.compress`
+returns the decompressed (lossy) message, and :meth:`message_bytes` gives
+the static wire size the real codec would ship, which the trace recorder
+turns into per-round bytes-up/bytes-down telemetry.
+
+Compressors with ``error_feedback=True`` get the classic EF treatment from
+the engine (Seide et al. '14 / Karimireddy et al. '19): the quantization
+residual of round ``r`` is added to the message of round ``r+1``, so the
+compression error telescopes instead of accumulating.
+
+``compress`` sees ONE worker's message pytree (no leading worker axis); the
+serial engine vmaps it over the stacked worker axis, and the sharded engine
+calls it per shard before the psum — same code, both execution paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+
+def dense_bytes(tree: PyTree) -> float:
+    """Wire size of an uncompressed float32 message."""
+    return float(sum(4 * v.size for v in jax.tree.leaves(tree)))
+
+
+class SyncCompressor:
+    name: str = "compressor"
+    error_feedback: bool = False
+    is_identity: bool = False
+
+    def compress(self, msg: PyTree, rng) -> PyTree:
+        """Lossy round-trip (compress + decompress) of one worker's message."""
+        raise NotImplementedError
+
+    def message_bytes(self, like: PyTree) -> float:
+        """Static wire size of one compressed message."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCompressor(SyncCompressor):
+    """No-op codec — the engine short-circuits it so the identity path stays
+    bit-exact with ``core.adaseg.sync_weighted_stacked``."""
+
+    name: str = "identity"
+    is_identity: bool = True
+
+    def compress(self, msg: PyTree, rng) -> PyTree:
+        return msg
+
+    def message_bytes(self, like: PyTree) -> float:
+        return dense_bytes(like)
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticQuantizeCompressor(SyncCompressor):
+    """Per-leaf stochastic uniform quantization to ``bits`` bits (QSGD-style):
+    values are scaled by the leaf's max-abs, rounded stochastically to one of
+    2^bits − 1 levels (unbiased given the scale), and shipped with one f32
+    scale per leaf."""
+
+    bits: int = 8
+    name: str = "quantize"
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        if not 1 <= self.bits <= 16:
+            raise ValueError(f"bits must be in [1, 16], got {self.bits}")
+        object.__setattr__(self, "name", f"q{self.bits}")
+
+    def compress(self, msg: PyTree, rng) -> PyTree:
+        levels = float(2 ** self.bits - 1)
+        leaves, treedef = jax.tree.flatten(msg)
+        rngs = jax.random.split(rng, len(leaves))
+
+        def q(leaf, r):
+            scale = jnp.maximum(jnp.max(jnp.abs(leaf)), 1e-30)
+            y = jnp.abs(leaf) / scale * levels
+            lo = jnp.floor(y)
+            up = jax.random.uniform(r, leaf.shape) < (y - lo)
+            mag = (lo + up.astype(leaf.dtype)) * (scale / levels)
+            return jnp.sign(leaf) * mag
+
+        return treedef.unflatten([q(l, r) for l, r in zip(leaves, rngs)])
+
+    def message_bytes(self, like: PyTree) -> float:
+        # bits magnitude levels + 1 sign bit per entry, one f32 scale per leaf
+        return float(sum(
+            math.ceil(v.size * (self.bits + 1) / 8) + 4
+            for v in jax.tree.leaves(like)
+        ))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(SyncCompressor):
+    """Keep the top ``fraction`` of entries of each leaf by magnitude, zero
+    the rest; wire format is (index, value) pairs. Biased — which is exactly
+    why it is run under error feedback."""
+
+    fraction: float = 0.1
+    name: str = "topk"
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+        object.__setattr__(self, "name", f"top{self.fraction:g}")
+
+    def _k(self, size: int) -> int:
+        return max(1, int(math.ceil(self.fraction * size)))
+
+    def compress(self, msg: PyTree, rng) -> PyTree:
+        def keep(leaf):
+            flat = leaf.reshape(-1)
+            k = self._k(flat.size)
+            # scatter through the top-k indices so exactly k entries survive
+            # (a magnitude-threshold mask would keep every tied entry and
+            # undercut the sparsity that message_bytes bills for)
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+            return out.reshape(leaf.shape)
+
+        return jax.tree.map(keep, msg)
+
+    def message_bytes(self, like: PyTree) -> float:
+        return float(sum(
+            8 * self._k(v.size) for v in jax.tree.leaves(like)  # idx + value
+        ))
+
+
+def make_compressed_psum_sync(axis_names: tuple[str, ...],
+                              compressor: SyncCompressor):
+    """Compressed-psum hook for ``launch.sharded.run_local_adaseg_sharded``:
+    the Line-7 all-reduce with each worker's uphill w·z̃ message run through
+    ``compressor`` first (3-argument ``sync_fn`` form — the driver supplies
+    a per-worker, per-round rng). Stateless: error feedback needs memory
+    across rounds, which is the PS engine's job (``repro.ps.engine``)."""
+
+    def sync(z_tilde: PyTree, inv_eta, rng) -> PyTree:
+        denom = lax.psum(inv_eta, axis_names)
+        w = inv_eta / denom
+        msg = jax.tree.map(lambda v: w.astype(v.dtype) * v, z_tilde)
+        sent = compressor.compress(msg, rng)
+        return jax.tree.map(lambda v: lax.psum(v, axis_names), sent)
+
+    return sync

@@ -1,0 +1,550 @@
+"""Parameter-Server round engine for LocalAdaSEG (Algorithm 1 at fleet scale).
+
+The engine owns the round loop of the paper's Parameter-Server model and
+threads the pluggable policies through it:
+
+* :class:`~repro.ps.schedule.WorkerSchedule` → per-round, per-worker local
+  step counts K_m^r (Line 3–4), fed through the ``enabled`` masking of
+  ``core.adaseg.local_step``;
+* :class:`~repro.ps.compress.SyncCompressor` → lossy codec for the uphill
+  w·z̃ messages (Line 5/7), with error feedback when the codec is biased;
+* :class:`~repro.ps.faults.FaultPolicy` → per-round worker failures, with
+  the inverse-stepsize weights w ∝ 1/η renormalized over survivors
+  (Line 6–7) and dead workers keeping their stale anchor;
+* :class:`~repro.ps.trace.TraceRecorder` → per-round telemetry (bytes
+  up/down, effective K, η spread, residual).
+
+Two execution paths, same semantics:
+
+* ``mesh=None`` — the serial vmap path (a stacked worker axis, like
+  ``core.adaseg.run_local_adaseg``). With the identity compressor, no
+  faults and a uniform schedule this path is **bit-exact** with
+  ``run_local_adaseg``: the rng derivation, sync expression and Line-14
+  output average are the identical JAX expressions.
+* ``mesh=...`` — one worker per shard of ``worker_axes`` via ``shard_map``,
+  with Line 7 as a single psum all-reduce of the (compressed) w·z̃
+  messages, like ``launch.sharded.run_local_adaseg_sharded``.
+
+The step backend (``"reference"`` tree ops / ``"fused"`` Pallas kernels)
+passes through unchanged to ``core.adaseg.local_step``.
+
+Checkpointed execution: the engine state (per-worker AdaSEG state, error-
+feedback memory, round counter, seed fingerprint) serializes through
+``checkpoint.serialize``; schedules and fault traces are *re-derived* from
+the config seeds rather than stored, so a killed run resumes bit-exactly
+(serial) mid-stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..checkpoint.serialize import load_pytree, save_pytree
+from ..core.adaseg import (
+    AdaSEGConfig,
+    AdaSEGState,
+    eta_of,
+    init,
+    local_step,
+    weighted_worker_average,
+)
+from ..core.tree import tree_add, tree_sub, tree_where, tree_zeros_like
+from ..core.types import MinimaxProblem
+from .compress import IdentityCompressor, SyncCompressor, dense_bytes
+from .faults import FaultPolicy, NoFaults
+from .schedule import UniformSchedule, WorkerSchedule
+from .trace import RoundRecord, TraceRecorder
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PSConfig:
+    """Everything the Parameter-Server simulator needs beyond the problem."""
+
+    adaseg: AdaSEGConfig
+    num_workers: int
+    rounds: int
+    schedule: WorkerSchedule | None = None   # default: uniform adaseg.k
+    compressor: SyncCompressor | None = None  # default: identity
+    faults: FaultPolicy | None = None        # default: no faults
+    backend: str = "reference"               # step backend, passes through
+
+
+def _per_worker(mask, leaf):
+    """Broadcast a (M,) mask over a worker-stacked leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+class PSEngine:
+    """Configurable Parameter-Server runtime for LocalAdaSEG."""
+
+    def __init__(
+        self,
+        problem: MinimaxProblem,
+        config: PSConfig,
+        rng,
+        *,
+        mesh=None,
+        worker_axes: tuple[str, ...] = ("data",),
+        eval_fn: Callable[[PyTree], jax.Array] | None = None,
+        trace_meta: dict | None = None,
+    ):
+        self.problem = problem
+        self.config = config
+        self.schedule = config.schedule or UniformSchedule(config.adaseg.k)
+        self.compressor = config.compressor or IdentityCompressor()
+        self.faults = config.faults or NoFaults()
+        self.eval_fn = eval_fn
+        self._mesh = mesh
+        self._worker_axes = tuple(worker_axes)
+        if mesh is not None:
+            import math
+
+            m_mesh = math.prod(mesh.shape[a] for a in self._worker_axes)
+            if m_mesh != config.num_workers:
+                raise ValueError(
+                    f"mesh worker axes give {m_mesh} workers, "
+                    f"config.num_workers={config.num_workers}"
+                )
+
+        m, r = config.num_workers, config.rounds
+        # Deterministic policy tables — re-derived (never stored) on resume.
+        self._ks = np.asarray(
+            self.schedule.steps(m, r), dtype=np.int32
+        )                                                     # (R, M)
+        self._alive = np.asarray(self.faults.alive(m, r), dtype=bool)
+        if self._ks.shape != (r, m) or self._alive.shape != (r, m):
+            raise ValueError("schedule/fault table shape mismatch")
+        self._k_pad = int(self.schedule.max_steps(m))
+        if not (self._ks <= self._k_pad).all():
+            # the per-round scan runs max_steps iterations — larger entries
+            # would silently truncate local work while still being counted
+            raise ValueError(
+                f"schedule emits step counts above its max_steps={self._k_pad}"
+            )
+        self._eff_steps = np.where(self._alive, self._ks, 0)  # (R, M)
+        self._counts_cum = np.cumsum(
+            self._eff_steps, axis=0
+        ).astype(np.float32)
+
+        # RNG derivation — bit-identical to core.adaseg.run_local_adaseg.
+        rng = jnp.asarray(rng)
+        init_rngs = jax.random.split(rng, m + 1)
+        rng0, worker_rngs = init_rngs[0], init_rngs[1:]
+        self._rng0 = np.asarray(rng0)
+        self._round_rngs = jax.random.split(rng0, r)          # (R, 2)
+        self._state: AdaSEGState = jax.vmap(
+            lambda rr, w: init(problem, config.adaseg, rr, w)
+        )(worker_rngs, jnp.arange(m, dtype=jnp.int32))
+        self._ef: PyTree = (
+            tree_zeros_like(self._state.z_tilde)
+            if self.compressor.error_feedback else ()
+        )
+        self.round = 0
+
+        z_like = jax.tree.map(lambda v: v[0], self._state.z_tilde)
+        self._msg_bytes = self.compressor.message_bytes(z_like)
+        self._dense_bytes = dense_bytes(z_like)
+        self.trace = TraceRecorder(meta={
+            "problem": problem.name,
+            "workers": m,
+            "rounds": r,
+            "schedule": type(self.schedule).__name__,
+            "compressor": self.compressor.name,
+            "faults": type(self.faults).__name__,
+            "backend": config.backend,
+            "execution": "sharded" if mesh is not None else "serial",
+            **(trace_meta or {}),
+        })
+
+        # Static: a NoFaults policy lets the chunk builders skip the
+        # aliveness masking entirely, keeping identity/no-fault rounds
+        # bit-exact with the one-shot drivers.
+        self._no_faults = isinstance(self.faults, NoFaults)
+
+        if mesh is None:
+            self._chunk_fn = jax.jit(self._make_serial_chunk())
+        else:
+            # NOT jit-wrapped here: the sharded chunk derives its rng tables
+            # eagerly and jits only the shard_map body — with the default
+            # non-partitionable threefry, deriving keys inside the jit that
+            # feeds a shard_map re-shards the key computation itself and
+            # silently changes the stream (same reason the one-shot sharded
+            # driver precomputes its step rngs on the host).
+            self._chunk_fn = self._make_sharded_chunk()
+
+    # ------------------------------------------------------------------
+    # Round-loop bodies
+    # ------------------------------------------------------------------
+
+    def _sync_stacked(self, state, ef, alive_r, c_rng):
+        """Line 5–8 on the stacked worker axis: compress(w·z̃) per worker,
+        server sum, broadcast to survivors. ``alive_r is None`` means the
+        fault policy statically guarantees everyone is up — that path emits
+        the *same expressions* as ``core.adaseg.sync_weighted_stacked``, so
+        identity/no-fault rounds stay bit-exact with the serial driver
+        (dynamic all-True masks would still perturb XLA fusion)."""
+        cfg = self.config.adaseg
+        comp = self.compressor
+        m = self.config.num_workers
+
+        inv_eta = 1.0 / eta_of(cfg, state.sum_sq)             # (M,)
+        if alive_r is None:
+            any_alive = None
+            w = inv_eta / jnp.sum(inv_eta)
+        else:
+            w_raw = jnp.where(alive_r, inv_eta, jnp.zeros_like(inv_eta))
+            denom = jnp.sum(w_raw)
+            any_alive = denom > 0.0
+            w = w_raw / jnp.where(any_alive, denom, 1.0)
+
+        messages = jax.tree.map(
+            lambda leaf: _per_worker(w, leaf).astype(leaf.dtype) * leaf,
+            state.z_tilde,
+        )
+        if comp.is_identity:
+            sent, ef_new = messages, ef
+        elif alive_r is None:
+            c_rngs = jax.random.split(c_rng, m)
+            eff = tree_add(messages, ef) if comp.error_feedback else messages
+            sent = jax.vmap(comp.compress)(eff, c_rngs)
+            ef_new = tree_sub(eff, sent) if comp.error_feedback else ef
+        else:
+            c_rngs = jax.random.split(c_rng, m)
+            eff = tree_add(messages, ef) if comp.error_feedback else messages
+            sent = jax.vmap(comp.compress)(eff, c_rngs)
+            # dead workers send nothing and keep their error memory frozen
+            sent = jax.tree.map(
+                lambda s: jnp.where(_per_worker(alive_r, s), s, 0.0), sent
+            )
+            if comp.error_feedback:
+                ef_new = jax.tree.map(
+                    lambda e_new, e_old: jnp.where(
+                        _per_worker(alive_r, e_new), e_new, e_old
+                    ),
+                    tree_sub(eff, sent), ef,
+                )
+            else:
+                ef_new = ef
+
+        if alive_r is None:
+            z_tilde = jax.tree.map(
+                lambda s: jnp.broadcast_to(
+                    jnp.sum(s, axis=0, keepdims=True), s.shape
+                ),
+                sent,
+            )
+        else:
+            recv = jnp.logical_and(alive_r, any_alive)        # (M,)
+            z_tilde = jax.tree.map(
+                lambda s, old: jnp.where(
+                    _per_worker(recv, old),
+                    jnp.broadcast_to(
+                        jnp.sum(s, axis=0, keepdims=True), old.shape
+                    ),
+                    old,
+                ),
+                sent, state.z_tilde,
+            )
+        return state._replace(z_tilde=z_tilde), ef_new
+
+    def _make_serial_chunk(self):
+        problem, cfg = self.problem, self.config.adaseg
+        backend = self.config.backend
+        m, k_pad = self.config.num_workers, self._k_pad
+        eval_fn = self.eval_fn
+
+        vstep = jax.vmap(
+            lambda st, rr, en: local_step(
+                problem, cfg, st, rr, enabled=en, backend=backend
+            )
+        )
+
+        no_faults = self._no_faults
+
+        def round_body(carry, inputs):
+            state, ef = carry
+            rng_round, ks_r, alive_r, counts_r = inputs
+
+            state, ef = self._sync_stacked(
+                state, ef, None if no_faults else alive_r,
+                jax.random.fold_in(rng_round, 7),
+            )
+
+            # Line 3–4: K_m^r masked local extragradient steps.
+            step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
+                k_pad, m, 2
+            )
+
+            def body(st, inp):
+                rngs, i = inp
+                enabled = i < ks_r
+                if not no_faults:
+                    enabled = jnp.logical_and(enabled, alive_r)
+                st, _ = vstep(st, rngs, enabled)
+                return st, None
+
+            state, _ = lax.scan(
+                body, state, (step_rngs, jnp.arange(k_pad))
+            )
+
+            eta_end = eta_of(cfg, state.sum_sq)               # (M,)
+            if eval_fn is None:
+                res = jnp.float32(jnp.nan)
+            else:
+                counts = jnp.where(
+                    jnp.sum(counts_r) > 0.0, counts_r,
+                    jnp.ones_like(counts_r),
+                )
+                res = jnp.asarray(
+                    eval_fn(weighted_worker_average(state.z_bar, counts)),
+                    dtype=jnp.float32,
+                )
+            return (state, ef), (eta_end, res)
+
+        def chunk(state, ef, round_rngs, ks, alive, counts_cum):
+            (state, ef), (etas, ress) = lax.scan(
+                round_body, (state, ef), (round_rngs, ks, alive, counts_cum)
+            )
+            return state, ef, etas, ress
+
+        return chunk
+
+    def _make_sharded_chunk(self):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        problem, cfg = self.problem, self.config.adaseg
+        backend = self.config.backend
+        comp = self.compressor
+        m, k_pad = self.config.num_workers, self._k_pad
+        axes = self._worker_axes
+        lead = axes if len(axes) > 1 else axes[0]
+
+        def shard_fn(state_s, ef_s, s_rngs, c_rngs, ks_m, alive_m):
+            # Per-shard shapes: state leaves (1, ...), s_rngs (1, C, K, 2),
+            # c_rngs (1, C, 2), ks_m/alive_m (1, C).
+            st0 = jax.tree.map(lambda v: v[0], state_s)
+            ef0 = jax.tree.map(lambda v: v[0], ef_s)
+
+            no_faults = self._no_faults
+
+            def round_body(carry, inputs):
+                st, ef = carry
+                rngs_round, c_rng, k_m, al = inputs
+
+                # Line 5–8 as one all-reduce of the compressed w·z̃ message.
+                inv_eta = 1.0 / eta_of(cfg, st.sum_sq)
+                if no_faults:
+                    # same expressions as core.adaseg.make_psum_sync
+                    any_alive = None
+                    w = inv_eta / lax.psum(inv_eta, axes)
+                else:
+                    w_raw = jnp.where(al, inv_eta, 0.0)
+                    denom = lax.psum(w_raw, axes)
+                    any_alive = denom > 0.0
+                    w = w_raw / jnp.where(any_alive, denom, 1.0)
+                msg = jax.tree.map(
+                    lambda v: w.astype(v.dtype) * v, st.z_tilde
+                )
+                if comp.is_identity:
+                    sent, ef_new = msg, ef
+                else:
+                    eff = tree_add(msg, ef) if comp.error_feedback else msg
+                    sent = comp.compress(eff, c_rng)
+                    if not no_faults:
+                        sent = tree_where(al, sent, tree_zeros_like(sent))
+                    ef_new = ef
+                    if comp.error_feedback:
+                        ef_new = tree_sub(eff, sent)
+                        if not no_faults:
+                            ef_new = tree_where(al, ef_new, ef)
+                z_sum = jax.tree.map(lambda v: lax.psum(v, axes), sent)
+                if no_faults:
+                    st = st._replace(z_tilde=z_sum)
+                else:
+                    recv = jnp.logical_and(al, any_alive)
+                    st = st._replace(
+                        z_tilde=tree_where(recv, z_sum, st.z_tilde)
+                    )
+
+                def body(s, inp):
+                    rngs, i = inp
+                    enabled = i < k_m
+                    if not no_faults:
+                        enabled = jnp.logical_and(enabled, al)
+                    s, _ = local_step(
+                        problem, cfg, s, rngs, enabled=enabled,
+                        backend=backend,
+                    )
+                    return s, None
+
+                st, _ = lax.scan(
+                    body, st, (rngs_round, jnp.arange(k_pad))
+                )
+                return (st, ef_new), eta_of(cfg, st.sum_sq)
+
+            (st, ef), etas = lax.scan(
+                round_body, (st0, ef0),
+                (s_rngs[0], c_rngs[0], ks_m[0], alive_m[0]),
+            )
+            state_out = jax.tree.map(lambda v: v[None], st)
+            ef_out = jax.tree.map(lambda v: v[None], ef)
+            return state_out, ef_out, etas[:, None]           # (C, 1)
+
+        spec_w = P(lead)
+        fn = shard_map(
+            shard_fn,
+            mesh=self._mesh,
+            in_specs=(spec_w, spec_w, P(lead, None, None, None),
+                      P(lead, None, None), P(lead, None), P(lead, None)),
+            out_specs=(spec_w, spec_w, P(None, lead)),
+            check_rep=False,
+        )
+
+        jfn = jax.jit(fn)
+
+        def chunk(state, ef, round_rngs, ks, alive, counts_cum):
+            del counts_cum  # sharded residuals are chunk-boundary only
+            # Eager rng derivation (see __init__): keys must be materialized
+            # before they cross the shard_map boundary.
+            step_rngs = jax.vmap(
+                lambda rr: jax.random.split(rr, k_pad * m).reshape(
+                    k_pad, m, 2
+                )
+            )(round_rngs)                                     # (C, K, M, 2)
+            step_rngs = jnp.transpose(step_rngs, (2, 0, 1, 3))  # (M, C, K, 2)
+            c_rngs = jax.vmap(
+                lambda rr: jax.random.split(jax.random.fold_in(rr, 7), m)
+            )(round_rngs)                                     # (C, M, 2)
+            c_rngs = jnp.transpose(c_rngs, (1, 0, 2))         # (M, C, 2)
+            state, ef, etas = jfn(
+                state, ef, step_rngs, c_rngs,
+                jnp.asarray(ks).T, jnp.asarray(alive).T,
+            )
+            ress = jnp.full((round_rngs.shape[0],), jnp.nan, jnp.float32)
+            return state, ef, etas, ress
+
+        return chunk
+
+    # ------------------------------------------------------------------
+    # Driving, output, telemetry
+    # ------------------------------------------------------------------
+
+    def _run_chunk(self, r0: int, r1: int) -> None:
+        sl = slice(r0, r1)
+        state, ef, etas, ress = self._chunk_fn(
+            self._state, self._ef,
+            self._round_rngs[sl],
+            jnp.asarray(self._ks[sl]),
+            jnp.asarray(self._alive[sl]),
+            jnp.asarray(self._counts_cum[sl]),
+        )
+        self._state, self._ef = state, ef
+        self.round = r1
+
+        etas = np.asarray(etas)
+        ress = np.asarray(ress)
+        for i, r in enumerate(range(r0, r1)):
+            alive = self._alive[r]
+            n_alive = int(alive.sum())
+            res = float(ress[i])
+            if np.isnan(res):
+                res = None
+            if (res is None and self.eval_fn is not None and r == r1 - 1):
+                # sharded path: residual at the chunk boundary, host-side
+                res = float(self.eval_fn(self.z_bar()))
+            self.trace.record(RoundRecord(
+                round=r,
+                local_steps=self._eff_steps[r].tolist(),
+                alive=alive.tolist(),
+                bytes_up=n_alive * self._msg_bytes,
+                bytes_down=n_alive * self._dense_bytes,
+                eta_min=float(etas[i].min()),
+                eta_max=float(etas[i].max()),
+                eta_mean=float(etas[i].mean()),
+                residual=res,
+            ))
+
+    def run(
+        self,
+        *,
+        until_round: int | None = None,
+        checkpoint_path: str | None = None,
+        checkpoint_every: int | None = None,
+    ) -> PyTree:
+        """Advance to ``until_round`` (default: all rounds) and return the
+        global output iterate z̄ (Line 14). ``checkpoint_every`` chunks the
+        round scan and writes ``checkpoint_path`` at each boundary."""
+        target = self.config.rounds if until_round is None else int(until_round)
+        target = min(target, self.config.rounds)
+        while self.round < target:
+            r1 = (min(target, self.round + checkpoint_every)
+                  if checkpoint_every else target)
+            self._run_chunk(self.round, r1)
+            if checkpoint_path is not None:
+                self.save(checkpoint_path)
+        return self.z_bar()
+
+    def step_round(self) -> None:
+        """Advance exactly one round (smoke tests, interactive driving)."""
+        if self.round >= self.config.rounds:
+            raise ValueError("engine already ran all configured rounds")
+        self._run_chunk(self.round, self.round + 1)
+
+    @property
+    def state(self) -> AdaSEGState:
+        return self._state
+
+    def z_bar(self) -> PyTree:
+        """Global output iterate: worker means weighted by realized step
+        counts — the same expression as the serial driver's Line 14."""
+        counts = self._eff_steps[:max(self.round, 1)].sum(axis=0)
+        counts = counts.astype(np.float32)
+        if counts.sum() == 0.0:
+            counts = np.ones_like(counts)
+        return weighted_worker_average(self._state.z_bar, jnp.asarray(counts))
+
+    # ------------------------------------------------------------------
+    # Checkpointing
+    # ------------------------------------------------------------------
+
+    def _ckpt_tree(self) -> dict:
+        return {
+            "adaseg": self._state,
+            "ef": self._ef,
+            "round": jnp.int32(self.round),
+            "rng0": jnp.asarray(self._rng0),
+        }
+
+    def save(self, path: str) -> None:
+        """Serialize engine state via checkpoint.serialize (msgpack)."""
+        save_pytree(path, self._ckpt_tree())
+
+    def restore(self, path: str) -> "PSEngine":
+        """Resume mid-stream: policies and rng streams are re-derived from
+        the config, so only the worker states, error-feedback memory and the
+        round counter come from disk. Refuses checkpoints from a different
+        seed (the round-rng stream would silently diverge)."""
+        loaded = load_pytree(path, self._ckpt_tree())
+        if not np.array_equal(
+            np.asarray(loaded["rng0"]), np.asarray(self._rng0)
+        ):
+            raise ValueError(
+                "checkpoint was written by a run with a different seed"
+            )
+        self._state = loaded["adaseg"]
+        self._ef = loaded["ef"]
+        self.round = int(loaded["round"])
+        # drop telemetry from rounds past the restore point so a rewound
+        # engine doesn't accumulate duplicate round records
+        self.trace.rounds = [
+            rec for rec in self.trace.rounds if rec.round < self.round
+        ]
+        return self

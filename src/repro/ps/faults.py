@@ -1,0 +1,67 @@
+"""Fault policies: which workers are alive each round (Line 5–8 membership).
+
+A :class:`FaultPolicy` yields a per-round boolean aliveness table. A worker
+that is *down* for round ``r``:
+
+* runs no local steps (its ``enabled`` mask is forced off),
+* sends nothing uphill — its inverse-stepsize weight is removed and the
+  Line-7 weights ``w ∝ 1/η`` are renormalized over the survivors,
+* receives nothing downhill — it keeps its stale anchor ``z̃`` and rejoins
+  with it (and its accumulated Σ(Z)², so its η is still honest) when the
+  policy brings it back.
+
+Like the schedules, fault policies are deterministic functions of their own
+``seed`` so a resumed run replays the exact same failure trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class FaultPolicy:
+    def alive(self, num_workers: int, rounds: int) -> np.ndarray:
+        """(rounds, num_workers) bool table; True = worker participates."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class NoFaults(FaultPolicy):
+    def alive(self, num_workers: int, rounds: int) -> np.ndarray:
+        return np.ones((rounds, num_workers), dtype=bool)
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliFaults(FaultPolicy):
+    """Each round every worker independently fails with probability ``p``.
+    ``protect_one`` keeps worker 0 always alive so the weighted average is
+    never over an empty survivor set (the engine also tolerates an all-dead
+    round: every weight masks to zero and nobody receives, so all anchors
+    simply carry over)."""
+
+    p: float
+    seed: int = 0
+    protect_one: bool = True
+
+    def alive(self, num_workers: int, rounds: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        up = rng.random((rounds, num_workers)) >= self.p
+        if self.protect_one:
+            up[:, 0] = True
+        return up
+
+
+@dataclasses.dataclass(frozen=True)
+class OutageFaults(FaultPolicy):
+    """Scripted outages: ``events`` is a tuple of (worker, start_round,
+    end_round) half-open intervals during which the worker is down. Good for
+    reproducing a specific incident in tests and benchmarks."""
+
+    events: tuple  # ((worker, start, end), ...)
+
+    def alive(self, num_workers: int, rounds: int) -> np.ndarray:
+        up = np.ones((rounds, num_workers), dtype=bool)
+        for worker, start, end in self.events:
+            up[int(start):int(end), int(worker)] = False
+        return up

@@ -1,0 +1,121 @@
+"""Worker schedules: who does how much local work each round (Line 3–4).
+
+A :class:`WorkerSchedule` decides, for every round ``r`` and worker ``m``,
+how many local extragradient steps ``K_m^r`` the worker runs before the next
+Parameter-Server sync. The engine pads every round to the schedule's static
+``max_steps`` and masks the tail with the ``enabled`` argument of
+``core.adaseg.local_step`` — exactly the mechanism the serial driver already
+uses for the paper's asynchronous variant (Appendix E.1).
+
+Schedules are *deterministic*: stochastic ones derive every draw from their
+own integer ``seed`` with numpy, so the full (R, M) table is reproducible
+from the config alone. This is what makes checkpoint/resume bit-exact — the
+engine never stores the table, it re-derives it.
+
+``K_m^r = 0`` models elastic membership: the worker skips the round's local
+work but stays a member — it still contributes its (stale) anchor to the
+weighted average and receives the broadcast. Workers *removed* from the
+average entirely are the business of :mod:`repro.ps.faults`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class WorkerSchedule:
+    """Base class. Subclasses fill in :meth:`steps`."""
+
+    def max_steps(self, num_workers: int) -> int:
+        """Static upper bound on K_m^r — the engine's per-round scan length."""
+        raise NotImplementedError
+
+    def steps(self, num_workers: int, rounds: int) -> np.ndarray:
+        """(rounds, num_workers) int32 table of per-round local step counts."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSchedule(WorkerSchedule):
+    """Every worker runs ``k`` steps every round — the paper's synchronous
+    Parameter-Server setting. The engine with this schedule (plus identity
+    compression and no faults) reproduces ``run_local_adaseg`` bit-exactly."""
+
+    k: int
+
+    def max_steps(self, num_workers: int) -> int:
+        return int(self.k)
+
+    def steps(self, num_workers: int, rounds: int) -> np.ndarray:
+        return np.full((rounds, num_workers), self.k, dtype=np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSchedule(WorkerSchedule):
+    """Static per-worker K_m, constant across rounds — the asynchronous
+    variant of Appendix E.1 ('Asynch-50' = K_m ∈ {50, 45, 40, 35})."""
+
+    local_steps: tuple
+
+    def __init__(self, local_steps):
+        object.__setattr__(
+            self, "local_steps",
+            tuple(int(k) for k in np.asarray(local_steps).reshape(-1)),
+        )
+
+    def max_steps(self, num_workers: int) -> int:
+        return max(self.local_steps)
+
+    def steps(self, num_workers: int, rounds: int) -> np.ndarray:
+        ks = np.asarray(self.local_steps, dtype=np.int32)
+        if ks.shape[0] != num_workers:
+            raise ValueError(
+                f"schedule has {ks.shape[0]} workers, engine has {num_workers}"
+            )
+        return np.broadcast_to(ks, (rounds, num_workers)).copy()
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSchedule(WorkerSchedule):
+    """Seed-driven straggler/delay model: each round every worker completes
+    ``K_m^r ~ Uniform{ceil(min_frac·k), …, k}`` steps before the sync
+    deadline. Workers listed in ``slow_workers`` are persistent stragglers
+    pinned at the minimum — the adversarial-straggler scenario."""
+
+    k: int
+    min_frac: float = 0.5
+    seed: int = 0
+    slow_workers: tuple = ()
+
+    def max_steps(self, num_workers: int) -> int:
+        return int(self.k)
+
+    def steps(self, num_workers: int, rounds: int) -> np.ndarray:
+        lo = max(1, int(np.ceil(self.min_frac * self.k)))
+        rng = np.random.default_rng(self.seed)
+        ks = rng.integers(lo, self.k + 1, size=(rounds, num_workers))
+        for m in self.slow_workers:
+            ks[:, int(m)] = lo
+        return ks.astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticSchedule(WorkerSchedule):
+    """Elastic membership on top of an inner schedule: each round every
+    worker independently sits out (K_m^r = 0) with probability ``dropout``.
+    Sitting out ≠ failing — the worker still syncs (its stale anchor keeps
+    its 1/η weight in the Line-7 average)."""
+
+    inner: WorkerSchedule
+    dropout: float = 0.2
+    seed: int = 0
+
+    def max_steps(self, num_workers: int) -> int:
+        return self.inner.max_steps(num_workers)
+
+    def steps(self, num_workers: int, rounds: int) -> np.ndarray:
+        ks = self.inner.steps(num_workers, rounds)
+        rng = np.random.default_rng(self.seed)
+        out = rng.random((rounds, num_workers)) < self.dropout
+        return np.where(out, 0, ks).astype(np.int32)

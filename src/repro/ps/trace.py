@@ -1,0 +1,100 @@
+"""Per-round telemetry for the Parameter-Server engine.
+
+One :class:`RoundRecord` per engine round: communication volume (bytes up =
+survivors × compressed message size, bytes down = survivors × dense anchor
+broadcast), the effective local step count per worker, the aliveness mask,
+the η spread across workers at the end of the round, and — when the engine
+was given an ``eval_fn`` — the problem residual of the running global output
+iterate. The recorder serializes to JSON for the bench harness
+(``benchmarks/bench_ps.py``) and for offline plotting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    local_steps: list          # effective K per worker (0 = sat out / down)
+    alive: list                # bool per worker
+    bytes_up: float            # Σ_alive compressed message bytes
+    bytes_down: float          # Σ_alive dense broadcast bytes
+    eta_min: float
+    eta_max: float
+    eta_mean: float
+    residual: float | None = None
+
+    @property
+    def eta_spread(self) -> float:
+        return self.eta_max / max(self.eta_min, 1e-30)
+
+
+class TraceRecorder:
+    """Accumulates RoundRecords and summarizes/serializes them."""
+
+    def __init__(self, meta: dict | None = None):
+        self.meta: dict = dict(meta or {})
+        self.rounds: list[RoundRecord] = []
+
+    def record(self, rec: RoundRecord) -> None:
+        self.rounds.append(rec)
+
+    # -- aggregates ---------------------------------------------------------
+
+    @property
+    def total_bytes_up(self) -> float:
+        return sum(r.bytes_up for r in self.rounds)
+
+    @property
+    def total_bytes_down(self) -> float:
+        return sum(r.bytes_down for r in self.rounds)
+
+    @property
+    def total_steps(self) -> int:
+        return int(sum(sum(r.local_steps) for r in self.rounds))
+
+    def summary(self) -> dict:
+        out = {
+            "rounds": len(self.rounds),
+            "total_steps": self.total_steps,
+            "bytes_up": self.total_bytes_up,
+            "bytes_down": self.total_bytes_down,
+        }
+        residuals = [r.residual for r in self.rounds if r.residual is not None]
+        if residuals:
+            out["final_residual"] = residuals[-1]
+        return out
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> str:
+        def _plain(v: Any):
+            if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
+                return v.item()
+            return v
+
+        payload = {
+            "meta": self.meta,
+            "summary": self.summary(),
+            "rounds": [
+                {k: _plain(v) for k, v in dataclasses.asdict(r).items()}
+                for r in self.rounds
+            ],
+        }
+        return json.dumps(payload, indent=2)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "TraceRecorder":
+        with open(path) as f:
+            payload = json.load(f)
+        rec = cls(meta=payload.get("meta"))
+        for r in payload.get("rounds", []):
+            rec.record(RoundRecord(**r))
+        return rec

@@ -94,6 +94,116 @@ def test_sharded_driver_matches_serial_both_backends():
     assert "SHARDED_PARITY_OK" in out
 
 
+def test_sharded_hetero_local_steps_and_sync_hook():
+    """The lifted uniform-K restriction: per-worker local_steps through the
+    sharded driver must match the serial driver's masking semantics (both
+    backends, rtol=1e-5), and the compressed-psum sync hook must stay close
+    to the dense all-reduce."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import AdaSEGConfig, run_local_adaseg
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.sharded import run_local_adaseg_sharded
+        from repro.problems import make_bilinear_game
+        from repro.ps import StochasticQuantizeCompressor, make_compressed_psum_sync
+
+        game = make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+        cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+        mesh = make_test_mesh(4, 2)
+        ks = jnp.array([5, 4, 3, 2])
+        for backend in ("reference", "fused"):
+            z_ser, (s_ser, _) = run_local_adaseg(
+                game.problem, cfg, num_workers=4, rounds=4,
+                rng=jax.random.PRNGKey(3), local_steps=ks, backend=backend)
+            z_sh, (s_sh, hist) = run_local_adaseg_sharded(
+                game.problem, cfg, mesh=mesh, worker_axes=("data",),
+                rounds=4, rng=jax.random.PRNGKey(3), local_steps=ks,
+                backend=backend, collect_aux=True)
+            for a, b in zip(jax.tree.leaves(z_ser), jax.tree.leaves(z_sh)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(s_ser.sum_sq),
+                                       np.asarray(s_sh.sum_sq), rtol=1e-5)
+            np.testing.assert_array_equal(np.asarray(s_ser.t),
+                                          np.asarray(s_sh.t))
+            assert hist.eta.shape == (4, 5, 4)
+
+        z_dense, _ = run_local_adaseg_sharded(
+            game.problem, cfg, mesh=mesh, rounds=4,
+            rng=jax.random.PRNGKey(2))
+        sync = make_compressed_psum_sync(
+            ("data",), StochasticQuantizeCompressor(bits=8))
+        z_q, _ = run_local_adaseg_sharded(
+            game.problem, cfg, mesh=mesh, rounds=4,
+            rng=jax.random.PRNGKey(2), sync_fn=sync)
+        rd, rq = float(game.residual(z_dense)), float(game.residual(z_q))
+        assert np.isfinite(rq) and rq < 2.0 * rd + 0.1, (rd, rq)
+        print("HETERO_SHARDED_OK")
+    """)
+    assert "HETERO_SHARDED_OK" in out
+
+
+def test_ps_engine_sharded_matches_serial_and_resumes():
+    """PS engine acceptance on the sharded path: identity/no-fault engine
+    reproduces the serial engine (rtol=1e-5, both backends); the full
+    policy stack (hetero K + q8 + faults) agrees across execution paths;
+    and a killed sharded run resumes within rtol=1e-5."""
+    out = run_in_subprocess("""
+        import os, tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import AdaSEGConfig
+        from repro.launch.mesh import make_test_mesh
+        from repro.problems import make_bilinear_game
+        from repro.ps import (BernoulliFaults, FixedSchedule, PSConfig,
+                              PSEngine, StochasticQuantizeCompressor)
+
+        game = make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+        cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+        mesh = make_test_mesh(4, 2)
+
+        def close(a, b, **kw):
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+        for backend in ("reference", "fused"):
+            pscfg = PSConfig(adaseg=cfg, num_workers=4, rounds=4,
+                             backend=backend)
+            es = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(2))
+            eh = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(2),
+                          mesh=mesh, worker_axes=("data",))
+            close(es.run(), eh.run(), rtol=1e-5, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(es.state.sum_sq),
+                                       np.asarray(eh.state.sum_sq),
+                                       rtol=1e-5)
+
+        pscfg = PSConfig(adaseg=cfg, num_workers=4, rounds=6,
+                         schedule=FixedSchedule([5, 4, 3, 2]),
+                         compressor=StochasticQuantizeCompressor(bits=8),
+                         faults=BernoulliFaults(p=0.25, seed=5))
+        es = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(3))
+        eh = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(3),
+                      mesh=mesh)
+        close(es.run(), eh.run(), rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(es.state.t),
+                                      np.asarray(eh.state.t))
+
+        z_full = eh.z_bar()
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ps.msgpack")
+            e2 = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(3),
+                          mesh=mesh)
+            e2.run(until_round=2)
+            e2.save(p)
+            e3 = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(3),
+                          mesh=mesh)
+            e3.restore(p)
+            assert e3.round == 2
+            close(z_full, e3.run(), rtol=1e-5, atol=1e-7)
+        print("PS_SHARDED_OK")
+    """)
+    assert "PS_SHARDED_OK" in out
+
+
 def test_train_round_multidevice_matches_singledevice():
     """One LocalAdaSEG round on a 4×2 mesh must equal the same round on one
     device (GSPMD partitioning is semantics-preserving for our round_fn)."""

@@ -1,0 +1,100 @@
+"""Checkpoint round-tripping for the PS engine: save mid-run, resume, and
+the trajectory must match an uninterrupted run bit-exactly (serial path).
+The sharded-path resume (rtol=1e-5) lives in tests/test_distributed.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AdaSEGConfig
+from repro.problems import make_bilinear_game
+from repro.ps import (
+    BernoulliFaults,
+    PSConfig,
+    PSEngine,
+    StochasticQuantizeCompressor,
+    StragglerSchedule,
+)
+
+M, R = 4, 6
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+
+
+def _pscfg(**kw):
+    return PSConfig(
+        adaseg=AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5),
+        num_workers=M, rounds=R, **kw)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("stop_at", [1, 3, 5])
+def test_resume_is_bit_exact(game, tmp_path, stop_at):
+    pscfg = _pscfg()
+    straight = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(9))
+    z_straight = straight.run()
+
+    path = str(tmp_path / "engine.msgpack")
+    first = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(9))
+    first.run(until_round=stop_at)
+    first.save(path)
+
+    resumed = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(9))
+    resumed.restore(path)
+    assert resumed.round == stop_at
+    z_resumed = resumed.run()
+
+    _assert_trees_equal(z_straight, z_resumed)
+    _assert_trees_equal(straight.state, resumed.state)
+
+
+def test_resume_with_all_policies_bit_exact(game, tmp_path):
+    """The full gauntlet: stragglers + error-feedback quantization + faults.
+    Error-feedback memory must round-trip through the checkpoint too."""
+    pscfg = _pscfg(
+        schedule=StragglerSchedule(k=5, min_frac=0.4, seed=3),
+        compressor=StochasticQuantizeCompressor(bits=8),
+        faults=BernoulliFaults(p=0.2, seed=5),
+    )
+    straight = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(11))
+    z_straight = straight.run()
+
+    path = str(tmp_path / "engine.msgpack")
+    first = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(11))
+    first.run(until_round=3)
+    first.save(path)
+
+    resumed = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(11))
+    resumed.restore(path)
+    z_resumed = resumed.run()
+
+    _assert_trees_equal(z_straight, z_resumed)
+    _assert_trees_equal(straight.state, resumed.state)
+    _assert_trees_equal(straight._ef, resumed._ef)
+
+
+def test_checkpoint_every_writes_resumable_file(game, tmp_path):
+    path = str(tmp_path / "periodic.msgpack")
+    engine = PSEngine(game.problem, _pscfg(), rng=jax.random.PRNGKey(4))
+    engine.run(checkpoint_path=path, checkpoint_every=2)
+    resumed = PSEngine(game.problem, _pscfg(), rng=jax.random.PRNGKey(4))
+    resumed.restore(path)
+    assert resumed.round == R           # final checkpoint covers the run
+    _assert_trees_equal(engine.state, resumed.state)
+
+
+def test_restore_rejects_wrong_seed(game, tmp_path):
+    path = str(tmp_path / "engine.msgpack")
+    engine = PSEngine(game.problem, _pscfg(), rng=jax.random.PRNGKey(0))
+    engine.run(until_round=2)
+    engine.save(path)
+    other = PSEngine(game.problem, _pscfg(), rng=jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="different seed"):
+        other.restore(path)
