@@ -50,10 +50,12 @@ def run(seed: int = 0) -> dict:
         dt = time.perf_counter() - t0
         res = float(game.residual(zbar))
         out[name] = res
+        sps = engine.trace.steps_per_sec or 0.0
         emit(f"async[{name}]", dt * 1e6,
              f"residual={res:.4f};rounds={R};"
              f"steps={engine.trace.total_steps};"
-             f"bytes_up={engine.trace.total_bytes_up:.0f}")
+             f"bytes_up={engine.trace.total_bytes_up:.0f};"
+             f"steps_per_sec={sps:.0f}")
 
     # single-thread SEGDA with M·K·R iterations, batch = 1 (paper E.1 second)
     t0 = time.perf_counter()

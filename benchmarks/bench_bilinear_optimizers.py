@@ -5,6 +5,12 @@ bilinear game, matched computation/communication structure (M = 4, K = 50):
 * MB-SEGDA / MB-UMP / MB-ASMP — R steps of minibatch K·M
 * LocalSGDA / LocalSEGDA / LocalAdam — K local steps, uniform averaging
 
+Every Local* method (LocalAdaSEG included) runs through the unified
+Parameter-Server engine (``repro.ps.PSEngine``) — identity config, so the
+trajectories equal the historical one-shot drivers — and reports the
+engine's local-steps/sec throughput; the MB-* baselines are single-worker
+``run_serial`` over the K·M minibatch oracle.
+
 Expected reproduction: adaptive methods (LocalAdaSEG, MB-UMP, MB-ASMP)
 beat the fixed-lr ones; per communication round LocalAdaSEG converges
 fastest (paper Fig. 4 b/d).
@@ -16,18 +22,19 @@ import time
 import jax
 import numpy as np
 
-from repro.core import AdaSEGConfig, run_local_adaseg
+from repro.core import AdaSEGConfig
 from repro.optim import (
+    MinimaxWorker,
     adam_minimax,
     asmp,
     minibatch,
-    run_local,
     run_serial,
     segda,
     sgda,
     ump,
 )
 from repro.problems import make_bilinear_game
+from repro.ps import PSConfig, PSEngine
 
 from .common import emit
 
@@ -43,12 +50,23 @@ def run(seed: int = 0) -> dict:
         p = game.problem
         runs = {}
 
-        t0 = time.perf_counter()
-        zbar, _ = run_local_adaseg(
-            p, AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=K),
-            num_workers=M, rounds=R, rng=jax.random.PRNGKey(seed + 1),
-        )
-        runs["LocalAdaSEG"] = (game.residual(zbar), time.perf_counter() - t0)
+        local = {"LocalAdaSEG": dict(
+            adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=K))}
+        for name, opt in (
+            ("LocalSGDA", sgda(0.05)),
+            ("LocalSEGDA", segda(0.05)),
+            ("LocalAdam", adam_minimax(0.02)),
+        ):
+            local[name] = dict(worker=MinimaxWorker(opt), local_k=K)
+
+        for name, opt_kw in local.items():
+            engine = PSEngine(
+                p, PSConfig(num_workers=M, rounds=R, **opt_kw),
+                rng=jax.random.PRNGKey(
+                    seed + 1 if name == "LocalAdaSEG" else seed + 3),
+            )
+            zbar = engine.run()
+            runs[name] = (game.residual(zbar), engine.trace.total_wall_time_s)
 
         mb = minibatch(p, K * M)
         for name, opt in (
@@ -60,17 +78,6 @@ def run(seed: int = 0) -> dict:
             st, _ = run_serial(opt, mb, steps=R, rng=jax.random.PRNGKey(seed + 2),
                                record_every=R)
             runs[name] = (game.residual(st.z_bar), time.perf_counter() - t0)
-
-        for name, opt in (
-            ("LocalSGDA", sgda(0.05)),
-            ("LocalSEGDA", segda(0.05)),
-            ("LocalAdam", adam_minimax(0.02)),
-        ):
-            t0 = time.perf_counter()
-            st, _ = run_local(opt, p, num_workers=M, local_k=K, rounds=R,
-                              rng=jax.random.PRNGKey(seed + 3))
-            zg = jax.tree.map(lambda v: v.mean(0), st.z_bar)
-            runs[name] = (game.residual(zg), time.perf_counter() - t0)
 
         for name, (res, dt) in runs.items():
             emit(f"bilinear_opt[sigma={sigma},{name}]", dt * 1e6,

@@ -71,9 +71,11 @@ def run(seed: int = 0) -> dict:
         if dense_up is None:
             dense_up = up
         out[comp.name] = res
+        sps = engine.trace.steps_per_sec or 0.0
         emit(f"ps[compress,{comp.name}]", dt * 1e6,
              f"residual={res:.4f};bytes_up={up:.0f};"
-             f"ratio={dense_up / max(up, 1.0):.2f}x")
+             f"ratio={dense_up / max(up, 1.0):.2f}x;"
+             f"steps_per_sec={sps:.0f}")
 
     for p_fail in (0.0, 0.1, 0.3):
         faults = BernoulliFaults(p=p_fail, seed=seed + 3) if p_fail else None
@@ -84,8 +86,10 @@ def run(seed: int = 0) -> dict:
         res = float(game.residual(zbar))
         out[f"dropout-{p_fail}"] = res
         alive = sum(sum(r.alive) for r in engine.trace.rounds)
+        sps = engine.trace.steps_per_sec or 0.0
         emit(f"ps[dropout,p={p_fail}]", dt * 1e6,
-             f"residual={res:.4f};alive_worker_rounds={alive}/{M * R}")
+             f"residual={res:.4f};alive_worker_rounds={alive}/{M * R};"
+             f"steps_per_sec={sps:.0f}")
 
     for alpha in (None, 0.5, 0.1):
         problem = game.problem if alpha is None else heterogeneous_bilinear(
@@ -99,8 +103,10 @@ def run(seed: int = 0) -> dict:
         res = float(game.residual(zbar))
         tag = "iid" if alpha is None else f"a={alpha}"
         out[f"hetero-{tag}"] = res
+        sps = engine.trace.steps_per_sec or 0.0
         emit(f"ps[hetero,{tag}+stragglers]", dt * 1e6,
-             f"residual={res:.4f};steps={engine.trace.total_steps}")
+             f"residual={res:.4f};steps={engine.trace.total_steps};"
+             f"steps_per_sec={sps:.0f}")
 
     return out
 

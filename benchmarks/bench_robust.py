@@ -9,8 +9,9 @@ import time
 import jax
 
 from repro.core import AdaSEGConfig, kkt_residual, run_local_adaseg
-from repro.optim import minibatch, run_local, run_serial, segda, sgda
+from repro.optim import MinimaxWorker, minibatch, run_serial, segda, sgda
 from repro.problems import make_robust_logistic
+from repro.ps import PSConfig, PSEngine
 
 from .common import emit
 
@@ -38,10 +39,14 @@ def run(seed: int = 0) -> dict:
                        float(rl.objective(st.z_bar)),
                        time.perf_counter() - t0)
 
+    # engine in one chunk (no per-round history) — same trajectory/seed as
+    # the historical run_local driver
     t0 = time.perf_counter()
-    st, _ = run_local(sgda(0.05), p, num_workers=M, local_k=K, rounds=R,
-                      rng=jax.random.PRNGKey(seed + 3))
-    zg = jax.tree.map(lambda v: v.mean(0), st.z_bar)
+    engine = PSEngine(
+        p, PSConfig(num_workers=M, rounds=R,
+                    worker=MinimaxWorker(sgda(0.05)), local_k=K),
+        rng=jax.random.PRNGKey(seed + 3))
+    zg = engine.run()
     out["LocalSGDA"] = (float(kkt_residual(p, zg)), float(rl.objective(zg)),
                         time.perf_counter() - t0)
 

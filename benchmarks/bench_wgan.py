@@ -15,9 +15,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import AdaSEGConfig, run_local_adaseg
-from repro.optim import adam_minimax, asmp, minibatch, run_local, run_serial, ump
+from repro.optim import (
+    MinimaxWorker,
+    adam_minimax,
+    asmp,
+    minibatch,
+    run_serial,
+    ump,
+)
 from repro.problems import make_wgan_problem
-from repro.ps import heterogeneous_wgan
+from repro.ps import PSConfig, PSEngine, heterogeneous_wgan
 
 from .common import emit
 
@@ -65,10 +72,15 @@ def run(seed: int = 0, heterogeneous: bool = False, alpha: float = 0.6):
                            record_every=R * K)
         out[name] = scores(st.z) + ((time.perf_counter() - t0),)
 
+    # engine in one chunk (history discarded anyway) — same trajectory/seed
+    # as the historical run_local driver
     t0 = time.perf_counter()
-    st, _ = run_local(adam_minimax(2e-3), p, num_workers=M, local_k=K,
-                      rounds=R, rng=jax.random.PRNGKey(seed + 3))
-    z_adam = jax.tree.map(lambda v: v[0], st.z)
+    engine = PSEngine(
+        p, PSConfig(num_workers=M, rounds=R,
+                    worker=MinimaxWorker(adam_minimax(2e-3)), local_k=K),
+        rng=jax.random.PRNGKey(seed + 3))
+    engine.run()
+    z_adam = jax.tree.map(lambda v: v[0], engine.state.z)
     out["LocalAdam"] = scores(z_adam) + ((time.perf_counter() - t0),)
 
     for name, (w_est, md, dt) in out.items():

@@ -5,6 +5,8 @@ docstring for the figure it reproduces):
 
     fig3   bench_bilinear_ksweep      K/σ sweep on the bilinear game
     fig4   bench_bilinear_optimizers  optimizer-zoo comparison
+    fig4x  bench_fig4_scenarios       the zoo + LocalAdaSEG on the PS engine
+                                      under hetero/compression/dropout/faults
     figE1  bench_async                async/heterogeneous-K + SEGDA-MKR
     extra  bench_ps                   PS runtime: compression/dropout/hetero
     figE1d bench_vt_growth            V_t cumulative gradient growth
@@ -29,6 +31,7 @@ def main() -> int:
         bench_async,
         bench_bilinear_ksweep,
         bench_bilinear_optimizers,
+        bench_fig4_scenarios,
         bench_kernels,
         bench_ps,
         bench_robust,
@@ -39,6 +42,7 @@ def main() -> int:
     benches = [
         ("fig3:bilinear_ksweep", bench_bilinear_ksweep.main),
         ("fig4:bilinear_optimizers", bench_bilinear_optimizers.main),
+        ("fig4x:fig4_scenarios", bench_fig4_scenarios.main),
         ("figE1:async", bench_async.main),
         ("extra:ps_runtime", bench_ps.main),
         ("figE1d:vt_growth", bench_vt_growth.main),

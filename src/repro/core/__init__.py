@@ -14,11 +14,14 @@ from .adaseg import (
 )
 from .metrics import kkt_residual
 from .types import MinimaxProblem, from_loss
+from .worker import AdaSEGWorker, LocalWorker
 from . import projections, tree
 
 __all__ = [
     "AdaSEGConfig",
     "AdaSEGState",
+    "AdaSEGWorker",
+    "LocalWorker",
     "StepAux",
     "MinimaxProblem",
     "eta_of",

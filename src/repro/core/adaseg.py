@@ -20,6 +20,12 @@ step code runs in three harnesses:
     see ``launch.sharded.run_local_adaseg_sharded``),
   * single worker (degenerates to the serial AdaSEG of Bach & Levy '19).
 
+The configurable production runtime (schedules, compression, faults,
+checkpoint/resume) is ``repro.ps.PSEngine``, which consumes this module
+through ``core.worker.AdaSEGWorker`` — the LocalWorker-protocol face of
+Algorithm 1 — and stays bit-exact with :func:`run_local_adaseg` in the
+identity configuration.
+
 Step backends
 -------------
 The inner extragradient update is pluggable (``backend=`` on

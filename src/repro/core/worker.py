@@ -1,0 +1,161 @@
+"""The LocalWorker protocol: one contract for every optimizer the PS runs.
+
+The Parameter-Server engine (``repro.ps.engine``) owns rounds, schedules,
+compression, faults, checkpointing and telemetry; a :class:`LocalWorker`
+owns everything optimizer-specific inside a round. The split lets the whole
+zoo of §4/Fig. 4 (LocalSGDA, LocalSEGDA, Local Adam, the MB-* adaptive
+mirror-prox family) run on the exact same production runtime as LocalAdaSEG
+— heterogeneous K_m^r, quantized uplinks, worker failures, bit-exact resume
+— instead of through a second feature-poor driver stack.
+
+The contract (all methods are pure JAX functions):
+
+* ``init(problem, rng, worker_id)`` — one worker's initial state. The state
+  must be a pytree of arrays (NamedTuple/dict) so the engine can vmap it
+  over a stacked worker axis, shard it with ``shard_map``, flatten it for
+  the compression/telemetry byte accounting, and round-trip it through
+  ``checkpoint.serialize`` leaf-by-leaf.
+* ``step(problem, state, rng, enabled=...)`` — one local step. ``enabled``
+  (bool scalar or None) masks the update: a disabled worker must return its
+  state unchanged — the mechanism behind heterogeneous per-round step
+  counts K_m^r and fault masking.
+* ``sync_weight(state)`` — scalar weight of this worker in the Line-7
+  server average. LocalAdaSEG returns 1/η (the paper's inverse-stepsize
+  weighting); plain optimizers return 1 (uniform FedAvg weighting).
+* ``sync_payload(state)`` / ``merge_synced(state, payload)`` — which part
+  of the state is averaged by the server (the anchor z̃ for AdaSEG, the
+  iterate z for the zoo) and how the averaged value is installed. Both must
+  be *structural* (attribute access / ``_replace``) so the same code works
+  on a per-worker state, a vmap-stacked state and a per-shard state.
+* ``output(state)`` — the per-worker output iterate (the running average
+  z̄); the engine combines these with realized-step-count weights into the
+  Line-14 global output.
+* ``eta(state)`` — scalar step size, telemetry only (η spread per round).
+* ``derive_rngs(rng, num_workers)`` — how the top-level key splits into
+  (round stream base, per-worker init keys). This is part of the protocol
+  so the engine can reproduce each optimizer family's *pre-existing* rng
+  stream bit-exactly: AdaSEG uses ``split(rng, M+1)`` (the historical
+  ``run_local_adaseg`` derivation), the zoo uses the historical
+  ``run_local`` pair-split. Everything downstream (per-round step keys,
+  sync keys) is derived identically by the engine for all workers.
+* ``flatten_state`` / ``unflatten_state`` — explicit pytree boundary used
+  by checkpointing and byte accounting; the defaults defer to
+  ``jax.tree`` and almost never need overriding.
+
+``fingerprint`` hashes ``name`` (which should encode the hyper-parameters)
+so the engine can refuse to restore a checkpoint written by a different
+optimizer the same way it refuses a different seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .adaseg import AdaSEGConfig, eta_of, init as adaseg_init, local_step
+from .types import MinimaxProblem
+
+PyTree = Any
+
+
+class LocalWorker:
+    """Base protocol; subclasses fill in the optimizer-specific pieces."""
+
+    name: str = "worker"
+
+    # -- required ----------------------------------------------------------
+
+    def init(self, problem: MinimaxProblem, rng, worker_id=0) -> PyTree:
+        raise NotImplementedError
+
+    def step(self, problem: MinimaxProblem, state: PyTree, rng, *,
+             enabled=None) -> PyTree:
+        raise NotImplementedError
+
+    def sync_payload(self, state: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    def merge_synced(self, state: PyTree, payload: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    def output(self, state: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    # -- defaults ----------------------------------------------------------
+
+    def sync_weight(self, state: PyTree) -> jax.Array:
+        return jnp.float32(1.0)
+
+    def eta(self, state: PyTree) -> jax.Array:
+        return 1.0 / self.sync_weight(state)
+
+    def derive_rngs(self, rng, num_workers: int):
+        """(rng, M) -> (round-stream base key, (M, 2) per-worker init keys).
+        Default: the historical ``optim.base.run_local`` derivation."""
+        rng0, sub = jax.random.split(jnp.asarray(rng))
+        return rng0, jax.random.split(sub, num_workers)
+
+    def flatten_state(self, state: PyTree):
+        return jax.tree.flatten(state)
+
+    def unflatten_state(self, treedef, leaves) -> PyTree:
+        return jax.tree.unflatten(treedef, leaves)
+
+    @property
+    def fingerprint(self) -> int:
+        """uint32 identity hash, stored in checkpoints so a restore with a
+        different optimizer (or hyper-parameters) is rejected."""
+        return zlib.crc32(self.name.encode())
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaSEGWorker(LocalWorker):
+    """LocalAdaSEG as a LocalWorker — the paper's Algorithm 1.
+
+    Wraps ``core.adaseg`` verbatim: the same ``local_step`` (with the
+    ``"reference" | "fused"`` Pallas backend passing through), 1/η sync
+    weights, the anchor z̃ as sync payload, and the historical
+    ``run_local_adaseg`` rng derivation — so the engine with this worker,
+    identity compression, no faults and a uniform schedule stays
+    **bit-exact** with the one-shot serial driver.
+    """
+
+    cfg: AdaSEGConfig
+    backend: str = "reference"
+
+    @property
+    def name(self) -> str:
+        c = self.cfg
+        return (f"adaseg(g0={c.g0},D={c.diameter},alpha={c.alpha},"
+                f"avg={c.average_output})")
+
+    def init(self, problem, rng, worker_id=0):
+        return adaseg_init(problem, self.cfg, rng, worker_id)
+
+    def step(self, problem, state, rng, *, enabled=None):
+        new, _ = local_step(problem, self.cfg, state, rng, enabled=enabled,
+                            backend=self.backend)
+        return new
+
+    def sync_weight(self, state):
+        return 1.0 / eta_of(self.cfg, state.sum_sq)
+
+    def eta(self, state):
+        return eta_of(self.cfg, state.sum_sq)
+
+    def sync_payload(self, state):
+        return state.z_tilde
+
+    def merge_synced(self, state, payload):
+        return state._replace(z_tilde=payload)
+
+    def output(self, state):
+        return state.z_bar
+
+    def derive_rngs(self, rng, num_workers: int):
+        # bit-identical to core.adaseg.run_local_adaseg
+        init_rngs = jax.random.split(jnp.asarray(rng), num_workers + 1)
+        return init_rngs[0], init_rngs[1:]

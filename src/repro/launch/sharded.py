@@ -26,6 +26,12 @@ dense psum with e.g. a compressed-psum from ``repro.ps.compress``
 (fold_in(round_rng, 7), split per worker — the PS engine's derivation):
 with the default non-partitionable threefry, key derivation inside the jit
 that feeds a shard_map would be re-sharded and silently change the stream.
+
+This module remains the *one-shot* sharded driver for Algorithm 1. The
+configurable runtime — schedules × compression × faults × resume, for
+LocalAdaSEG and the whole optimizer zoo — is ``repro.ps.PSEngine`` with
+``mesh=``, whose sharded chunk reproduces this driver's psum-sync and rng
+semantics (parity-pinned in ``tests/test_distributed.py``).
 """
 from __future__ import annotations
 

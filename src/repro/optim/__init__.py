@@ -1,6 +1,8 @@
-"""Optimizer zoo + generic serial/local drivers (paper baselines)."""
+"""Optimizer zoo (paper baselines) + their door into the unified PS runtime:
+``MinimaxWorker`` lifts any zoo optimizer onto ``repro.ps.PSEngine``."""
 from .base import (
     MinimaxOptimizer,
+    MinimaxWorker,
     OptState,
     average_stacked,
     base_init,
@@ -12,6 +14,7 @@ from .methods import adam_minimax, asmp, segda, sgda, ump
 
 __all__ = [
     "MinimaxOptimizer",
+    "MinimaxWorker",
     "OptState",
     "adam_minimax",
     "asmp",

@@ -6,15 +6,22 @@ pair of pure functions over an :class:`OptState`:
     init(problem, rng)          -> OptState
     step(problem, state, rng)   -> OptState
 
-with optimizer-specific extras living in ``state.inner``. Two generic
-drivers consume them:
+with optimizer-specific extras living in ``state.inner``. Execution:
 
 * :func:`run_serial`  — single worker, T steps (and, combined with
   :func:`minibatch`, the paper's MB-* baselines: R steps of batch K·M).
-* :func:`run_local`   — M stacked workers, R rounds × K local steps with
-  periodic (optionally weighted) iterate averaging — the Local* family
-  (LocalSGDA, LocalSEGDA, Local Adam; LocalAdaSEG itself lives in
-  ``repro.core.adaseg`` with its inverse-η weighting).
+* :class:`MinimaxWorker` — lifts any :class:`MinimaxOptimizer` onto the
+  Parameter-Server runtime (``repro.ps.PSEngine``): the Local* family
+  (LocalSGDA, LocalSEGDA, Local Adam, and the local'ized UMP/ASMP) runs on
+  the *same* engine as LocalAdaSEG — schedules, compression, faults,
+  checkpoint/resume, telemetry, serial and ``shard_map`` paths included.
+* :func:`run_local`   — thin convenience wrapper over that engine with the
+  historical signature (M stacked workers, R rounds × K local steps with
+  periodic weighted iterate averaging). It reproduces the rng stream and
+  trajectories of the pre-engine hand-rolled driver.
+
+LocalAdaSEG itself lives in ``repro.core.adaseg`` (with its inverse-η
+weighting) and enters the engine through ``core.worker.AdaSEGWorker``.
 """
 from __future__ import annotations
 
@@ -25,8 +32,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from ..core.tree import tree_zeros_like
+from ..core.tree import tree_where, tree_zeros_like
 from ..core.types import MinimaxProblem
+from ..core.worker import LocalWorker
 
 PyTree = Any
 
@@ -36,7 +44,10 @@ class OptState(NamedTuple):
     z_bar: PyTree    # running uniform average of exploration iterates
     t: jax.Array     # step count (int32)
     inner: PyTree    # optimizer-specific state
-    worker_id: jax.Array = None  # int32 — heterogeneous sampler tag
+    # int32 heterogeneous-sampler tag. None only for states built outside
+    # base_init (every driver in this repo goes through base_init or
+    # _replace's it); core.types.draw treats None as "use the iid sampler".
+    worker_id: jax.Array | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +96,53 @@ def minibatch(problem: MinimaxProblem, batch: int) -> MinimaxProblem:
         problem, sample=sample, oracle=oracle, sample_worker=sample_worker,
         name=f"{problem.name}@mb{batch}",
     )
+
+
+# ---------------------------------------------------------------------------
+# LocalWorker adapter — the zoo's door into the PS engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MinimaxWorker(LocalWorker):
+    """Any :class:`MinimaxOptimizer` as a Parameter-Server LocalWorker.
+
+    Sync payload is the current iterate ``z`` (periodic iterate averaging,
+    weighted by ``opt.sync_weight`` — uniform FedAvg for the fixed-lr
+    methods, 1/η for UMP/ASMP); optimizer inner state (Adam moments, UMP
+    accumulators) stays local across syncs, matching Local Adam of
+    Beznosikov et al. The inherited rng derivation is the historical
+    ``run_local`` split, so engine trajectories reproduce the pre-engine
+    driver's.
+    """
+
+    opt: MinimaxOptimizer
+
+    @property
+    def name(self) -> str:
+        return self.opt.name
+
+    def init(self, problem, rng, worker_id=0):
+        return self.opt.init(problem, rng)._replace(
+            worker_id=jnp.int32(worker_id)
+        )
+
+    def step(self, problem, state, rng, *, enabled=None):
+        new = self.opt.step(problem, state, rng)
+        if enabled is None:
+            return new
+        return tree_where(enabled, new, state)
+
+    def sync_weight(self, state):
+        return self.opt.sync_weight(state)
+
+    def sync_payload(self, state):
+        return state.z
+
+    def merge_synced(self, state, payload):
+        return state._replace(z=payload)
+
+    def output(self, state):
+        return state.z_bar
 
 
 # ---------------------------------------------------------------------------
@@ -141,34 +199,34 @@ def run_local(
     rounds: int,
     rng,
 ):
-    """Local-update periodic-averaging wrapper (the Local* baseline family).
+    """Local-update periodic-averaging driver (the Local* baseline family),
+    as a thin wrapper over the Parameter-Server engine.
 
     Each round: average all workers' current iterates z (weighted by
     ``opt.sync_weight``), then run ``local_k`` independent local steps.
-    Optimizer inner state (moments, accumulators) stays local — matching
-    Local Adam of Beznosikov et al. Returns the final state plus the
-    per-round global output-average history.
+    Returns the final stacked state plus the per-round global output-average
+    history — the historical ``run_local`` contract. Collecting that history
+    costs one engine dispatch + host sync per round; when you don't need it
+    (or need schedules, compression, faults, sharded execution or
+    checkpointing), drive ``repro.ps.PSEngine`` with ``MinimaxWorker(opt)``
+    directly and ``run()`` the rounds as one chunk.
     """
-    m = num_workers
-    rng, sub = jax.random.split(rng)
-    state = jax.vmap(
-        lambda r, w: opt.init(problem, r)._replace(worker_id=w)
-    )(jax.random.split(sub, m), jnp.arange(m, dtype=jnp.int32))
-    vstep = jax.vmap(lambda st, r: opt.step(problem, st, r))
-    vweight = jax.vmap(opt.sync_weight)
+    from ..ps.engine import PSConfig, PSEngine  # deferred: ps imports optim users
 
-    def round_fn(state, rng_round):
-        z_avg = average_stacked(state.z, vweight(state))
-        state = state._replace(z=z_avg)
-        rngs = jax.random.split(rng_round, local_k * m).reshape(local_k, m, 2)
-
-        def body(st, r):
-            return vstep(st, r), None
-
-        state, _ = lax.scan(body, state, rngs)
-        # Global output = uniform mean of worker averages (all t equal here).
-        out = jax.tree.map(lambda v: jnp.mean(v, axis=0), state.z_bar)
-        return state, out
-
-    state, history = lax.scan(round_fn, state, jax.random.split(rng, rounds))
-    return state, history
+    engine = PSEngine(
+        problem,
+        PSConfig(num_workers=num_workers, rounds=rounds,
+                 worker=MinimaxWorker(opt), local_k=local_k),
+        rng=rng,
+    )
+    history = []
+    for _ in range(rounds):
+        engine.step_round()
+        history.append(engine.z_bar())
+    if history:
+        history = jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+    else:  # rounds=0: empty history arrays, like the pre-engine lax.scan
+        history = jax.tree.map(
+            lambda v: jnp.zeros((0,) + v.shape, v.dtype), engine.z_bar()
+        )
+    return engine.state, history

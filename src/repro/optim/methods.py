@@ -100,7 +100,9 @@ def adam_minimax(
             worker_id=state.worker_id,
         )
 
-    return MinimaxOptimizer(name=f"adam(lr={lr})", init=init, step=step)
+    return MinimaxOptimizer(
+        name=f"adam(lr={lr},b1={b1},b2={b2},eps={eps})", init=init, step=step
+    )
 
 
 def ump(g0: float, diameter: float, alpha: float = 1.0) -> MinimaxOptimizer:
@@ -137,8 +139,12 @@ def ump(g0: float, diameter: float, alpha: float = 1.0) -> MinimaxOptimizer:
     def sync_weight(state: OptState) -> jax.Array:
         return jnp.sqrt(g0**2 + state.inner["sum_sq"]) / (diameter * alpha)
 
+    # name carries every hyper-parameter: it is the checkpoint fingerprint
+    # (LocalWorker.fingerprint), so a restore with a different D/alpha must
+    # hash differently and be rejected, not silently change eta.
     return MinimaxOptimizer(
-        name=f"ump(g0={g0})", init=init, step=step, sync_weight=sync_weight
+        name=f"ump(g0={g0},D={diameter},alpha={alpha})",
+        init=init, step=step, sync_weight=sync_weight
     )
 
 
@@ -175,5 +181,6 @@ def asmp(g0: float, diameter: float, alpha: float = 1.0) -> MinimaxOptimizer:
         return jnp.sqrt(g0**2 + state.inner["sum_sq"]) / (diameter * alpha)
 
     return MinimaxOptimizer(
-        name=f"asmp(g0={g0})", init=init, step=step, sync_weight=sync_weight
+        name=f"asmp(g0={g0},D={diameter},alpha={alpha})",
+        init=init, step=step, sync_weight=sync_weight
     )

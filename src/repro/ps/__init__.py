@@ -1,43 +1,56 @@
-"""Parameter-Server runtime: LocalAdaSEG's Algorithm 1 as a distributed-
-system simulator — heterogeneity, compression, faults and resume.
+"""Parameter-Server runtime: ONE engine for the whole optimizer zoo —
+heterogeneity, compression, faults, resume and telemetry, for LocalAdaSEG
+*and* every baseline the paper compares it against (§4/Fig. 4).
 
 The one-shot drivers (``core.adaseg.run_local_adaseg``,
 ``launch.sharded.run_local_adaseg_sharded``) execute an *idealized* PS: every
 worker synchronous, every message dense, nobody ever dies. This package turns
-the round loop into a configurable runtime. Map from engine hooks to the
-paper's Algorithm 1 (LocalAdaSEG) line numbers:
+the round loop into a configurable runtime, generic over the
+:class:`~repro.core.worker.LocalWorker` protocol:
+
+* ``PSConfig(adaseg=AdaSEGConfig(...))`` — the paper's Algorithm 1, with the
+  ``backend="reference" | "fused"`` Pallas step kernels passing through;
+* ``PSConfig(worker=MinimaxWorker(opt), local_k=K)`` — any zoo optimizer
+  (``optim.methods``: SGDA, SEGDA, minimax-Adam, UMP, ASMP) on the exact
+  same runtime, so the paper's comparison figures run under the same
+  hostile-fleet scenarios (``benchmarks/bench_fig4_scenarios.py``).
+
+Map from engine hooks to the paper's Algorithm 1 (LocalAdaSEG) lines:
 
 ====================  =====================================================
 Algorithm 1           engine hook
 ====================  =====================================================
-Line 3–4              ``WorkerSchedule`` → per-round K_m^r local
-(local extragradient  extragradient steps, run by ``core.adaseg.local_step``
-steps, adaptive η)    with the ``enabled`` mask; η stays the worker-local
-                      AdaGrad rate — stragglers simply take fewer steps.
+Line 3–4              ``WorkerSchedule`` → per-round K_m^r local steps, run
+(local steps,         by ``LocalWorker.step`` with the ``enabled`` mask;
+adaptive η)           adaptive rates stay worker-local — stragglers simply
+                      take fewer steps.
 Line 5                ``SyncCompressor`` → each survivor uploads a
-(workers → server)    compressed w·z̃ message (bytes-up telemetry); biased
-                      codecs run under error feedback.
-Line 6                ``FaultPolicy`` → the inverse-stepsize weights
-(weights w ∝ 1/η)     w_m ∝ 1/η_m are renormalized over the round's
-                      survivors; dead workers keep their stale anchor.
+(workers → server)    compressed w·payload message (bytes-up telemetry);
+                      biased codecs run under error feedback.
+Line 6                ``FaultPolicy`` → the sync weights (1/η for AdaSEG,
+(weights w ∝ 1/η)     uniform for the plain zoo) are renormalized over the
+                      round's survivors; dead workers keep a stale payload.
 Line 7                server sums the decompressed messages — identity
 (weighted average)    compression reproduces ``sync_weighted_stacked``
                       bit-exactly; sharded execution collapses this to one
                       ``lax.psum`` all-reduce.
-Line 8                survivors receive the new anchor z̃° (bytes-down
+Line 8                survivors receive the new anchor/iterate (bytes-down
 (server → workers)    telemetry).
-Line 14               ``PSEngine.z_bar`` → worker means weighted by
+Line 14               ``PSEngine.z_bar`` → worker outputs weighted by
 (global output z̄)     *realized* step counts (``weighted_worker_average``).
 ====================  =====================================================
 
 ``PSEngine`` drives both execution paths (serial vmap / ``shard_map`` with a
-compressed psum) with ``backend="reference" | "fused"`` passing through to
-the step kernels, records per-round traces (``ps.trace``), and checkpoints
-mid-stream via ``checkpoint.serialize`` — schedules and fault traces are
-deterministic functions of their seeds, so a resumed run replays the exact
-same scenario. ``ps.partition`` carves Dirichlet-skewed per-worker oracles
-so homogeneous vs heterogeneous data is a config flag.
+compressed psum), records per-round traces with wall-clock and
+local-steps/sec throughput (``ps.trace``), and checkpoints mid-stream via
+``checkpoint.serialize`` — schedules and fault traces are deterministic
+functions of their seeds, so a resumed run replays the exact same scenario,
+and optimizer-specific ``inner`` state (Adam moments, UMP accumulators)
+round-trips bit-exactly. Restores from a different seed or optimizer are
+rejected. ``ps.partition`` carves Dirichlet-skewed per-worker oracles so
+homogeneous vs heterogeneous data is a config flag.
 """
+from ..core.worker import AdaSEGWorker, LocalWorker
 from .compress import (
     IdentityCompressor,
     StochasticQuantizeCompressor,
@@ -64,11 +77,13 @@ from .schedule import (
 from .trace import RoundRecord, TraceRecorder
 
 __all__ = [
+    "AdaSEGWorker",
     "BernoulliFaults",
     "ElasticSchedule",
     "FaultPolicy",
     "FixedSchedule",
     "IdentityCompressor",
+    "LocalWorker",
     "NoFaults",
     "OutageFaults",
     "PSConfig",

@@ -1,42 +1,47 @@
-"""Parameter-Server round engine for LocalAdaSEG (Algorithm 1 at fleet scale).
+"""Parameter-Server round engine — optimizer-generic (Algorithm 1 at fleet
+scale, for the whole zoo).
 
 The engine owns the round loop of the paper's Parameter-Server model and
 threads the pluggable policies through it:
 
+* :class:`~repro.core.worker.LocalWorker` → everything optimizer-specific:
+  init, the (enabled-masked) local step, the Line-7 sync weight/payload,
+  the output iterate. ``AdaSEGWorker`` is the paper's Algorithm 1;
+  ``optim.base.MinimaxWorker`` lifts every zoo baseline (SGDA, SEGDA,
+  Adam, UMP, ASMP) onto the same runtime;
 * :class:`~repro.ps.schedule.WorkerSchedule` → per-round, per-worker local
-  step counts K_m^r (Line 3–4), fed through the ``enabled`` masking of
-  ``core.adaseg.local_step``;
+  step counts K_m^r (Line 3–4), fed through the worker's ``enabled`` mask;
 * :class:`~repro.ps.compress.SyncCompressor` → lossy codec for the uphill
-  w·z̃ messages (Line 5/7), with error feedback when the codec is biased;
+  w·payload messages (Line 5/7), with error feedback when biased;
 * :class:`~repro.ps.faults.FaultPolicy` → per-round worker failures, with
-  the inverse-stepsize weights w ∝ 1/η renormalized over survivors
-  (Line 6–7) and dead workers keeping their stale anchor;
+  the sync weights renormalized over survivors (Line 6–7) and dead workers
+  keeping their stale payload;
 * :class:`~repro.ps.trace.TraceRecorder` → per-round telemetry (bytes
-  up/down, effective K, η spread, residual).
+  up/down, effective K, η spread, wall-clock, local-steps/sec, residual).
 
 Two execution paths, same semantics:
 
-* ``mesh=None`` — the serial vmap path (a stacked worker axis, like
-  ``core.adaseg.run_local_adaseg``). With the identity compressor, no
-  faults and a uniform schedule this path is **bit-exact** with
-  ``run_local_adaseg``: the rng derivation, sync expression and Line-14
-  output average are the identical JAX expressions.
+* ``mesh=None`` — the serial vmap path (a stacked worker axis). With the
+  AdaSEG worker, the identity compressor, no faults and a uniform schedule
+  this path is **bit-exact** with ``core.adaseg.run_local_adaseg``; with a
+  ``MinimaxWorker`` it reproduces the historical ``optim.base.run_local``
+  trajectories (each worker carries its family's rng derivation).
 * ``mesh=...`` — one worker per shard of ``worker_axes`` via ``shard_map``,
-  with Line 7 as a single psum all-reduce of the (compressed) w·z̃
+  with Line 7 as a single psum all-reduce of the (compressed) weighted
   messages, like ``launch.sharded.run_local_adaseg_sharded``.
 
-The step backend (``"reference"`` tree ops / ``"fused"`` Pallas kernels)
-passes through unchanged to ``core.adaseg.local_step``.
-
-Checkpointed execution: the engine state (per-worker AdaSEG state, error-
-feedback memory, round counter, seed fingerprint) serializes through
-``checkpoint.serialize``; schedules and fault traces are *re-derived* from
-the config seeds rather than stored, so a killed run resumes bit-exactly
-(serial) mid-stream.
+Checkpointed execution: the engine state (per-worker optimizer state —
+including optimizer-specific ``inner`` extras like Adam moments or UMP
+accumulators — error-feedback memory, round counter, seed and optimizer
+fingerprints) serializes through ``checkpoint.serialize``; schedules and
+fault traces are *re-derived* from the config seeds rather than stored, so
+a killed run resumes bit-exactly (serial) mid-stream. Restores from a
+different seed *or a different optimizer* are rejected.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -45,16 +50,10 @@ import numpy as np
 from jax import lax
 
 from ..checkpoint.serialize import load_pytree, save_pytree
-from ..core.adaseg import (
-    AdaSEGConfig,
-    AdaSEGState,
-    eta_of,
-    init,
-    local_step,
-    weighted_worker_average,
-)
+from ..core.adaseg import AdaSEGConfig, weighted_worker_average
 from ..core.tree import tree_add, tree_sub, tree_where, tree_zeros_like
 from ..core.types import MinimaxProblem
+from ..core.worker import AdaSEGWorker, LocalWorker
 from .compress import IdentityCompressor, SyncCompressor, dense_bytes
 from .faults import FaultPolicy, NoFaults
 from .schedule import UniformSchedule, WorkerSchedule
@@ -65,15 +64,56 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class PSConfig:
-    """Everything the Parameter-Server simulator needs beyond the problem."""
+    """Everything the Parameter-Server simulator needs beyond the problem.
 
-    adaseg: AdaSEGConfig
+    The optimizer is given either as ``adaseg=`` (an :class:`AdaSEGConfig`,
+    wrapped into an :class:`AdaSEGWorker` with ``backend`` — the historical
+    spelling, kept as the primary one for the paper's method) or as
+    ``worker=`` (any :class:`LocalWorker`, e.g. ``MinimaxWorker(sgda(...))``
+    for the zoo). Generic workers carry no communication interval of their
+    own, so give them ``local_k=`` (or an explicit ``schedule=``).
+    """
+
     num_workers: int
     rounds: int
-    schedule: WorkerSchedule | None = None   # default: uniform adaseg.k
+    adaseg: AdaSEGConfig | None = None       # AdaSEG spelling (+ backend)
+    worker: LocalWorker | None = None        # generic spelling
+    local_k: int | None = None               # uniform K for generic workers
+    schedule: WorkerSchedule | None = None   # default: uniform K
     compressor: SyncCompressor | None = None  # default: identity
     faults: FaultPolicy | None = None        # default: no faults
-    backend: str = "reference"               # step backend, passes through
+    backend: str = "reference"               # AdaSEG step backend
+
+
+def _resolve_worker(config: PSConfig) -> LocalWorker:
+    if config.worker is not None and config.adaseg is not None:
+        raise ValueError("give either adaseg= or worker=, not both")
+    if config.worker is not None:
+        if config.backend != "reference":
+            # backend only parameterizes the AdaSEGWorker this config would
+            # build; a custom worker brings its own — don't ignore it silently
+            raise ValueError(
+                "backend= has no effect on an explicit worker=; set the "
+                "backend on the worker itself (e.g. AdaSEGWorker(cfg, "
+                "backend=...))"
+            )
+        return config.worker
+    if config.adaseg is not None:
+        return AdaSEGWorker(config.adaseg, backend=config.backend)
+    raise ValueError("PSConfig needs adaseg= or worker=")
+
+
+def _resolve_schedule(config: PSConfig) -> WorkerSchedule:
+    if config.schedule is not None:
+        return config.schedule
+    if config.local_k is not None:
+        return UniformSchedule(config.local_k)
+    if config.adaseg is not None:
+        return UniformSchedule(config.adaseg.k)
+    raise ValueError(
+        "a generic worker has no communication interval of its own — "
+        "give PSConfig a schedule= or local_k="
+    )
 
 
 def _per_worker(mask, leaf):
@@ -82,7 +122,7 @@ def _per_worker(mask, leaf):
 
 
 class PSEngine:
-    """Configurable Parameter-Server runtime for LocalAdaSEG."""
+    """Configurable Parameter-Server runtime, generic over LocalWorker."""
 
     def __init__(
         self,
@@ -97,7 +137,8 @@ class PSEngine:
     ):
         self.problem = problem
         self.config = config
-        self.schedule = config.schedule or UniformSchedule(config.adaseg.k)
+        self.worker = _resolve_worker(config)
+        self.schedule = _resolve_schedule(config)
         self.compressor = config.compressor or IdentityCompressor()
         self.faults = config.faults or NoFaults()
         self.eval_fn = eval_fn
@@ -133,32 +174,36 @@ class PSEngine:
             self._eff_steps, axis=0
         ).astype(np.float32)
 
-        # RNG derivation — bit-identical to core.adaseg.run_local_adaseg.
-        rng = jnp.asarray(rng)
-        init_rngs = jax.random.split(rng, m + 1)
-        rng0, worker_rngs = init_rngs[0], init_rngs[1:]
+        # RNG derivation — each worker family keeps its historical stream
+        # (AdaSEG: run_local_adaseg's; the zoo: run_local's), so the engine
+        # reproduces the pre-engine drivers bit-exactly.
+        rng0, worker_rngs = self.worker.derive_rngs(jnp.asarray(rng), m)
         self._rng0 = np.asarray(rng0)
         self._round_rngs = jax.random.split(rng0, r)          # (R, 2)
-        self._state: AdaSEGState = jax.vmap(
-            lambda rr, w: init(problem, config.adaseg, rr, w)
+        self._state: PyTree = jax.vmap(
+            lambda rr, w: self.worker.init(problem, rr, w)
         )(worker_rngs, jnp.arange(m, dtype=jnp.int32))
         self._ef: PyTree = (
-            tree_zeros_like(self._state.z_tilde)
+            tree_zeros_like(self.worker.sync_payload(self._state))
             if self.compressor.error_feedback else ()
         )
         self.round = 0
 
-        z_like = jax.tree.map(lambda v: v[0], self._state.z_tilde)
+        z_like = jax.tree.map(
+            lambda v: v[0], self.worker.sync_payload(self._state)
+        )
         self._msg_bytes = self.compressor.message_bytes(z_like)
         self._dense_bytes = dense_bytes(z_like)
         self.trace = TraceRecorder(meta={
             "problem": problem.name,
+            "optimizer": self.worker.name,
             "workers": m,
             "rounds": r,
             "schedule": type(self.schedule).__name__,
             "compressor": self.compressor.name,
             "faults": type(self.faults).__name__,
-            "backend": config.backend,
+            # the worker's actual step backend (None for workers without one)
+            "backend": getattr(self.worker, "backend", None),
             "execution": "sharded" if mesh is not None else "serial",
             **(trace_meta or {}),
         })
@@ -184,29 +229,30 @@ class PSEngine:
     # ------------------------------------------------------------------
 
     def _sync_stacked(self, state, ef, alive_r, c_rng):
-        """Line 5–8 on the stacked worker axis: compress(w·z̃) per worker,
-        server sum, broadcast to survivors. ``alive_r is None`` means the
-        fault policy statically guarantees everyone is up — that path emits
-        the *same expressions* as ``core.adaseg.sync_weighted_stacked``, so
-        identity/no-fault rounds stay bit-exact with the serial driver
-        (dynamic all-True masks would still perturb XLA fusion)."""
-        cfg = self.config.adaseg
+        """Line 5–8 on the stacked worker axis: compress(w·payload) per
+        worker, server sum, broadcast to survivors. ``alive_r is None``
+        means the fault policy statically guarantees everyone is up — that
+        path emits the *same expressions* as the one-shot drivers' syncs,
+        so identity/no-fault rounds stay bit-exact with them (dynamic
+        all-True masks would still perturb XLA fusion)."""
+        worker = self.worker
         comp = self.compressor
         m = self.config.num_workers
 
-        inv_eta = 1.0 / eta_of(cfg, state.sum_sq)             # (M,)
+        sw = jax.vmap(worker.sync_weight)(state)              # (M,)
         if alive_r is None:
             any_alive = None
-            w = inv_eta / jnp.sum(inv_eta)
+            w = sw / jnp.sum(sw)
         else:
-            w_raw = jnp.where(alive_r, inv_eta, jnp.zeros_like(inv_eta))
+            w_raw = jnp.where(alive_r, sw, jnp.zeros_like(sw))
             denom = jnp.sum(w_raw)
             any_alive = denom > 0.0
             w = w_raw / jnp.where(any_alive, denom, 1.0)
 
+        payload = worker.sync_payload(state)
         messages = jax.tree.map(
             lambda leaf: _per_worker(w, leaf).astype(leaf.dtype) * leaf,
-            state.z_tilde,
+            payload,
         )
         if comp.is_identity:
             sent, ef_new = messages, ef
@@ -234,7 +280,7 @@ class PSEngine:
                 ef_new = ef
 
         if alive_r is None:
-            z_tilde = jax.tree.map(
+            synced = jax.tree.map(
                 lambda s: jnp.broadcast_to(
                     jnp.sum(s, axis=0, keepdims=True), s.shape
                 ),
@@ -242,7 +288,7 @@ class PSEngine:
             )
         else:
             recv = jnp.logical_and(alive_r, any_alive)        # (M,)
-            z_tilde = jax.tree.map(
+            synced = jax.tree.map(
                 lambda s, old: jnp.where(
                     _per_worker(recv, old),
                     jnp.broadcast_to(
@@ -250,21 +296,19 @@ class PSEngine:
                     ),
                     old,
                 ),
-                sent, state.z_tilde,
+                sent, payload,
             )
-        return state._replace(z_tilde=z_tilde), ef_new
+        return worker.merge_synced(state, synced), ef_new
 
     def _make_serial_chunk(self):
-        problem, cfg = self.problem, self.config.adaseg
-        backend = self.config.backend
+        problem, worker = self.problem, self.worker
         m, k_pad = self.config.num_workers, self._k_pad
         eval_fn = self.eval_fn
 
         vstep = jax.vmap(
-            lambda st, rr, en: local_step(
-                problem, cfg, st, rr, enabled=en, backend=backend
-            )
+            lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
         )
+        veta = jax.vmap(worker.eta)
 
         no_faults = self._no_faults
 
@@ -277,7 +321,7 @@ class PSEngine:
                 jax.random.fold_in(rng_round, 7),
             )
 
-            # Line 3–4: K_m^r masked local extragradient steps.
+            # Line 3–4: K_m^r masked local steps.
             step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
                 k_pad, m, 2
             )
@@ -287,14 +331,14 @@ class PSEngine:
                 enabled = i < ks_r
                 if not no_faults:
                     enabled = jnp.logical_and(enabled, alive_r)
-                st, _ = vstep(st, rngs, enabled)
+                st = vstep(st, rngs, enabled)
                 return st, None
 
             state, _ = lax.scan(
                 body, state, (step_rngs, jnp.arange(k_pad))
             )
 
-            eta_end = eta_of(cfg, state.sum_sq)               # (M,)
+            eta_end = veta(state)                             # (M,)
             if eval_fn is None:
                 res = jnp.float32(jnp.nan)
             else:
@@ -303,7 +347,9 @@ class PSEngine:
                     jnp.ones_like(counts_r),
                 )
                 res = jnp.asarray(
-                    eval_fn(weighted_worker_average(state.z_bar, counts)),
+                    eval_fn(weighted_worker_average(
+                        worker.output(state), counts
+                    )),
                     dtype=jnp.float32,
                 )
             return (state, ef), (eta_end, res)
@@ -320,8 +366,7 @@ class PSEngine:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
-        problem, cfg = self.problem, self.config.adaseg
-        backend = self.config.backend
+        problem, worker = self.problem, self.worker
         comp = self.compressor
         m, k_pad = self.config.num_workers, self._k_pad
         axes = self._worker_axes
@@ -339,19 +384,20 @@ class PSEngine:
                 st, ef = carry
                 rngs_round, c_rng, k_m, al = inputs
 
-                # Line 5–8 as one all-reduce of the compressed w·z̃ message.
-                inv_eta = 1.0 / eta_of(cfg, st.sum_sq)
+                # Line 5–8 as one all-reduce of the compressed message.
+                sw = worker.sync_weight(st)
                 if no_faults:
                     # same expressions as core.adaseg.make_psum_sync
                     any_alive = None
-                    w = inv_eta / lax.psum(inv_eta, axes)
+                    w = sw / lax.psum(sw, axes)
                 else:
-                    w_raw = jnp.where(al, inv_eta, 0.0)
+                    w_raw = jnp.where(al, sw, 0.0)
                     denom = lax.psum(w_raw, axes)
                     any_alive = denom > 0.0
                     w = w_raw / jnp.where(any_alive, denom, 1.0)
+                payload = worker.sync_payload(st)
                 msg = jax.tree.map(
-                    lambda v: w.astype(v.dtype) * v, st.z_tilde
+                    lambda v: w.astype(v.dtype) * v, payload
                 )
                 if comp.is_identity:
                     sent, ef_new = msg, ef
@@ -367,11 +413,11 @@ class PSEngine:
                             ef_new = tree_where(al, ef_new, ef)
                 z_sum = jax.tree.map(lambda v: lax.psum(v, axes), sent)
                 if no_faults:
-                    st = st._replace(z_tilde=z_sum)
+                    st = worker.merge_synced(st, z_sum)
                 else:
                     recv = jnp.logical_and(al, any_alive)
-                    st = st._replace(
-                        z_tilde=tree_where(recv, z_sum, st.z_tilde)
+                    st = worker.merge_synced(
+                        st, tree_where(recv, z_sum, payload)
                     )
 
                 def body(s, inp):
@@ -379,16 +425,13 @@ class PSEngine:
                     enabled = i < k_m
                     if not no_faults:
                         enabled = jnp.logical_and(enabled, al)
-                    s, _ = local_step(
-                        problem, cfg, s, rngs, enabled=enabled,
-                        backend=backend,
-                    )
+                    s = worker.step(problem, s, rngs, enabled=enabled)
                     return s, None
 
                 st, _ = lax.scan(
                     body, st, (rngs_round, jnp.arange(k_pad))
                 )
-                return (st, ef_new), eta_of(cfg, st.sum_sq)
+                return (st, ef_new), worker.eta(st)
 
             (st, ef), etas = lax.scan(
                 round_body, (st0, ef0),
@@ -439,6 +482,7 @@ class PSEngine:
 
     def _run_chunk(self, r0: int, r1: int) -> None:
         sl = slice(r0, r1)
+        t0 = time.perf_counter()
         state, ef, etas, ress = self._chunk_fn(
             self._state, self._ef,
             self._round_rngs[sl],
@@ -446,14 +490,21 @@ class PSEngine:
             jnp.asarray(self._alive[sl]),
             jnp.asarray(self._counts_cum[sl]),
         )
+        jax.block_until_ready(state)
+        wall = time.perf_counter() - t0
         self._state, self._ef = state, ef
         self.round = r1
 
+        # Attribute the chunk's wall-clock uniformly across its rounds
+        # (dispatch is per-chunk; finer attribution would need per-round
+        # host sync, which is exactly what the chunked scan avoids).
+        per_round_wall = wall / max(r1 - r0, 1)
         etas = np.asarray(etas)
         ress = np.asarray(ress)
         for i, r in enumerate(range(r0, r1)):
             alive = self._alive[r]
             n_alive = int(alive.sum())
+            eff = int(self._eff_steps[r].sum())
             res = float(ress[i])
             if np.isnan(res):
                 res = None
@@ -470,6 +521,9 @@ class PSEngine:
                 eta_max=float(etas[i].max()),
                 eta_mean=float(etas[i].mean()),
                 residual=res,
+                wall_time_s=per_round_wall,
+                steps_per_sec=eff / per_round_wall if per_round_wall > 0
+                else None,
             ))
 
     def run(
@@ -499,17 +553,19 @@ class PSEngine:
         self._run_chunk(self.round, self.round + 1)
 
     @property
-    def state(self) -> AdaSEGState:
+    def state(self) -> PyTree:
         return self._state
 
     def z_bar(self) -> PyTree:
-        """Global output iterate: worker means weighted by realized step
-        counts — the same expression as the serial driver's Line 14."""
+        """Global output iterate: worker outputs weighted by realized step
+        counts — the same expression as the serial drivers' Line 14."""
         counts = self._eff_steps[:max(self.round, 1)].sum(axis=0)
         counts = counts.astype(np.float32)
         if counts.sum() == 0.0:
             counts = np.ones_like(counts)
-        return weighted_worker_average(self._state.z_bar, jnp.asarray(counts))
+        return weighted_worker_average(
+            self.worker.output(self._state), jnp.asarray(counts)
+        )
 
     # ------------------------------------------------------------------
     # Checkpointing
@@ -517,10 +573,11 @@ class PSEngine:
 
     def _ckpt_tree(self) -> dict:
         return {
-            "adaseg": self._state,
+            "worker_state": self._state,
             "ef": self._ef,
             "round": jnp.int32(self.round),
             "rng0": jnp.asarray(self._rng0),
+            "worker_fp": jnp.uint32(self.worker.fingerprint),
         }
 
     def save(self, path: str) -> None:
@@ -531,15 +588,27 @@ class PSEngine:
         """Resume mid-stream: policies and rng streams are re-derived from
         the config, so only the worker states, error-feedback memory and the
         round counter come from disk. Refuses checkpoints from a different
-        seed (the round-rng stream would silently diverge)."""
-        loaded = load_pytree(path, self._ckpt_tree())
+        seed (the round-rng stream would silently diverge) or a different
+        optimizer (the state leaves would be reinterpreted)."""
+        try:
+            loaded = load_pytree(path, self._ckpt_tree())
+        except ValueError as e:
+            raise ValueError(
+                "checkpoint does not match this engine's optimizer state "
+                f"layout ({self.worker.name}): {e}"
+            ) from e
+        if int(np.asarray(loaded["worker_fp"])) != self.worker.fingerprint:
+            raise ValueError(
+                "checkpoint was written by a run with a different optimizer "
+                f"(engine runs {self.worker.name})"
+            )
         if not np.array_equal(
             np.asarray(loaded["rng0"]), np.asarray(self._rng0)
         ):
             raise ValueError(
                 "checkpoint was written by a run with a different seed"
             )
-        self._state = loaded["adaseg"]
+        self._state = loaded["worker_state"]
         self._ef = loaded["ef"]
         self.round = int(loaded["round"])
         # drop telemetry from rounds past the restore point so a rewound

@@ -3,10 +3,12 @@
 One :class:`RoundRecord` per engine round: communication volume (bytes up =
 survivors × compressed message size, bytes down = survivors × dense anchor
 broadcast), the effective local step count per worker, the aliveness mask,
-the η spread across workers at the end of the round, and — when the engine
-was given an ``eval_fn`` — the problem residual of the running global output
-iterate. The recorder serializes to JSON for the bench harness
-(``benchmarks/bench_ps.py``) and for offline plotting.
+the η spread across workers at the end of the round, the round's wall-clock
+share and local-steps/sec throughput, and — when the engine was given an
+``eval_fn`` — the problem residual of the running global output iterate.
+The recorder serializes to JSON for the bench harnesses
+(``benchmarks/bench_ps.py``, ``benchmarks/bench_fig4_scenarios.py``) and
+for offline plotting.
 """
 from __future__ import annotations
 
@@ -26,6 +28,8 @@ class RoundRecord:
     eta_max: float
     eta_mean: float
     residual: float | None = None
+    wall_time_s: float | None = None   # this round's share of chunk wall time
+    steps_per_sec: float | None = None  # effective local steps / wall_time_s
 
     @property
     def eta_spread(self) -> float:
@@ -56,6 +60,20 @@ class TraceRecorder:
     def total_steps(self) -> int:
         return int(sum(sum(r.local_steps) for r in self.rounds))
 
+    @property
+    def total_wall_time_s(self) -> float:
+        return sum(r.wall_time_s for r in self.rounds
+                   if r.wall_time_s is not None)
+
+    @property
+    def steps_per_sec(self) -> float | None:
+        """Aggregate local-steps/sec over every timed round."""
+        timed = [r for r in self.rounds if r.wall_time_s]
+        wall = sum(r.wall_time_s for r in timed)
+        if wall <= 0.0:
+            return None
+        return sum(sum(r.local_steps) for r in timed) / wall
+
     def summary(self) -> dict:
         out = {
             "rounds": len(self.rounds),
@@ -63,6 +81,10 @@ class TraceRecorder:
             "bytes_up": self.total_bytes_up,
             "bytes_down": self.total_bytes_down,
         }
+        wall = self.total_wall_time_s
+        if wall > 0.0:
+            out["wall_time_s"] = wall
+            out["steps_per_sec"] = self.steps_per_sec
         residuals = [r.residual for r in self.rounds if r.residual is not None]
         if residuals:
             out["final_residual"] = residuals[-1]

@@ -204,6 +204,51 @@ def test_ps_engine_sharded_matches_serial_and_resumes():
     assert "PS_SHARDED_OK" in out
 
 
+def test_zoo_engine_sharded_matches_serial():
+    """Zoo acceptance on the sharded path: a MinimaxWorker (Adam with its
+    moments, UMP with its 1/η sync weighting) through the shard_map engine
+    must match the serial engine within rtol=1e-5 — identity config and the
+    full heterogeneity + q8 + faults policy stack."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_test_mesh
+        from repro.optim import MinimaxWorker, adam_minimax, ump
+        from repro.problems import make_bilinear_game
+        from repro.ps import (BernoulliFaults, FixedSchedule, PSConfig,
+                              PSEngine, StochasticQuantizeCompressor)
+
+        game = make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+        mesh = make_test_mesh(4, 2)
+
+        def close(a, b, **kw):
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+        for opt in (adam_minimax(0.02), ump(1.0, 2.0)):
+            pscfg = PSConfig(num_workers=4, rounds=4,
+                             worker=MinimaxWorker(opt), local_k=5)
+            es = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(2))
+            eh = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(2),
+                          mesh=mesh, worker_axes=("data",))
+            close(es.run(), eh.run(), rtol=1e-5, atol=1e-7)
+            close(es.state, eh.state, rtol=1e-5, atol=1e-7)
+
+            pscfg = PSConfig(num_workers=4, rounds=4,
+                             worker=MinimaxWorker(opt),
+                             schedule=FixedSchedule([5, 4, 3, 2]),
+                             compressor=StochasticQuantizeCompressor(bits=8),
+                             faults=BernoulliFaults(p=0.25, seed=5))
+            es = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(3))
+            eh = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(3),
+                          mesh=mesh)
+            close(es.run(), eh.run(), rtol=1e-5, atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(es.state.t),
+                                          np.asarray(eh.state.t))
+        print("ZOO_SHARDED_OK")
+    """)
+    assert "ZOO_SHARDED_OK" in out
+
+
 def test_train_round_multidevice_matches_singledevice():
     """One LocalAdaSEG round on a 4×2 mesh must equal the same round on one
     device (GSPMD partitioning is semantics-preserving for our round_fn)."""

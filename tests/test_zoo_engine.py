@@ -1,0 +1,304 @@
+"""The optimizer zoo on the unified Parameter-Server runtime.
+
+Parity pins: every zoo optimizer driven through ``PSEngine`` +
+``MinimaxWorker`` must reproduce the *pre-refactor* ``run_local``
+trajectory (the hand-rolled sync/scan driver, kept verbatim below as the
+reference) within rtol=1e-5, on the bilinear and robust problems; the
+``run_local`` wrapper keeps its historical contract; optimizer-specific
+``inner`` state (Adam moments, UMP accumulators) round-trips through
+checkpoints bit-exactly; and wrong-optimizer restores are rejected like
+wrong-seed ones. The sharded-path zoo parity lives in
+``tests/test_distributed.py``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.optim import (
+    MinimaxWorker,
+    adam_minimax,
+    asmp,
+    average_stacked,
+    run_local,
+    segda,
+    sgda,
+    ump,
+)
+from repro.problems import make_bilinear_game, make_robust_logistic
+from repro.ps import (
+    BernoulliFaults,
+    PSConfig,
+    PSEngine,
+    StochasticQuantizeCompressor,
+    StragglerSchedule,
+)
+
+M, K, R = 4, 5, 4
+
+ZOO = {
+    "sgda": lambda: sgda(0.05),
+    "segda": lambda: segda(0.05),
+    "adam": lambda: adam_minimax(0.02),
+    "ump": lambda: ump(1.0, 2.0),
+    "asmp": lambda: asmp(1.0, 2.0),
+}
+
+
+def reference_run_local(opt, problem, *, num_workers, local_k, rounds, rng):
+    """The pre-engine ``optim.base.run_local`` driver, verbatim — the
+    trajectory the unified runtime must reproduce."""
+    m = num_workers
+    rng, sub = jax.random.split(rng)
+    state = jax.vmap(
+        lambda r, w: opt.init(problem, r)._replace(worker_id=w)
+    )(jax.random.split(sub, m), jnp.arange(m, dtype=jnp.int32))
+    vstep = jax.vmap(lambda st, r: opt.step(problem, st, r))
+    vweight = jax.vmap(opt.sync_weight)
+
+    def round_fn(state, rng_round):
+        z_avg = average_stacked(state.z, vweight(state))
+        state = state._replace(z=z_avg)
+        rngs = jax.random.split(rng_round, local_k * m).reshape(local_k, m, 2)
+
+        def body(st, r):
+            return vstep(st, r), None
+
+        state, _ = lax.scan(body, state, rngs)
+        out = jax.tree.map(lambda v: jnp.mean(v, axis=0), state.z_bar)
+        return state, out
+
+    state, history = lax.scan(round_fn, state, jax.random.split(rng, rounds))
+    return state, history
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+
+
+@pytest.fixture(scope="module")
+def robust():
+    return make_robust_logistic(jax.random.PRNGKey(1), n=32, d=8, batch=8)
+
+
+def _zoo_cfg(opt, rounds=R, **kw):
+    return PSConfig(num_workers=M, rounds=rounds, worker=MinimaxWorker(opt),
+                    local_k=K, **kw)
+
+
+def _assert_close(a, b, **kw):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+
+def _assert_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+@pytest.mark.parametrize("prob", ["bilinear", "robust"])
+def test_engine_matches_prerefactor_run_local(game, robust, name, prob):
+    """Acceptance pin: PSEngine(MinimaxWorker(opt)) == the pre-refactor
+    run_local trajectory, rtol=1e-5, on bilinear and robust problems."""
+    problem = game.problem if prob == "bilinear" else robust.problem
+    opt = ZOO[name]()
+    st_ref, hist_ref = reference_run_local(
+        opt, problem, num_workers=M, local_k=K, rounds=R,
+        rng=jax.random.PRNGKey(3))
+    engine = PSEngine(problem, _zoo_cfg(opt), rng=jax.random.PRNGKey(3))
+    engine.run()
+    _assert_close(st_ref, engine.state, rtol=1e-5, atol=1e-7)
+    # the engine's Line-14 output equals the last reference history entry
+    out_ref = jax.tree.map(lambda v: v[-1], hist_ref)
+    _assert_close(out_ref, engine.z_bar(), rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ["segda", "ump"])
+def test_run_local_wrapper_keeps_contract(game, name):
+    """The thin run_local wrapper returns the historical (state, history)
+    shape and reproduces the reference trajectory."""
+    opt = ZOO[name]()
+    st_ref, hist_ref = reference_run_local(
+        opt, game.problem, num_workers=M, local_k=K, rounds=R,
+        rng=jax.random.PRNGKey(5))
+    st, hist = run_local(opt, game.problem, num_workers=M, local_k=K,
+                         rounds=R, rng=jax.random.PRNGKey(5))
+    _assert_close(st_ref, st, rtol=1e-5, atol=1e-7)
+    _assert_close(hist_ref, hist, rtol=1e-5, atol=1e-7)
+    assert jax.tree.leaves(hist)[0].shape[0] == R
+
+
+def test_zoo_engine_full_policy_stack_runs(game):
+    """A zoo optimizer under stragglers + q8 error-feedback compression +
+    faults: runs, converges to something finite, and the trace carries the
+    optimizer name and throughput telemetry."""
+    engine = PSEngine(
+        game.problem,
+        _zoo_cfg(ZOO["segda"](), rounds=6,
+                 schedule=StragglerSchedule(k=K, min_frac=0.4, seed=3),
+                 compressor=StochasticQuantizeCompressor(bits=8),
+                 faults=BernoulliFaults(p=0.2, seed=5)),
+        rng=jax.random.PRNGKey(7))
+    z = engine.run()
+    assert np.isfinite(float(game.residual(z)))
+    assert engine.trace.meta["optimizer"].startswith("segda")
+    assert all(r.wall_time_s is not None and r.wall_time_s > 0
+               for r in engine.trace.rounds)
+    assert engine.trace.steps_per_sec is not None
+    assert engine.trace.steps_per_sec > 0
+
+
+def test_zoo_sync_weight_weighting_applies(game):
+    """UMP's 1/η sync weights must reach the engine average: its round-end
+    η telemetry is the adaptive step size, not the generic constant 1."""
+    engine = PSEngine(game.problem, _zoo_cfg(ZOO["ump"]()),
+                      rng=jax.random.PRNGKey(11))
+    engine.run()
+    etas = [r.eta_mean for r in engine.trace.rounds]
+    assert etas[-1] < etas[0]            # Σ(Z)² grows → η shrinks
+    const = PSEngine(game.problem, _zoo_cfg(ZOO["sgda"]()),
+                     rng=jax.random.PRNGKey(11))
+    const.run()
+    assert all(r.eta_min == r.eta_max == 1.0 for r in const.trace.rounds)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume of optimizer-specific inner state
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,inner_keys", [
+    ("adam", ("m", "v")),
+    ("ump", ("sum_sq",)),
+    ("asmp", ("sum_sq", "g_prev")),
+])
+def test_inner_state_survives_checkpoint_bit_exact(game, tmp_path, name,
+                                                   inner_keys):
+    """Adam moments / UMP + ASMP accumulators must round-trip through
+    save/restore bit-exactly, and the resumed trajectory must equal the
+    uninterrupted one."""
+    opt_f = ZOO[name]
+    path = str(tmp_path / "zoo.msgpack")
+
+    straight = PSEngine(game.problem, _zoo_cfg(opt_f(), rounds=6),
+                        rng=jax.random.PRNGKey(9))
+    z_straight = straight.run()
+
+    first = PSEngine(game.problem, _zoo_cfg(opt_f(), rounds=6),
+                     rng=jax.random.PRNGKey(9))
+    first.run(until_round=3)
+    first.save(path)
+
+    resumed = PSEngine(game.problem, _zoo_cfg(opt_f(), rounds=6),
+                       rng=jax.random.PRNGKey(9))
+    resumed.restore(path)
+    assert resumed.round == 3
+    for key in inner_keys:
+        _assert_equal(first.state.inner[key], resumed.state.inner[key])
+    z_resumed = resumed.run()
+    _assert_equal(z_straight, z_resumed)
+    _assert_equal(straight.state, resumed.state)
+
+
+def test_restore_rejects_wrong_optimizer_same_structure(game, tmp_path):
+    """sgda and segda share the exact state layout — only the optimizer
+    fingerprint tells their checkpoints apart."""
+    path = str(tmp_path / "sgda.msgpack")
+    writer = PSEngine(game.problem, _zoo_cfg(ZOO["sgda"]()),
+                      rng=jax.random.PRNGKey(1))
+    writer.run(until_round=2)
+    writer.save(path)
+    reader = PSEngine(game.problem, _zoo_cfg(ZOO["segda"]()),
+                      rng=jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="different optimizer"):
+        reader.restore(path)
+
+
+def test_restore_rejects_wrong_optimizer_structure_mismatch(game, tmp_path):
+    """An Adam checkpoint cannot be read into a UMP engine: the inner-state
+    layouts differ and the restore must fail loudly."""
+    path = str(tmp_path / "adam.msgpack")
+    writer = PSEngine(game.problem, _zoo_cfg(ZOO["adam"]()),
+                      rng=jax.random.PRNGKey(1))
+    writer.run(until_round=2)
+    writer.save(path)
+    reader = PSEngine(game.problem, _zoo_cfg(ZOO["ump"]()),
+                      rng=jax.random.PRNGKey(1))
+    with pytest.raises(ValueError):
+        reader.restore(path)
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_restore_rejects_wrong_hyperparameters(game, tmp_path):
+    """Same optimizer family, different hyper-parameters, identical state
+    layout: the fingerprint must still tell the checkpoints apart (a UMP
+    restore with a different diameter would silently change every η)."""
+    path = str(tmp_path / "ump.msgpack")
+    writer = PSEngine(game.problem, _zoo_cfg(ump(1.0, 2.0)),
+                      rng=jax.random.PRNGKey(1))
+    writer.run(until_round=2)
+    writer.save(path)
+    reader = PSEngine(game.problem, _zoo_cfg(ump(1.0, 8.0)),
+                      rng=jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="different optimizer"):
+        reader.restore(path)
+
+
+def test_run_local_zero_rounds_returns_empty_history(game):
+    st, hist = run_local(ZOO["sgda"](), game.problem, num_workers=M,
+                         local_k=K, rounds=0, rng=jax.random.PRNGKey(0))
+    assert all(v.shape[0] == 0 for v in jax.tree.leaves(hist))
+    assert jax.tree.leaves(st.z)[0].shape[0] == M
+
+
+def test_config_rejects_backend_on_explicit_worker(game):
+    with pytest.raises(ValueError, match="backend"):
+        PSEngine(game.problem,
+                 PSConfig(num_workers=M, rounds=R,
+                          worker=MinimaxWorker(ZOO["sgda"]()), local_k=K,
+                          backend="fused"),
+                 rng=jax.random.PRNGKey(0))
+
+
+def test_restore_rejects_wrong_seed_for_zoo(game, tmp_path):
+    path = str(tmp_path / "seed.msgpack")
+    writer = PSEngine(game.problem, _zoo_cfg(ZOO["adam"]()),
+                      rng=jax.random.PRNGKey(0))
+    writer.run(until_round=2)
+    writer.save(path)
+    reader = PSEngine(game.problem, _zoo_cfg(ZOO["adam"]()),
+                      rng=jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="different seed"):
+        reader.restore(path)
+
+
+# ---------------------------------------------------------------------------
+# Config validation for the generic runtime
+# ---------------------------------------------------------------------------
+
+def test_generic_worker_requires_schedule_or_local_k(game):
+    with pytest.raises(ValueError, match="local_k"):
+        PSEngine(game.problem,
+                 PSConfig(num_workers=M, rounds=R,
+                          worker=MinimaxWorker(ZOO["sgda"]())),
+                 rng=jax.random.PRNGKey(0))
+
+
+def test_config_rejects_both_adaseg_and_worker(game):
+    from repro.core import AdaSEGConfig
+    with pytest.raises(ValueError, match="not both"):
+        PSEngine(game.problem,
+                 PSConfig(num_workers=M, rounds=R,
+                          adaseg=AdaSEGConfig(g0=1.0, diameter=2.0, k=5),
+                          worker=MinimaxWorker(ZOO["sgda"]())),
+                 rng=jax.random.PRNGKey(0))
+
+
+def test_config_requires_some_worker(game):
+    with pytest.raises(ValueError, match="adaseg= or worker="):
+        PSEngine(game.problem, PSConfig(num_workers=M, rounds=R),
+                 rng=jax.random.PRNGKey(0))
