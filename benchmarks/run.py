@@ -7,7 +7,8 @@ docstring for the figure it reproduces):
     fig4   bench_bilinear_optimizers  optimizer-zoo comparison
     fig4x  bench_fig4_scenarios       the zoo + LocalAdaSEG on the PS engine
                                       under hetero/compression/dropout/faults
-    figE1  bench_async                async/heterogeneous-K + SEGDA-MKR
+    figE1  bench_async                time-to-target: sync barrier vs
+                                      bounded-staleness async (sim clock)
     extra  bench_ps                   PS runtime: compression/dropout/hetero
     figE1d bench_vt_growth            V_t cumulative gradient growth
     figE2  bench_wgan                 WGAN-GP (homog + Dirichlet hetero)

@@ -49,8 +49,32 @@ and optimizer-specific ``inner`` state (Adam moments, UMP accumulators)
 round-trips bit-exactly. Restores from a different seed or optimizer are
 rejected. ``ps.partition`` carves Dirichlet-skewed per-worker oracles so
 homogeneous vs heterogeneous data is a config flag.
+
+Second execution semantics — **simulated time** (``ps.async_engine``):
+``AsyncPSEngine`` replaces the per-round barrier with a discrete-event
+simulation. A :mod:`~repro.ps.latency` model (constant, lognormal jitter,
+Markov slow/fast, trace-driven — all seed-deterministic) assigns every
+worker-round its compute and network delays; the server admits each
+worker's uplink *as it arrives* under a bounded-staleness rule (τ =
+``staleness_bound``: ∞ never blocks, 0 is a barrier), re-weights the Line-7
+average by ``1/η · 1/(1+staleness)^γ`` over its last-heard payload table,
+and broadcasts back per arrival. Traces gain ``sim_time_s``, per-entry
+``staleness`` and fleet ``idle_frac``, turning ``benchmarks/bench_async``
+into genuine time-to-target-residual curves.
+
+The sync engine is a *special case with a guarantee*: whenever an admission
+batch is the whole fleet in the same round (worker-equal constant latency
+with any τ, or any latency with τ=0), ``AsyncPSEngine`` executes
+``PSEngine``'s own compiled round chunk — so the synchronous trajectory is
+reproduced **bit-exactly** by shared code (identity compression/no faults;
+pinned by ``tests/test_ps_async.py``). Schedules, compressors (per-payload
+uplinks with error feedback), fault policies and checkpoint/resume all
+compose: a killed simulation restores mid-event-queue bit-exactly, with the
+event heap rebuilt from per-worker state and every policy re-derived from
+its seed.
 """
 from ..core.worker import AdaSEGWorker, LocalWorker
+from .async_engine import AsyncPSConfig, AsyncPSEngine
 from .compress import (
     IdentityCompressor,
     StochasticQuantizeCompressor,
@@ -61,6 +85,14 @@ from .compress import (
 )
 from .engine import PSConfig, PSEngine
 from .faults import BernoulliFaults, FaultPolicy, NoFaults, OutageFaults
+from .latency import (
+    ConstantLatency,
+    LatencyModel,
+    LatencyTables,
+    LognormalLatency,
+    MarkovLatency,
+    TraceLatency,
+)
 from .partition import (
     heterogeneous_bilinear,
     heterogeneous_robust,
@@ -78,17 +110,25 @@ from .trace import RoundRecord, TraceRecorder
 
 __all__ = [
     "AdaSEGWorker",
+    "AsyncPSConfig",
+    "AsyncPSEngine",
     "BernoulliFaults",
+    "ConstantLatency",
     "ElasticSchedule",
     "FaultPolicy",
     "FixedSchedule",
     "IdentityCompressor",
+    "LatencyModel",
+    "LatencyTables",
     "LocalWorker",
+    "LognormalLatency",
+    "MarkovLatency",
     "NoFaults",
     "OutageFaults",
     "PSConfig",
     "PSEngine",
     "RoundRecord",
+    "TraceLatency",
     "StochasticQuantizeCompressor",
     "StragglerSchedule",
     "SyncCompressor",

@@ -1,0 +1,779 @@
+"""Event-driven asynchronous Parameter-Server over simulated time.
+
+The synchronous :class:`~repro.ps.engine.PSEngine` counts *rounds*: every
+worker blocks on one barrier per round no matter how fast it ran. This
+module adds the missing time axis. :class:`AsyncPSEngine` is a discrete-
+event simulator of the same Parameter-Server fleet: a
+:class:`~repro.ps.latency.LatencyModel` assigns every worker-round its
+compute and network delays, an event queue advances a simulated clock, and
+the server **admits each worker's uplink as it arrives** — no barrier —
+under a configurable bounded-staleness rule:
+
+* every worker cycles through ``send payload → receive broadcast → run its
+  K_m^r local steps`` at its own speed (Line 3–8 of Algorithm 1, unrolled
+  per worker instead of per barrier);
+* the server keeps the **last heard** payload and 1/η sync weight of every
+  worker; on each admission it recomputes the Line-7 weighted average over
+  the whole table with staleness-aware re-weighting
+  ``w_m ∝ sw_m / (1 + s_m)^γ`` (``s_m`` = how many rounds behind the
+  freshest entry worker ``m``'s stored payload is) and broadcasts back *to
+  the admitted workers only*;
+* a round-``r`` uplink is admitted only once every live worker's round-
+  ``(r − τ)`` uplink has landed (τ = ``staleness_bound``) — the stale-
+  synchronous-parallel rule, gated on what the server has *heard*, not on
+  what workers have started. ``τ=∞`` never blocks; ``τ=0`` is a true
+  barrier, which makes the synchronous engine a special case *along the
+  staleness axis* and gives the sync baseline its simulated-time cost
+  under any latency model.
+
+Parity anchor (pinned by ``tests/test_ps_async.py``): with worker-equal
+:class:`~repro.ps.latency.ConstantLatency`, ``τ=∞`` (or ``τ=0``), identity
+compression and no faults, the fleet moves in lockstep, every arrival lands
+in one batch, and this engine reproduces ``PSEngine``'s serial path
+**bit-exactly**. Two mechanisms make that structural rather than
+approximate: local phases execute on the *full stacked worker state* with a
+one-hot ``enabled`` mask (per-worker unbatched math has different matmul
+accumulation order and is NOT bit-equal to the engine's vmapped steps), and
+full-fleet lockstep admissions execute the synchronous engine's own
+compiled round chunk (``engine.make_serial_chunk``) — shared code rather
+than a parallel implementation, because even re-emitting the identical
+expression sequence in a differently-shaped jit graph perturbs XLA fusion
+at the last ulp.
+
+Everything PR 2–3 built composes: schedules feed ``K_m^r``, compressors run
+on the payload uplinks (error feedback per worker; the Line-7 weights are
+applied server-side where the normalizer lives — the one place the async
+wire format must differ from the sync engine's pre-weighted messages),
+fault policies knock workers out of their own round ``r`` (no send, no
+receive, no steps — a reboot that only costs time), and both
+``AdaSEGWorker`` and ``MinimaxWorker`` run unmodified. Checkpoint/resume
+serializes the *dynamic* state only — stacked worker state, server table,
+per-worker event-machine arrays, the simulated clock — while schedules,
+faults, latency tables and rng streams are re-derived from the config
+seeds, so a killed simulation resumes bit-exactly mid-event-queue.
+
+Execution is host-driven and serial by design: the simulator's product is
+*simulated* time-to-accuracy, not wall-clock throughput — the sharded
+``shard_map`` path remains the synchronous engine's domain.
+
+One timeline nuance: local phases normally execute when they *complete* on
+the simulated clock (so mid-run residuals only count finished work), but a
+full-fleet lockstep admission runs the synchronous chunk eagerly — those
+workers' states may then be up to one phase ahead of the clock until their
+START events fire. Admission records are written before the chunk, and
+resume replays the same decision, so telemetry and checkpoints stay
+consistent either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..checkpoint.serialize import load_pytree, save_pytree
+from ..core.adaseg import weighted_worker_average
+from ..core.tree import tree_add, tree_sub, tree_zeros_like
+from ..core.types import MinimaxProblem
+from .compress import IdentityCompressor, dense_bytes
+from .engine import (
+    PSConfig,
+    _per_worker,
+    _resolve_schedule,
+    _resolve_worker,
+    make_serial_chunk,
+)
+from .faults import NoFaults
+from .latency import ConstantLatency, LatencyModel
+from .trace import RoundRecord, TraceRecorder
+
+PyTree = Any
+
+# Worker event-machine status codes (serialized in checkpoints).
+_UPLINK = 0    # uplink in flight — an ARRIVE event is scheduled
+_COMPUTE = 1   # computing/rebooting — a START event is scheduled
+_HELD = 2      # arrived, held at the server by the staleness bound
+_DONE = 3      # all rounds finished
+
+# Heap event kinds (tie-break: STARTs before ARRIVEs at equal times).
+_EV_START = 0
+_EV_ARRIVE = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncPSConfig(PSConfig):
+    """:class:`PSConfig` plus the async policy layer.
+
+    ``latency`` assigns per-(round, worker) compute/network delays (default:
+    zero-delay lockstep). ``staleness_bound`` is the SSP τ — a round-``r``
+    uplink is held until every live worker's round-``(r − τ)`` uplink has
+    arrived at the server; ``math.inf`` never waits, ``0`` is a full
+    barrier. ``staleness_discount`` is the γ in the server's
+    staleness-aware re-weighting ``w ∝ sw/(1+s)^γ`` (``0`` disables the
+    discount).
+    """
+
+    latency: LatencyModel | None = None
+    staleness_bound: float = math.inf
+    staleness_discount: float = 1.0
+
+
+class AsyncPSEngine:
+    """Discrete-event asynchronous Parameter-Server runtime (serial path)."""
+
+    def __init__(
+        self,
+        problem: MinimaxProblem,
+        config: AsyncPSConfig,
+        rng,
+        *,
+        eval_fn: Callable[[PyTree], jax.Array] | None = None,
+        trace_meta: dict | None = None,
+    ):
+        if config.staleness_bound < 0:
+            raise ValueError("staleness_bound must be >= 0")
+        self.problem = problem
+        self.config = config
+        self.worker = _resolve_worker(config)
+        self.schedule = _resolve_schedule(config)
+        self.compressor = config.compressor or IdentityCompressor()
+        self.faults = config.faults or NoFaults()
+        self.latency = config.latency or ConstantLatency()
+        self.eval_fn = eval_fn
+        self.tau = float(config.staleness_bound)
+        self.gamma = float(config.staleness_discount)
+
+        m, r = config.num_workers, config.rounds
+        # Deterministic policy tables — re-derived (never stored) on resume,
+        # exactly like the synchronous engine's.
+        self._ks = np.asarray(self.schedule.steps(m, r), dtype=np.int32)
+        self._alive = np.asarray(self.faults.alive(m, r), dtype=bool)
+        if self._ks.shape != (r, m) or self._alive.shape != (r, m):
+            raise ValueError("schedule/fault table shape mismatch")
+        self._k_pad = int(self.schedule.max_steps(m))
+        if not (self._ks <= self._k_pad).all():
+            raise ValueError(
+                f"schedule emits step counts above its max_steps={self._k_pad}"
+            )
+        lat = self.latency.tables(m, r)
+        if lat.step_s.shape != (r, m):
+            raise ValueError(
+                f"latency tables have shape {lat.step_s.shape}, "
+                f"engine needs ({r}, {m})"
+            )
+        self._lat = lat
+
+        # RNG derivation: identical to PSEngine so the lockstep trajectory
+        # (and each worker family's historical stream) is reproduced.
+        rng0, worker_rngs = self.worker.derive_rngs(jnp.asarray(rng), m)
+        self._rng0 = np.asarray(rng0)
+        self._round_rngs = jax.random.split(rng0, r)
+        self._state: PyTree = jax.vmap(
+            lambda rr, w: self.worker.init(problem, rr, w)
+        )(worker_rngs, jnp.arange(m, dtype=jnp.int32))
+        self._ef: PyTree = (
+            tree_zeros_like(self.worker.sync_payload(self._state))
+            if self.compressor.error_feedback else ()
+        )
+
+        # Server memory: last-heard payload/weight per worker.
+        self._srv_payload: PyTree = tree_zeros_like(
+            self.worker.sync_payload(self._state)
+        )
+        self._srv_sw = np.zeros((m,), np.float32)
+        self._srv_version = np.full((m,), -1, np.int32)
+        self._heard = np.zeros((m,), bool)
+
+        # Per-worker event machine (one outstanding event per worker).
+        self._status = np.full((m,), _COMPUTE, np.int32)
+        self._ev_time = np.zeros((m,), np.float64)
+        self._ev_round = np.zeros((m,), np.int32)
+        self._ev_busy = np.zeros((m,), np.float64)
+        self._ev_is_phase = np.zeros((m,), bool)
+        # Server-side progress knowledge: the highest round whose uplink has
+        # arrived, per worker (−1 before the init send lands). The staleness
+        # gate reads this — a round-r uplink is admitted only once every
+        # live worker's round-(r−τ) uplink has landed — so τ=0 is a true
+        # barrier: the server waits for the whole fleet's payloads, not
+        # merely for the fleet to have started the round.
+        self._progress = np.full((m,), -1, np.int32)
+        self._busy_s = np.zeros((m,), np.float64)
+        self._steps_cum = np.zeros((m,), np.int32)
+        # Steps already attributed to a trace record: each admission records
+        # the *previous* phase's steps, so the terminal record carries the
+        # remainder (steps_cum − steps_recorded) and the trace's total
+        # matches the work actually done.
+        self._steps_recorded = np.zeros((m,), np.int32)
+        self._done_at = np.zeros((m,), np.float64)
+        self.now = 0.0
+        self.n_admissions = 0
+        self._final_recorded = False
+
+        z_like = jax.tree.map(
+            lambda v: v[0], self.worker.sync_payload(self._state)
+        )
+        self._msg_bytes = self.compressor.message_bytes(z_like)
+        self._dense_bytes = dense_bytes(z_like)
+        self.trace = TraceRecorder(meta={
+            "problem": problem.name,
+            "optimizer": self.worker.name,
+            "workers": m,
+            "rounds": r,
+            "schedule": type(self.schedule).__name__,
+            "compressor": self.compressor.name,
+            "faults": type(self.faults).__name__,
+            "latency": type(self.latency).__name__,
+            "staleness_bound": (None if math.isinf(self.tau) else self.tau),
+            "staleness_discount": self.gamma,
+            "backend": getattr(self.worker, "backend", None),
+            "execution": "event-driven",
+            **(trace_meta or {}),
+        })
+
+        self._heap: list[tuple[float, int, int]] = []
+        self._rng_cache: dict[int, jax.Array] = {}
+        self._c_rng_cache: dict[int, jax.Array] = {}
+        # Whenever an admission batch is the whole fleet in the same round
+        # (lockstep), the engine runs the synchronous engine's own round
+        # chunk instead of the per-arrival path — so "sync is a special
+        # case" is shared compiled code, bit-exact by construction, not a
+        # reimplementation that happens to agree. Only the identity/
+        # no-fault configuration can take it (a faultful PSEngine compiles
+        # the masked sync branch, and async compression has per-payload
+        # semantics — see _admit_batch).
+        self._lockstep_ok = (
+            isinstance(self.faults, NoFaults) and self.compressor.is_identity
+        )
+        self._build_jit()
+        for w in range(m):
+            self._enter_round(w, 0, 0.0)
+
+    # ------------------------------------------------------------------
+    # Jitted numerics — the exact expression sequences of PSEngine's
+    # serial path, reindexed for per-arrival execution.
+    # ------------------------------------------------------------------
+
+    def _build_jit(self) -> None:
+        worker, problem = self.worker, self.problem
+        comp = self.compressor
+        k_pad = self._k_pad
+
+        vstep = jax.vmap(
+            lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
+        )
+
+        def phase(state, step_rngs, ks_vec):
+            # One worker's K_m^r local steps on the stacked state: ks_vec is
+            # one-hot in the worker, so every other lane's update is masked
+            # off bit-exactly — the engine's own heterogeneous-K mechanism.
+            def body(st, inp):
+                rngs, i = inp
+                enabled = i < ks_vec
+                st = vstep(st, rngs, enabled)
+                return st, None
+
+            state, _ = lax.scan(
+                body, state, (step_rngs, jnp.arange(k_pad))
+            )
+            return state
+
+        def store(state, table, sw, mask):
+            # Admit uplinks: overwrite the masked lanes of the server table
+            # with the senders' current payload/weight. (A blocked sender's
+            # lane hasn't changed since send time, so reading it at
+            # admission is exact.)
+            payload = worker.sync_payload(state)
+            new_table = jax.tree.map(
+                lambda cur, old: jnp.where(_per_worker(mask, cur), cur, old),
+                payload, table,
+            )
+            sw_now = jax.vmap(worker.sync_weight)(state)
+            return new_table, jnp.where(mask, sw_now, sw)
+
+        def store_compressed(state, table, sw, ef, mask, c_rngs):
+            payload = worker.sync_payload(state)
+            eff = tree_add(payload, ef) if comp.error_feedback else payload
+            sent = jax.vmap(comp.compress)(eff, c_rngs)
+            new_table = jax.tree.map(
+                lambda s, old: jnp.where(_per_worker(mask, s), s, old),
+                sent, table,
+            )
+            if comp.error_feedback:
+                ef_new = jax.tree.map(
+                    lambda e_new, e_old: jnp.where(
+                        _per_worker(mask, e_new), e_new, e_old
+                    ),
+                    tree_sub(eff, sent), ef,
+                )
+            else:
+                ef_new = ef
+            sw_now = jax.vmap(worker.sync_weight)(state)
+            return new_table, jnp.where(mask, sw_now, sw), ef_new
+
+        def admit(state, table, sw, discount, heard, recv):
+            # Line 5–8 per arrival: weighted average of the whole last-heard
+            # table, broadcast to the admitted workers only. Mirrors
+            # engine.make_sync_stacked's no-fault branch with the staleness
+            # discount folded into the weights (full-lockstep batches don't
+            # come here — they run the shared synchronous chunk).
+            sw_eff = sw * discount
+            w_raw = jnp.where(heard, sw_eff, jnp.zeros_like(sw_eff))
+            w = w_raw / jnp.sum(w_raw)
+            msg = jax.tree.map(
+                lambda leaf: _per_worker(w, leaf).astype(leaf.dtype) * leaf,
+                table,
+            )
+            payload = worker.sync_payload(state)
+            synced = jax.tree.map(
+                lambda s, old: jnp.where(
+                    _per_worker(recv, old),
+                    jnp.broadcast_to(
+                        jnp.sum(s, axis=0, keepdims=True), old.shape
+                    ),
+                    old,
+                ),
+                msg, payload,
+            )
+            return worker.merge_synced(state, synced)
+
+        self._phase_fn = jax.jit(phase)
+        self._store_fn = jax.jit(store)
+        self._store_c_fn = jax.jit(store_compressed)
+        self._admit_fn = jax.jit(admit)
+        self._veta = jax.jit(jax.vmap(worker.eta))
+        self._lockstep_chunk = (
+            jax.jit(make_serial_chunk(
+                self.problem, worker, comp, self.config.num_workers,
+                k_pad, self.eval_fn, no_faults=True,
+            ))
+            if self._lockstep_ok else None
+        )
+
+    def _step_rngs(self, r: int) -> jax.Array:
+        """(k_pad, M, 2) step-key table of round ``r`` — the engine's
+        derivation, so a worker in round ``r`` consumes the same keys the
+        synchronous serial chunk would feed its lane."""
+        if r not in self._rng_cache:
+            m = self.config.num_workers
+            self._rng_cache[r] = jax.random.split(
+                self._round_rngs[r], self._k_pad * m
+            ).reshape(self._k_pad, m, 2)
+        return self._rng_cache[r]
+
+    def _c_rngs(self, r: int) -> jax.Array:
+        if r not in self._c_rng_cache:
+            self._c_rng_cache[r] = jax.random.split(
+                jax.random.fold_in(self._round_rngs[r], 7),
+                self.config.num_workers,
+            )
+        return self._c_rng_cache[r]
+
+    # ------------------------------------------------------------------
+    # Event machine
+    # ------------------------------------------------------------------
+
+    def _enter_round(self, m: int, r: int, t: float) -> None:
+        """Worker ``m`` enters round ``r`` at simulated time ``t``: send the
+        uplink (alive), burn a reboot (dead), or finish (r == rounds)."""
+        if r >= self.config.rounds:
+            self._status[m] = _DONE
+            self._done_at[m] = t
+            self._progress[m] = r
+            return
+        if self._alive[r, m]:
+            self._status[m] = _UPLINK
+            self._ev_round[m] = r
+            self._ev_time[m] = t + self._lat.up_s[r, m]
+            heapq.heappush(self._heap, (self._ev_time[m], _EV_ARRIVE, m))
+        else:
+            # Dead round: no send, no receive, no steps — the worker keeps
+            # its stale anchor and the server keeps its stale entry (the
+            # synchronous fault semantics, minus the barrier); rebooting
+            # costs the compute time the round's steps would have taken.
+            reboot = float(self._ks[r, m]) * self._lat.step_s[r, m]
+            self._status[m] = _COMPUTE
+            self._ev_round[m] = r + 1
+            self._ev_time[m] = t + reboot
+            self._ev_busy[m] = reboot
+            self._ev_is_phase[m] = False
+            heapq.heappush(self._heap, (self._ev_time[m], _EV_START, m))
+
+    def _run_phase(self, m: int, r: int) -> None:
+        """Execute worker ``m``'s round-``r`` local steps on the stacked
+        state (one-hot masked; a zero-step round is a structural no-op)."""
+        k = int(self._ks[r, m])
+        if k == 0:
+            return
+        ks_vec = np.zeros((self.config.num_workers,), np.int32)
+        ks_vec[m] = k
+        self._state = self._phase_fn(
+            self._state, self._step_rngs(r), jnp.asarray(ks_vec)
+        )
+        self._steps_cum[m] += k
+
+    def _handle_start(self, m: int, t: float) -> None:
+        r = int(self._ev_round[m])
+        if self._ev_is_phase[m]:
+            self._run_phase(m, r - 1)
+            self._ev_is_phase[m] = False
+        self._busy_s[m] += self._ev_busy[m]
+        self._ev_busy[m] = 0.0
+        self._enter_round(m, r, t)
+
+    def _min_progress(self) -> int:
+        active = self._status != _DONE
+        if not active.any():
+            return self.config.rounds
+        return int(self._progress[active].min())
+
+    def _admissible(self) -> list[int]:
+        floor = self._min_progress() + self.tau
+        return [int(m) for m in np.nonzero(self._status == _HELD)[0]
+                if self._ev_round[m] <= floor]
+
+    def _admit_batch(self, adm: list[int], t: float) -> None:
+        """One server update: fold the admitted uplinks into the last-heard
+        table, recompute the staleness-weighted Line-7 average, broadcast to
+        the admitted workers, and schedule their local phases."""
+        m_tot = self.config.num_workers
+        mask = np.zeros((m_tot,), bool)
+        mask[adm] = True
+        rounds_of = {m: int(self._ev_round[m]) for m in adm}
+
+        if self.compressor.is_identity:
+            self._srv_payload, srv_sw = self._store_fn(
+                self._state, self._srv_payload, jnp.asarray(self._srv_sw),
+                jnp.asarray(mask),
+            )
+        else:
+            c_rngs = np.asarray(self._c_rngs(0)).copy()
+            for m in adm:
+                c_rngs[m] = np.asarray(self._c_rngs(rounds_of[m]))[m]
+            self._srv_payload, srv_sw, self._ef = self._store_c_fn(
+                self._state, self._srv_payload, jnp.asarray(self._srv_sw),
+                self._ef, jnp.asarray(mask), jnp.asarray(c_rngs),
+            )
+        self._srv_sw = np.asarray(srv_sw)
+        for m in adm:
+            self._srv_version[m] = rounds_of[m]
+        self._heard[adm] = True
+
+        # Staleness of every stored entry, in rounds behind the freshest.
+        vmax = int(self._srv_version[self._heard].max())
+        stale = np.where(self._heard, vmax - self._srv_version, 0)
+
+        r0 = rounds_of[adm[0]]
+        lockstep = (
+            self._lockstep_chunk is not None
+            and len(adm) == m_tot
+            and all(r == r0 for r in rounds_of.values())
+        )
+        # Record before mutating state: η and residual at admission time
+        # (post-previous-phase, pre-merge — merge_synced never touches the
+        # output iterate, so the residual is the same on either side).
+        self._record_admission(
+            adm, t, np.asarray(self._veta(self._state)), stale
+        )
+
+        if lockstep:
+            # The whole fleet is here, in the same round, with zero
+            # staleness: run the synchronous engine's compiled round body
+            # (sync + all local steps fused), making PSEngine a bit-exact
+            # special case by shared code. Phases are thereby pre-executed;
+            # the START events below only carry the timing.
+            counts = (
+                self._steps_cum + self._ks[r0] * self._alive[r0]
+            ).astype(np.float32)
+            self._state, self._ef, _, _ = self._lockstep_chunk(
+                self._state, self._ef,
+                self._round_rngs[r0:r0 + 1],
+                jnp.asarray(self._ks[r0:r0 + 1]),
+                jnp.asarray(self._alive[r0:r0 + 1]),
+                jnp.asarray(counts[None]),
+            )
+        else:
+            discount = np.asarray(
+                (1.0 + stale) ** (-self.gamma), np.float32
+            )
+            self._state = self._admit_fn(
+                self._state, self._srv_payload, jnp.asarray(self._srv_sw),
+                jnp.asarray(discount), jnp.asarray(self._heard),
+                jnp.asarray(mask),
+            )
+
+        for m in adm:
+            r = rounds_of[m]
+            compute = float(self._ks[r, m]) * self._lat.step_s[r, m]
+            self._status[m] = _COMPUTE
+            self._ev_round[m] = r + 1
+            self._ev_time[m] = t + self._lat.down_s[r, m] + compute
+            self._ev_busy[m] = compute
+            self._ev_is_phase[m] = not lockstep
+            if lockstep:
+                self._steps_cum[m] += int(self._ks[r, m])
+            heapq.heappush(self._heap, (self._ev_time[m], _EV_START, m))
+        self.n_admissions += 1
+
+    def _idle_frac(self, t: float) -> float | None:
+        if t <= 0.0:
+            return None
+        busy = float(self._busy_s.sum())
+        return max(0.0, 1.0 - busy / (self.config.num_workers * t))
+
+    def _record_admission(self, adm, t, etas, stale) -> None:
+        m_tot = self.config.num_workers
+        steps = [0] * m_tot
+        for m in adm:
+            r = int(self._ev_round[m])
+            if r > 0 and self._alive[r - 1, m]:
+                steps[m] = int(self._ks[r - 1, m])
+                self._steps_recorded[m] += steps[m]
+        adm_etas = etas[list(adm)]
+        res = None
+        if self.eval_fn is not None:
+            res = float(self.eval_fn(self.z_bar()))
+        self.trace.record(RoundRecord(
+            round=self.n_admissions,
+            local_steps=steps,
+            alive=[bool(m in adm) for m in range(m_tot)],
+            bytes_up=len(adm) * self._msg_bytes,
+            bytes_down=len(adm) * self._dense_bytes,
+            eta_min=float(adm_etas.min()),
+            eta_max=float(adm_etas.max()),
+            eta_mean=float(adm_etas.mean()),
+            residual=res,
+            sim_time_s=float(t),
+            staleness=[int(s) if h else None
+                       for s, h in zip(stale, self._heard)],
+            idle_frac=self._idle_frac(t),
+        ))
+
+    def _record_final(self) -> None:
+        """Terminal record once the whole fleet has finished: the final
+        residual/η state at the fleet's completion time, carrying the last
+        phases' step counts (there is no sync after the last local phase,
+        so no admission covers them)."""
+        if self._final_recorded:
+            return
+        t = float(self._done_at.max())
+        etas = np.asarray(self._veta(self._state))
+        res = None
+        if self.eval_fn is not None:
+            res = float(self.eval_fn(self.z_bar()))
+        if self._heard.any():
+            vmax = int(self._srv_version[self._heard].max())
+            stale = np.where(self._heard, vmax - self._srv_version, 0)
+        else:
+            # an all-dead fleet never uplinked anything
+            stale = np.zeros_like(self._srv_version)
+        final_steps = self._steps_cum - self._steps_recorded
+        self._steps_recorded += final_steps
+        self.trace.record(RoundRecord(
+            round=self.n_admissions,
+            local_steps=final_steps.tolist(),
+            alive=[False] * self.config.num_workers,
+            bytes_up=0.0,
+            bytes_down=0.0,
+            eta_min=float(etas.min()),
+            eta_max=float(etas.max()),
+            eta_mean=float(etas.mean()),
+            residual=res,
+            sim_time_s=t,
+            staleness=[int(s) if h else None
+                       for s, h in zip(stale, self._heard)],
+            idle_frac=self._idle_frac(t),
+        ))
+        self._final_recorded = True
+
+    # ------------------------------------------------------------------
+    # Driving
+    # ------------------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return bool((self._status == _DONE).all())
+
+    @property
+    def sim_time(self) -> float:
+        """Current simulated-clock reading (seconds)."""
+        return float(self._done_at.max()) if self.done else self.now
+
+    def idle_fraction(self) -> float | None:
+        """Fleet fraction of elapsed simulated time not spent computing
+        (communication + staleness blocking; in-progress phases count as
+        idle until they complete)."""
+        return self._idle_frac(self.sim_time)
+
+    def run(
+        self,
+        *,
+        until_time: float | None = None,
+        until_admissions: int | None = None,
+        checkpoint_path: str | None = None,
+        checkpoint_every: int | None = None,
+    ) -> PyTree:
+        """Drive the event queue (to completion by default) and return the
+        global output iterate z̄. ``until_time`` stops before the first
+        event past that simulated instant; ``until_admissions`` stops after
+        that many server admissions (lifetime total); ``checkpoint_every``
+        saves ``checkpoint_path`` every that-many admissions."""
+        last_ckpt = self.n_admissions
+        while self._heap:
+            if until_time is not None and self._heap[0][0] > until_time:
+                break
+            if (until_admissions is not None
+                    and self.n_admissions >= until_admissions):
+                break
+            t = self._heap[0][0]
+            while self._heap and self._heap[0][0] == t:
+                _, kind, m = heapq.heappop(self._heap)
+                if kind == _EV_START:
+                    self._handle_start(m, t)
+                else:
+                    self._status[m] = _HELD
+                    self._progress[m] = int(self._ev_round[m])
+            self.now = t
+            adm = self._admissible()
+            if adm:
+                self._admit_batch(adm, t)
+            elif not self._heap and not self.done:
+                raise RuntimeError(
+                    "event queue drained with workers still blocked — "
+                    "staleness deadlock (this is a bug)"
+                )
+            if (checkpoint_path is not None and checkpoint_every
+                    and self.n_admissions - last_ckpt >= checkpoint_every):
+                self.save(checkpoint_path)
+                last_ckpt = self.n_admissions
+        if self.done:
+            self._record_final()
+        if checkpoint_path is not None:
+            self.save(checkpoint_path)
+        return self.z_bar()
+
+    @property
+    def state(self) -> PyTree:
+        return self._state
+
+    def z_bar(self) -> PyTree:
+        """Global output iterate: worker outputs weighted by the local step
+        counts *completed on the simulated clock* — the synchronous
+        engine's Line-14 expression over realized work."""
+        counts = self._steps_cum.astype(np.float32)
+        if counts.sum() == 0.0:
+            counts = np.ones_like(counts)
+        return weighted_worker_average(
+            self.worker.output(self._state), jnp.asarray(counts)
+        )
+
+    # ------------------------------------------------------------------
+    # Checkpointing — dynamic state only; policies re-derived from seeds.
+    # ------------------------------------------------------------------
+
+    def _ckpt_tree(self) -> dict:
+        return {
+            "worker_state": self._state,
+            "ef": self._ef,
+            "srv_payload": self._srv_payload,
+            "srv_sw": jnp.asarray(self._srv_sw),
+            "srv_version": jnp.asarray(self._srv_version),
+            "heard": jnp.asarray(self._heard),
+            "status": jnp.asarray(self._status),
+            "ev_round": jnp.asarray(self._ev_round),
+            "ev_is_phase": jnp.asarray(self._ev_is_phase),
+            "progress": jnp.asarray(self._progress),
+            "steps_cum": jnp.asarray(self._steps_cum),
+            "steps_recorded": jnp.asarray(self._steps_recorded),
+            # float64 event times round-trip as raw bytes: jnp would
+            # silently truncate them to float32 without jax_enable_x64.
+            "ev_time": _f64_bytes(self._ev_time),
+            "ev_busy": _f64_bytes(self._ev_busy),
+            "busy_s": _f64_bytes(self._busy_s),
+            "done_at": _f64_bytes(self._done_at),
+            "now": _f64_bytes(np.float64([self.now])),
+            "n_admissions": jnp.int32(self.n_admissions),
+            "final_recorded": jnp.asarray(bool(self._final_recorded)),
+            "rng0": jnp.asarray(self._rng0),
+            "worker_fp": jnp.uint32(self.worker.fingerprint),
+        }
+
+    def save(self, path: str) -> None:
+        save_pytree(path, self._ckpt_tree())
+
+    def restore(self, path: str) -> "AsyncPSEngine":
+        """Resume mid-event-queue: the heap is rebuilt from the per-worker
+        event machine; schedules, faults, latency tables and rng streams
+        are re-derived from the config. Refuses checkpoints from a
+        different seed or optimizer, like the synchronous engine."""
+        try:
+            loaded = load_pytree(path, self._ckpt_tree())
+        except ValueError as e:
+            raise ValueError(
+                "checkpoint does not match this engine's state layout "
+                f"({self.worker.name}): {e}"
+            ) from e
+        if int(np.asarray(loaded["worker_fp"])) != self.worker.fingerprint:
+            raise ValueError(
+                "checkpoint was written by a run with a different optimizer "
+                f"(engine runs {self.worker.name})"
+            )
+        if not np.array_equal(
+            np.asarray(loaded["rng0"]), np.asarray(self._rng0)
+        ):
+            raise ValueError(
+                "checkpoint was written by a run with a different seed"
+            )
+        m = self.config.num_workers
+        self._state = loaded["worker_state"]
+        self._ef = loaded["ef"]
+        self._srv_payload = loaded["srv_payload"]
+        self._srv_sw = np.asarray(loaded["srv_sw"]).copy()
+        self._srv_version = np.asarray(loaded["srv_version"]).copy()
+        self._heard = np.asarray(loaded["heard"]).copy()
+        self._status = np.asarray(loaded["status"]).copy()
+        self._ev_round = np.asarray(loaded["ev_round"]).copy()
+        self._ev_is_phase = np.asarray(loaded["ev_is_phase"]).copy()
+        self._progress = np.asarray(loaded["progress"]).copy()
+        self._steps_cum = np.asarray(loaded["steps_cum"]).copy()
+        self._steps_recorded = np.asarray(loaded["steps_recorded"]).copy()
+        self._ev_time = _f64_unbytes(loaded["ev_time"], m)
+        self._ev_busy = _f64_unbytes(loaded["ev_busy"], m)
+        self._busy_s = _f64_unbytes(loaded["busy_s"], m)
+        self._done_at = _f64_unbytes(loaded["done_at"], m)
+        self.now = float(_f64_unbytes(loaded["now"], 1)[0])
+        self.n_admissions = int(np.asarray(loaded["n_admissions"]))
+        self._final_recorded = bool(np.asarray(loaded["final_recorded"]))
+        self._heap = []
+        for w in range(m):
+            if self._status[w] == _COMPUTE:
+                heapq.heappush(
+                    self._heap, (float(self._ev_time[w]), _EV_START, w)
+                )
+            elif self._status[w] == _UPLINK:
+                heapq.heappush(
+                    self._heap, (float(self._ev_time[w]), _EV_ARRIVE, w)
+                )
+        # drop telemetry from admissions past the restore point so a
+        # rewound engine doesn't accumulate duplicate records
+        self.trace.rounds = [
+            rec for rec in self.trace.rounds if rec.round < self.n_admissions
+        ]
+        return self
+
+
+def _f64_bytes(arr: np.ndarray) -> jnp.ndarray:
+    return jnp.asarray(
+        np.frombuffer(np.ascontiguousarray(arr, np.float64).tobytes(),
+                      np.uint8)
+    )
+
+
+def _f64_unbytes(leaf, n: int) -> np.ndarray:
+    return np.frombuffer(
+        np.asarray(leaf, np.uint8).tobytes(), np.float64
+    ).reshape(n).copy()

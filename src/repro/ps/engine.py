@@ -121,6 +121,163 @@ def _per_worker(mask, leaf):
     return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
 
 
+def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
+                      num_workers: int):
+    """Line 5–8 on the stacked worker axis: compress(w·payload) per worker,
+    server sum, broadcast to survivors. The returned function takes
+    ``(state, ef, alive_r, c_rng)``; ``alive_r is None`` means the fault
+    policy statically guarantees everyone is up — that path emits the *same
+    expressions* as the one-shot drivers' syncs, so identity/no-fault
+    rounds stay bit-exact with them (dynamic all-True masks would still
+    perturb XLA fusion).
+
+    Module-level so the event-driven engine can build the *identical*
+    program: bit-parity between the engines is shared code, not a
+    maintained coincidence.
+    """
+    comp = compressor
+    m = num_workers
+
+    def sync_stacked(state, ef, alive_r, c_rng):
+        sw = jax.vmap(worker.sync_weight)(state)              # (M,)
+        if alive_r is None:
+            any_alive = None
+            w = sw / jnp.sum(sw)
+        else:
+            w_raw = jnp.where(alive_r, sw, jnp.zeros_like(sw))
+            denom = jnp.sum(w_raw)
+            any_alive = denom > 0.0
+            w = w_raw / jnp.where(any_alive, denom, 1.0)
+
+        payload = worker.sync_payload(state)
+        messages = jax.tree.map(
+            lambda leaf: _per_worker(w, leaf).astype(leaf.dtype) * leaf,
+            payload,
+        )
+        if comp.is_identity:
+            sent, ef_new = messages, ef
+        elif alive_r is None:
+            c_rngs = jax.random.split(c_rng, m)
+            eff = tree_add(messages, ef) if comp.error_feedback else messages
+            sent = jax.vmap(comp.compress)(eff, c_rngs)
+            ef_new = tree_sub(eff, sent) if comp.error_feedback else ef
+        else:
+            c_rngs = jax.random.split(c_rng, m)
+            eff = tree_add(messages, ef) if comp.error_feedback else messages
+            sent = jax.vmap(comp.compress)(eff, c_rngs)
+            # dead workers send nothing and keep their error memory frozen
+            sent = jax.tree.map(
+                lambda s: jnp.where(_per_worker(alive_r, s), s, 0.0), sent
+            )
+            if comp.error_feedback:
+                ef_new = jax.tree.map(
+                    lambda e_new, e_old: jnp.where(
+                        _per_worker(alive_r, e_new), e_new, e_old
+                    ),
+                    tree_sub(eff, sent), ef,
+                )
+            else:
+                ef_new = ef
+
+        if alive_r is None:
+            synced = jax.tree.map(
+                lambda s: jnp.broadcast_to(
+                    jnp.sum(s, axis=0, keepdims=True), s.shape
+                ),
+                sent,
+            )
+        else:
+            recv = jnp.logical_and(alive_r, any_alive)        # (M,)
+            synced = jax.tree.map(
+                lambda s, old: jnp.where(
+                    _per_worker(recv, old),
+                    jnp.broadcast_to(
+                        jnp.sum(s, axis=0, keepdims=True), old.shape
+                    ),
+                    old,
+                ),
+                sent, payload,
+            )
+        return worker.merge_synced(state, synced), ef_new
+
+    return sync_stacked
+
+
+def make_serial_chunk(
+    problem: MinimaxProblem,
+    worker: LocalWorker,
+    compressor: SyncCompressor,
+    num_workers: int,
+    k_pad: int,
+    eval_fn,
+    no_faults: bool,
+):
+    """Build the serial-path round chunk: scan of (sync → K_m^r masked local
+    steps) over a leading rounds axis. ``PSEngine`` jits this as its whole
+    execution path; ``AsyncPSEngine`` jits the identical program and feeds
+    it one-round slices whenever an admission batch is full-fleet lockstep,
+    which is what makes the synchronous engine a *bit-exact special case*
+    of the event-driven one (the chunking-invariance test pins that a
+    1-round slice equals the full scan)."""
+    m = num_workers
+    sync_stacked = make_sync_stacked(worker, compressor, m)
+
+    vstep = jax.vmap(
+        lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
+    )
+    veta = jax.vmap(worker.eta)
+
+    def round_body(carry, inputs):
+        state, ef = carry
+        rng_round, ks_r, alive_r, counts_r = inputs
+
+        state, ef = sync_stacked(
+            state, ef, None if no_faults else alive_r,
+            jax.random.fold_in(rng_round, 7),
+        )
+
+        # Line 3–4: K_m^r masked local steps.
+        step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
+            k_pad, m, 2
+        )
+
+        def body(st, inp):
+            rngs, i = inp
+            enabled = i < ks_r
+            if not no_faults:
+                enabled = jnp.logical_and(enabled, alive_r)
+            st = vstep(st, rngs, enabled)
+            return st, None
+
+        state, _ = lax.scan(
+            body, state, (step_rngs, jnp.arange(k_pad))
+        )
+
+        eta_end = veta(state)                             # (M,)
+        if eval_fn is None:
+            res = jnp.float32(jnp.nan)
+        else:
+            counts = jnp.where(
+                jnp.sum(counts_r) > 0.0, counts_r,
+                jnp.ones_like(counts_r),
+            )
+            res = jnp.asarray(
+                eval_fn(weighted_worker_average(
+                    worker.output(state), counts
+                )),
+                dtype=jnp.float32,
+            )
+        return (state, ef), (eta_end, res)
+
+    def chunk(state, ef, round_rngs, ks, alive, counts_cum):
+        (state, ef), (etas, ress) = lax.scan(
+            round_body, (state, ef), (round_rngs, ks, alive, counts_cum)
+        )
+        return state, ef, etas, ress
+
+    return chunk
+
+
 class PSEngine:
     """Configurable Parameter-Server runtime, generic over LocalWorker."""
 
@@ -228,139 +385,12 @@ class PSEngine:
     # Round-loop bodies
     # ------------------------------------------------------------------
 
-    def _sync_stacked(self, state, ef, alive_r, c_rng):
-        """Line 5–8 on the stacked worker axis: compress(w·payload) per
-        worker, server sum, broadcast to survivors. ``alive_r is None``
-        means the fault policy statically guarantees everyone is up — that
-        path emits the *same expressions* as the one-shot drivers' syncs,
-        so identity/no-fault rounds stay bit-exact with them (dynamic
-        all-True masks would still perturb XLA fusion)."""
-        worker = self.worker
-        comp = self.compressor
-        m = self.config.num_workers
-
-        sw = jax.vmap(worker.sync_weight)(state)              # (M,)
-        if alive_r is None:
-            any_alive = None
-            w = sw / jnp.sum(sw)
-        else:
-            w_raw = jnp.where(alive_r, sw, jnp.zeros_like(sw))
-            denom = jnp.sum(w_raw)
-            any_alive = denom > 0.0
-            w = w_raw / jnp.where(any_alive, denom, 1.0)
-
-        payload = worker.sync_payload(state)
-        messages = jax.tree.map(
-            lambda leaf: _per_worker(w, leaf).astype(leaf.dtype) * leaf,
-            payload,
-        )
-        if comp.is_identity:
-            sent, ef_new = messages, ef
-        elif alive_r is None:
-            c_rngs = jax.random.split(c_rng, m)
-            eff = tree_add(messages, ef) if comp.error_feedback else messages
-            sent = jax.vmap(comp.compress)(eff, c_rngs)
-            ef_new = tree_sub(eff, sent) if comp.error_feedback else ef
-        else:
-            c_rngs = jax.random.split(c_rng, m)
-            eff = tree_add(messages, ef) if comp.error_feedback else messages
-            sent = jax.vmap(comp.compress)(eff, c_rngs)
-            # dead workers send nothing and keep their error memory frozen
-            sent = jax.tree.map(
-                lambda s: jnp.where(_per_worker(alive_r, s), s, 0.0), sent
-            )
-            if comp.error_feedback:
-                ef_new = jax.tree.map(
-                    lambda e_new, e_old: jnp.where(
-                        _per_worker(alive_r, e_new), e_new, e_old
-                    ),
-                    tree_sub(eff, sent), ef,
-                )
-            else:
-                ef_new = ef
-
-        if alive_r is None:
-            synced = jax.tree.map(
-                lambda s: jnp.broadcast_to(
-                    jnp.sum(s, axis=0, keepdims=True), s.shape
-                ),
-                sent,
-            )
-        else:
-            recv = jnp.logical_and(alive_r, any_alive)        # (M,)
-            synced = jax.tree.map(
-                lambda s, old: jnp.where(
-                    _per_worker(recv, old),
-                    jnp.broadcast_to(
-                        jnp.sum(s, axis=0, keepdims=True), old.shape
-                    ),
-                    old,
-                ),
-                sent, payload,
-            )
-        return worker.merge_synced(state, synced), ef_new
-
     def _make_serial_chunk(self):
-        problem, worker = self.problem, self.worker
-        m, k_pad = self.config.num_workers, self._k_pad
-        eval_fn = self.eval_fn
-
-        vstep = jax.vmap(
-            lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
+        return make_serial_chunk(
+            self.problem, self.worker, self.compressor,
+            self.config.num_workers, self._k_pad, self.eval_fn,
+            self._no_faults,
         )
-        veta = jax.vmap(worker.eta)
-
-        no_faults = self._no_faults
-
-        def round_body(carry, inputs):
-            state, ef = carry
-            rng_round, ks_r, alive_r, counts_r = inputs
-
-            state, ef = self._sync_stacked(
-                state, ef, None if no_faults else alive_r,
-                jax.random.fold_in(rng_round, 7),
-            )
-
-            # Line 3–4: K_m^r masked local steps.
-            step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
-                k_pad, m, 2
-            )
-
-            def body(st, inp):
-                rngs, i = inp
-                enabled = i < ks_r
-                if not no_faults:
-                    enabled = jnp.logical_and(enabled, alive_r)
-                st = vstep(st, rngs, enabled)
-                return st, None
-
-            state, _ = lax.scan(
-                body, state, (step_rngs, jnp.arange(k_pad))
-            )
-
-            eta_end = veta(state)                             # (M,)
-            if eval_fn is None:
-                res = jnp.float32(jnp.nan)
-            else:
-                counts = jnp.where(
-                    jnp.sum(counts_r) > 0.0, counts_r,
-                    jnp.ones_like(counts_r),
-                )
-                res = jnp.asarray(
-                    eval_fn(weighted_worker_average(
-                        worker.output(state), counts
-                    )),
-                    dtype=jnp.float32,
-                )
-            return (state, ef), (eta_end, res)
-
-        def chunk(state, ef, round_rngs, ks, alive, counts_cum):
-            (state, ef), (etas, ress) = lax.scan(
-                round_body, (state, ef), (round_rngs, ks, alive, counts_cum)
-            )
-            return state, ef, etas, ress
-
-        return chunk
 
     def _make_sharded_chunk(self):
         from jax.experimental.shard_map import shard_map

@@ -1,14 +1,27 @@
-"""Per-round telemetry for the Parameter-Server engine.
+"""Per-round telemetry for the Parameter-Server engines.
 
-One :class:`RoundRecord` per engine round: communication volume (bytes up =
-survivors × compressed message size, bytes down = survivors × dense anchor
-broadcast), the effective local step count per worker, the aliveness mask,
-the η spread across workers at the end of the round, the round's wall-clock
-share and local-steps/sec throughput, and — when the engine was given an
-``eval_fn`` — the problem residual of the running global output iterate.
-The recorder serializes to JSON for the bench harnesses
-(``benchmarks/bench_ps.py``, ``benchmarks/bench_fig4_scenarios.py``) and
-for offline plotting.
+One :class:`RoundRecord` per engine round (synchronous ``PSEngine``) or per
+server admission batch (event-driven ``AsyncPSEngine``): communication
+volume (bytes up = survivors × compressed message size, bytes down =
+survivors × dense anchor broadcast), the effective local step count per
+worker, the aliveness/participation mask, the η spread across workers at the
+end of the round, the round's wall-clock share and local-steps/sec
+throughput, and — when the engine was given an ``eval_fn`` — the problem
+residual of the running global output iterate.
+
+Records from the async engine additionally carry the *simulated-time* story:
+``sim_time_s`` (when the server admitted the batch on the simulated clock),
+``staleness`` (per worker, how many rounds behind the freshest contribution
+its stored payload is) and ``idle_frac`` (fleet fraction of simulated time
+spent blocked on communication or the staleness bound rather than
+computing). All three default to ``None`` so traces written before the
+async engine existed still load.
+
+The recorder serializes to JSON (:meth:`TraceRecorder.save`) and loads back
+(:meth:`TraceRecorder.load` — the inverse, tolerant of records written by
+newer versions with extra fields) for the bench harnesses
+(``benchmarks/bench_ps.py``, ``benchmarks/bench_async.py``,
+``benchmarks/bench_fig4_scenarios.py``) and for offline plotting.
 """
 from __future__ import annotations
 
@@ -30,6 +43,10 @@ class RoundRecord:
     residual: float | None = None
     wall_time_s: float | None = None   # this round's share of chunk wall time
     steps_per_sec: float | None = None  # effective local steps / wall_time_s
+    # --- async (simulated-time) telemetry; None for synchronous engines ----
+    sim_time_s: float | None = None    # simulated clock at server admission
+    staleness: list | None = None      # per worker: rounds behind freshest
+    idle_frac: float | None = None     # fleet idle fraction up to sim_time_s
 
     @property
     def eta_spread(self) -> float:
@@ -66,6 +83,30 @@ class TraceRecorder:
                    if r.wall_time_s is not None)
 
     @property
+    def sim_time_s(self) -> float | None:
+        """Final simulated-clock reading (async engines only)."""
+        times = [r.sim_time_s for r in self.rounds if r.sim_time_s is not None]
+        return max(times) if times else None
+
+    @property
+    def max_staleness(self) -> int | None:
+        """Largest per-entry staleness any admission ever averaged over
+        (``None`` entries — workers the server hadn't heard from yet — are
+        ignored)."""
+        vals = [s for r in self.rounds if r.staleness
+                for s in r.staleness if s is not None]
+        return int(max(vals)) if vals else None
+
+    def time_to_residual(self, target: float) -> float | None:
+        """First simulated time at which the recorded residual reached
+        ``target`` — the time-to-accuracy metric ``bench_async`` plots."""
+        for r in self.rounds:
+            if (r.sim_time_s is not None and r.residual is not None
+                    and r.residual <= target):
+                return float(r.sim_time_s)
+        return None
+
+    @property
     def steps_per_sec(self) -> float | None:
         """Aggregate local-steps/sec over every timed round."""
         timed = [r for r in self.rounds if r.wall_time_s]
@@ -88,6 +129,16 @@ class TraceRecorder:
         residuals = [r.residual for r in self.rounds if r.residual is not None]
         if residuals:
             out["final_residual"] = residuals[-1]
+        sim = self.sim_time_s
+        if sim is not None:
+            out["sim_time_s"] = sim
+            stale = self.max_staleness
+            if stale is not None:
+                out["max_staleness"] = stale
+            idles = [r.idle_frac for r in self.rounds
+                     if r.idle_frac is not None]
+            if idles:
+                out["idle_frac"] = idles[-1]
         return out
 
     # -- serialization ------------------------------------------------------
@@ -114,9 +165,16 @@ class TraceRecorder:
 
     @classmethod
     def load(cls, path: str) -> "TraceRecorder":
+        """Inverse of :meth:`save`. Fields missing from old trace files fall
+        back to the RoundRecord defaults, and fields this version doesn't
+        know (written by a newer one) are dropped — so bench/plot code can
+        read any vintage of trace through one API instead of re-parsing the
+        JSON by hand."""
         with open(path) as f:
             payload = json.load(f)
+        known = {f.name for f in dataclasses.fields(RoundRecord)}
         rec = cls(meta=payload.get("meta"))
         for r in payload.get("rounds", []):
-            rec.record(RoundRecord(**r))
+            rec.record(RoundRecord(**{k: v for k, v in r.items()
+                                      if k in known}))
         return rec

@@ -11,6 +11,12 @@ from hypothesis.extra import numpy as hnp
 
 from repro.core import AdaSEGConfig, sync_weighted_stacked
 from repro.core.adaseg import eta_of
+from repro.ps import (
+    ElasticSchedule,
+    FixedSchedule,
+    StragglerSchedule,
+    UniformSchedule,
+)
 from repro.roofline.hlo_parse import _decode_groups, classify_axes
 
 _pos_floats = st.floats(0.01, 100.0, width=32, allow_nan=False,
@@ -54,6 +60,52 @@ def test_eta_scale_covariance(d, alpha):
     np.testing.assert_allclose(
         2 * float(eta_of(cfg1, s)), float(eta_of(cfg2, s)), rtol=1e-6
     )
+
+
+# --- Worker-schedule properties ---------------------------------------------
+#
+# Every WorkerSchedule must be (a) reproducible from its config alone — the
+# engines never store the (R, M) table, they re-derive it, which is what
+# makes checkpoint/resume (sync round counter, async event queue) bit-exact
+# — and (b) bounded by max_steps, the static scan length both engines pad
+# to (a larger entry would silently truncate local work while still being
+# counted).
+
+@st.composite
+def _schedules(draw):
+    m = draw(st.integers(1, 8))
+    k = draw(st.integers(1, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    kind = draw(st.sampled_from(["uniform", "fixed", "straggler", "elastic"]))
+    if kind == "uniform":
+        sched = UniformSchedule(k)
+    elif kind == "fixed":
+        sched = FixedSchedule(tuple(
+            draw(st.lists(st.integers(1, 64), min_size=m, max_size=m))))
+    elif kind == "straggler":
+        slow = draw(st.lists(st.integers(0, m - 1), max_size=m, unique=True))
+        sched = StragglerSchedule(
+            k=k, min_frac=draw(st.floats(0.05, 1.0, allow_nan=False)),
+            seed=seed, slow_workers=tuple(slow))
+    else:
+        sched = ElasticSchedule(
+            UniformSchedule(k), dropout=draw(st.floats(0.0, 1.0,
+                                                       allow_nan=False)),
+            seed=seed)
+    return sched, m, draw(st.integers(1, 30))
+
+
+@given(_schedules())
+@settings(max_examples=80, deadline=None)
+def test_schedule_reproducible_and_bounded(case):
+    sched, m, rounds = case
+    a = sched.steps(m, rounds)
+    b = sched.steps(m, rounds)          # re-derived, as resume does
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (rounds, m)
+    assert np.issubdtype(a.dtype, np.integer)
+    assert (a >= 0).all()
+    assert (a <= sched.max_steps(m)).all()
 
 
 # --- HLO parser properties ---------------------------------------------------

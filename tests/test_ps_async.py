@@ -1,0 +1,454 @@
+"""Event-driven async PS engine: sync-parity anchor, bounded staleness,
+latency models, simulated-time telemetry, and event-queue crash/resume."""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import AdaSEGConfig
+from repro.optim import MinimaxWorker, adam_minimax, segda
+from repro.problems import make_bilinear_game
+from repro.ps import (
+    AsyncPSConfig,
+    AsyncPSEngine,
+    BernoulliFaults,
+    ConstantLatency,
+    FixedSchedule,
+    LognormalLatency,
+    MarkovLatency,
+    PSConfig,
+    PSEngine,
+    StochasticQuantizeCompressor,
+    StragglerSchedule,
+    TraceLatency,
+)
+
+M, R, K = 4, 6, 5
+N = 10
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_bilinear_game(jax.random.PRNGKey(0), n=N, sigma=0.1)
+
+
+def _cfg(k=K):
+    return AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=k)
+
+
+def _as_async(pscfg: PSConfig, **extra) -> AsyncPSConfig:
+    base = {f.name: getattr(pscfg, f.name)
+            for f in dataclasses.fields(PSConfig)}
+    return AsyncPSConfig(**base, **extra)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Parity anchor: degenerate latency reproduces the synchronous engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tau", [math.inf, 0.0])
+def test_lockstep_parity_adaseg_bit_exact(game, tau):
+    """Worker-equal constant latency + identity compression + no faults:
+    the event-driven engine must be bit-exact with PSEngine's serial path —
+    the subsystem's acceptance bar (both at τ=∞, where nothing ever
+    blocks, and τ=0, where the staleness bound degenerates to a barrier)."""
+    pscfg = PSConfig(adaseg=_cfg(), num_workers=M, rounds=R)
+    eng = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(2))
+    z_sync = eng.run()
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(pscfg, latency=ConstantLatency(step_s=1.0, up_s=0.5,
+                                                 down_s=0.25),
+                  staleness_bound=tau),
+        rng=jax.random.PRNGKey(2))
+    z_async = a.run()
+    _assert_trees_equal(z_sync, z_async)
+    _assert_trees_equal(eng.state, a.state)
+    # the simulated clock actually advanced (R compute phases + comm)
+    assert a.sim_time == pytest.approx(R * (K * 1.0 + 0.75))
+
+
+def test_lockstep_parity_zoo_worker(game):
+    """Same anchor for a MinimaxWorker: the zoo runs unmodified on the
+    event-driven runtime and stays bit-exact with the sync engine."""
+    pscfg = PSConfig(worker=MinimaxWorker(segda(0.05)), local_k=K,
+                     num_workers=M, rounds=R)
+    eng = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(3))
+    z_sync = eng.run()
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(pscfg, latency=ConstantLatency(step_s=1.0)),
+        rng=jax.random.PRNGKey(3))
+    _assert_trees_equal(z_sync, a.run())
+    _assert_trees_equal(eng.state, a.state)
+
+
+def test_barrier_parity_under_straggler_latency(game):
+    """τ=0 holds every uplink until the whole fleet's round has landed, so
+    even under heterogeneous latency *and* a heterogeneous schedule the
+    barrier run equals the synchronous engine bit-exactly — only the
+    simulated clock (paced by the slowest worker) knows the difference."""
+    pscfg = PSConfig(adaseg=_cfg(), num_workers=M, rounds=R,
+                     schedule=FixedSchedule((5, 4, 3, 2)))
+    eng = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(4))
+    z_sync = eng.run()
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(pscfg,
+                  latency=ConstantLatency(step_s=(1., 2., 1., 3.),
+                                          up_s=0.5, down_s=0.1),
+                  staleness_bound=0.0),
+        rng=jax.random.PRNGKey(4))
+    _assert_trees_equal(z_sync, a.run())
+    _assert_trees_equal(eng.state, a.state)
+    # barrier rounds are paced by the slowest (worker 3: 2 steps × 3 s/step)
+    assert a.idle_fraction() > 0.2
+
+
+def test_adam_zoo_barrier_parity(game):
+    """Inner optimizer state (Adam moments) rides through the async engine:
+    τ=0 under straggler latency still reproduces the sync trajectory."""
+    pscfg = PSConfig(worker=MinimaxWorker(adam_minimax(0.05)), local_k=K,
+                     num_workers=M, rounds=R)
+    eng = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(7))
+    z_sync = eng.run()
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(pscfg,
+                  latency=ConstantLatency(step_s=(1., 2., 1., 3.),
+                                          up_s=0.5, down_s=0.1),
+                  staleness_bound=0.0),
+        rng=jax.random.PRNGKey(7))
+    _assert_trees_equal(z_sync, a.run())
+    _assert_trees_equal(eng.state, a.state)
+
+
+# ---------------------------------------------------------------------------
+# Genuinely asynchronous semantics
+# ---------------------------------------------------------------------------
+
+def test_bounded_staleness_is_enforced(game):
+    """With a 6× straggler and τ=2, no admission may average an entry more
+    than τ rounds behind a *live* contribution's arrival window; with τ=∞
+    the straggler's entry is allowed to age far beyond that."""
+    lat = ConstantLatency(step_s=(1., 1., 1., 6.), up_s=0.2, down_s=0.1)
+    base = PSConfig(adaseg=_cfg(), num_workers=M, rounds=10)
+
+    bounded = AsyncPSEngine(
+        game.problem, _as_async(base, latency=lat, staleness_bound=2.0),
+        rng=jax.random.PRNGKey(5))
+    bounded.run()
+    # staleness telemetry present and capped: an entry can lag at most
+    # τ + 1 rounds (the gate holds round r until r − τ has *arrived*;
+    # the binding worker's own in-flight round adds one)
+    assert bounded.trace.max_staleness <= 3
+    assert any(r.staleness and max(s for s in r.staleness if s is not None) > 0
+               for r in bounded.trace.rounds)
+
+    free = AsyncPSEngine(
+        game.problem, _as_async(base, latency=lat, staleness_bound=math.inf),
+        rng=jax.random.PRNGKey(5))
+    free.run()
+    assert free.trace.max_staleness > 3
+
+
+def test_async_beats_sync_time_to_target(game):
+    """The PR's speed-up bar: under straggler latency, async-τ reaches the
+    barrier run's final residual in strictly less simulated time."""
+    lat = ConstantLatency(step_s=(1., 1., 1., 6.), up_s=0.2, down_s=0.1)
+    D = float(np.sqrt(2 * N))
+    base = PSConfig(adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=10),
+                    num_workers=M, rounds=20)
+
+    def run(tau):
+        e = AsyncPSEngine(
+            game.problem, _as_async(base, latency=lat, staleness_bound=tau),
+            rng=jax.random.PRNGKey(1), eval_fn=game.residual)
+        e.run()
+        return e
+
+    sync = run(0.0)
+    target = sync.trace.summary()["final_residual"]
+    for tau in (2.0, math.inf):
+        t = run(tau).trace.time_to_residual(target)
+        assert t is not None
+        assert t < sync.sim_time, (tau, t, sync.sim_time)
+
+
+def test_per_arrival_broadcast_only_reaches_sender(game):
+    """With τ=∞ and a straggler, fast workers' admissions must not touch
+    the slow worker's state (per-arrival broadcast, not per-barrier): while
+    the straggler computes its first phase, the fast workers complete
+    several rounds and the straggler's iterate stays at zero steps. The
+    uplink is staggered so no admission is ever full-fleet lockstep (a
+    lockstep batch legitimately pre-executes its phases — see the engine
+    docstring)."""
+    lat = ConstantLatency(step_s=(1., 1., 1., 20.), up_s=(0., 0., 0., 0.3))
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(PSConfig(adaseg=_cfg(), num_workers=M, rounds=3),
+                  latency=lat),
+        rng=jax.random.PRNGKey(6))
+    # run past the fast workers' first round-trips but stop well before the
+    # slow worker's first phase (K × 20 s) completes
+    a.run(until_time=K * 2.0 + 0.5)
+    assert a.n_admissions >= 2
+    z3_before = jax.tree.map(
+        lambda v: np.asarray(v[3]).copy(), a.state.z_tilde)
+    assert int(a.state.t[3]) == 0      # straggler: zero completed steps
+    assert int(a.state.t[0]) > 0       # fast workers: several rounds in
+    # fast workers' later admissions never re-broadcast to the straggler
+    a.run(until_time=K * 20.0 * 0.5)
+    assert int(a.state.t[3]) == 0
+    _assert_trees_equal(
+        z3_before,
+        jax.tree.map(lambda v: np.asarray(v[3]), a.state.z_tilde))
+
+
+def test_faults_skip_round_and_rejoin(game):
+    """A worker dead for its own round r sends/receives/steps nothing and
+    rejoins afterwards; the run stays finite and the trace shows the gap."""
+    from repro.ps import OutageFaults
+
+    pscfg = PSConfig(adaseg=_cfg(), num_workers=M, rounds=R,
+                     faults=OutageFaults(events=((2, 1, 3),)))
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(pscfg, latency=ConstantLatency(step_s=1.0, up_s=0.1)),
+        rng=jax.random.PRNGKey(8), eval_fn=game.residual)
+    z = a.run()
+    assert np.isfinite(float(game.residual(z)))
+    # worker 2 skipped exactly rounds 1 and 2 (K steps each)
+    assert int(a.state.t[2]) == (R - 2) * K
+    assert int(a.state.t[0]) == R * K
+    # every admission it missed shows it as non-participating
+    missed = [r for r in a.trace.rounds
+              if not r.alive[2] and any(r.alive)]
+    assert missed
+
+
+def test_compression_and_ef_compose(game):
+    """Quantized uplinks with error feedback run per-payload on the async
+    wire; trajectory stays close to dense and bytes-up shrinks."""
+    base = PSConfig(adaseg=_cfg(k=10), num_workers=M, rounds=10)
+    lat = ConstantLatency(step_s=(1., 1., 1., 3.), up_s=0.2)
+    res = {}
+    for comp in (None, StochasticQuantizeCompressor(bits=8)):
+        pscfg = dataclasses.replace(base, compressor=comp)
+        e = AsyncPSEngine(
+            game.problem, _as_async(pscfg, latency=lat),
+            rng=jax.random.PRNGKey(9))
+        res[comp.name if comp else "dense"] = (
+            float(game.residual(e.run())), e.trace.total_bytes_up)
+    assert np.isfinite(res["q8"][0])
+    assert res["q8"][0] < 2.0 * res["dense"][0]
+    assert res["q8"][1] < res["dense"][1]
+
+
+# ---------------------------------------------------------------------------
+# Latency models
+# ---------------------------------------------------------------------------
+
+def test_latency_models_deterministic():
+    for model in (
+        ConstantLatency(step_s=(1., 2., 1., 3.), up_s=0.5),
+        LognormalLatency(step_s=1.0, sigma=0.7, up_s=0.1, net_sigma=0.3,
+                         seed=11),
+        MarkovLatency(step_s=1.0, slow_factor=8.0, p_slow=0.2,
+                      p_recover=0.3, seed=12, start_slow=(1,)),
+        TraceLatency(step_s=[[1., 2., 1., 4.], [2., 1., 1., 1.]],
+                     up_s=0.3),
+    ):
+        a, b = model.tables(4, 9), model.tables(4, 9)
+        np.testing.assert_array_equal(a.step_s, b.step_s)
+        np.testing.assert_array_equal(a.up_s, b.up_s)
+        np.testing.assert_array_equal(a.down_s, b.down_s)
+        assert a.step_s.shape == (9, 4)
+        assert (a.step_s >= 0).all()
+
+
+def test_markov_latency_start_slow_and_recovers():
+    m = MarkovLatency(step_s=1.0, slow_factor=5.0, p_slow=0.0,
+                      p_recover=1.0, seed=0, start_slow=(0,))
+    t = m.tables(2, 4)
+    assert t.step_s[0, 0] == 5.0          # starts slow
+    assert (t.step_s[1:, 0] == 1.0).all()  # p_recover=1 → fast from round 1
+    assert (t.step_s[:, 1] == 1.0).all()   # p_slow=0 → never degrades
+
+
+def test_trace_latency_tiles_rounds():
+    t = TraceLatency(step_s=[[1., 2.], [3., 4.]]).tables(2, 5)
+    np.testing.assert_array_equal(t.step_s[:, 0], [1., 3., 1., 3., 1.])
+    with pytest.raises(ValueError):
+        TraceLatency(step_s=[[1., 2., 3.]]).tables(2, 4)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry and checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def test_async_trace_fields_and_roundtrip(game, tmp_path):
+    lat = LognormalLatency(step_s=1.0, sigma=0.5, up_s=0.2, seed=3)
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(PSConfig(adaseg=_cfg(), num_workers=M, rounds=R),
+                  latency=lat, staleness_bound=3.0),
+        rng=jax.random.PRNGKey(10), eval_fn=game.residual)
+    a.run()
+    recs = a.trace.rounds
+    assert all(r.sim_time_s is not None for r in recs)
+    assert all(recs[i].sim_time_s <= recs[i + 1].sim_time_s
+               for i in range(len(recs) - 1))
+    assert all(r.staleness is not None for r in recs)
+    assert any(r.idle_frac is not None and r.idle_frac > 0 for r in recs)
+    summary = a.trace.summary()
+    assert summary["sim_time_s"] == pytest.approx(a.sim_time)
+    assert "idle_frac" in summary and "max_staleness" in summary
+    # save → load round-trips the new fields
+    path = str(tmp_path / "async_trace.json")
+    a.trace.save(path)
+    from repro.ps import TraceRecorder
+
+    loaded = TraceRecorder.load(path)
+    assert loaded.summary() == summary
+    assert loaded.rounds[0].staleness == recs[0].staleness
+    assert loaded.time_to_residual(summary["final_residual"]) is not None
+
+
+def test_event_queue_crash_resume_bit_exact(game):
+    """Kill the simulation mid-event-queue, restore from disk (policies and
+    latency draws re-derived from seeds), and finish: state, simulated
+    clock, admission count and the trace tail all match the uninterrupted
+    run bit-exactly — under the full hostile configuration."""
+    cfg = _as_async(
+        PSConfig(
+            adaseg=_cfg(), num_workers=M, rounds=10,
+            schedule=StragglerSchedule(k=K, min_frac=0.5, seed=2,
+                                       slow_workers=(3,)),
+            compressor=StochasticQuantizeCompressor(bits=8),
+            faults=BernoulliFaults(p=0.1, seed=3),
+        ),
+        latency=MarkovLatency(step_s=1.0, slow_factor=6.0, p_slow=0.2,
+                              p_recover=0.4, up_s=0.3, down_s=0.2, seed=5,
+                              start_slow=(1,)),
+        staleness_bound=2.0,
+    )
+
+    def fresh():
+        return AsyncPSEngine(game.problem, cfg, rng=jax.random.PRNGKey(4),
+                             eval_fn=game.residual)
+
+    ref = fresh()
+    z_ref = ref.run()
+
+    import os
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = os.path.join(tmp, "engine.msgpack")
+        e1 = fresh()
+        e1.run(until_time=ref.sim_time / 2)
+        assert not e1.done
+        e1.save(ck)
+        e2 = fresh().restore(ck)
+        z2 = e2.run()
+
+    _assert_trees_equal(z_ref, z2)
+    _assert_trees_equal(ref.state, e2.state)
+    assert ref.sim_time == e2.sim_time
+    assert ref.n_admissions == e2.n_admissions
+    tail = [r for r in ref.trace.rounds
+            if r.round >= e2.trace.rounds[0].round]
+    assert [dataclasses.asdict(r) for r in tail] == [
+        dataclasses.asdict(r) for r in e2.trace.rounds]
+
+
+def test_restore_rejects_wrong_seed_and_optimizer(game, tmp_path):
+    cfg = _as_async(PSConfig(adaseg=_cfg(), num_workers=M, rounds=R),
+                    latency=ConstantLatency(step_s=1.0))
+    path = str(tmp_path / "a.msgpack")
+    e1 = AsyncPSEngine(game.problem, cfg, rng=jax.random.PRNGKey(4))
+    e1.run(until_admissions=2)
+    e1.save(path)
+    with pytest.raises(ValueError, match="different seed"):
+        AsyncPSEngine(game.problem, cfg,
+                      rng=jax.random.PRNGKey(5)).restore(path)
+    zoo = _as_async(PSConfig(worker=MinimaxWorker(segda(0.05)), local_k=K,
+                             num_workers=M, rounds=R),
+                    latency=ConstantLatency(step_s=1.0))
+    with pytest.raises(ValueError):
+        AsyncPSEngine(game.problem, zoo,
+                      rng=jax.random.PRNGKey(4)).restore(path)
+
+
+def test_run_until_admissions_and_resume_points(game):
+    """Chunked driving: run(until_admissions=n) repeatedly equals one
+    uninterrupted run — the invariant checkpoint_every rides on."""
+    cfg = _as_async(PSConfig(adaseg=_cfg(), num_workers=M, rounds=R),
+                    latency=ConstantLatency(step_s=(1., 2., 1., 3.),
+                                            up_s=0.2),
+                    staleness_bound=1.0)
+    e1 = AsyncPSEngine(game.problem, cfg, rng=jax.random.PRNGKey(11))
+    z1 = e1.run()
+    e2 = AsyncPSEngine(game.problem, cfg, rng=jax.random.PRNGKey(11))
+    n = 0
+    while not e2.done:
+        n += 2
+        e2.run(until_admissions=n)
+    _assert_trees_equal(z1, e2.z_bar())
+    _assert_trees_equal(e1.state, e2.state)
+    assert e1.sim_time == e2.sim_time
+
+
+def test_partial_first_admission_telemetry(game):
+    """Per-worker uplink delays make the first admission partial (some
+    workers unheard → staleness None): the trace summary, max_staleness and
+    save must all still work, and total_steps must equal the work actually
+    done — including the final phases no admission covers."""
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(PSConfig(adaseg=_cfg(), num_workers=M, rounds=R),
+                  latency=ConstantLatency(step_s=1.0,
+                                          up_s=(0.0, 0.1, 0.2, 0.3))),
+        rng=jax.random.PRNGKey(12))
+    a.run()
+    first = a.trace.rounds[0]
+    assert None in first.staleness           # someone was unheard
+    assert isinstance(a.trace.max_staleness, int)
+    summary = a.trace.summary()              # must not raise
+    assert summary["total_steps"] == int(a._steps_cum.sum()) == M * R * K
+
+
+def test_all_dead_fleet_completes(game):
+    """A fleet that never uplinks anything (every round dead for every
+    worker) still finishes: reboots burn simulated time, the heap drains,
+    and the terminal record is written instead of crashing."""
+    from repro.ps import OutageFaults
+
+    pscfg = PSConfig(adaseg=_cfg(), num_workers=2, rounds=2,
+                     faults=OutageFaults(events=((0, 0, 2), (1, 0, 2))))
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(pscfg, latency=ConstantLatency(step_s=1.0)),
+        rng=jax.random.PRNGKey(13))
+    z = a.run()
+    assert a.done and a.n_admissions == 0
+    assert np.isfinite(float(game.residual(z)))
+    assert a.trace.rounds[-1].staleness == [None, None]
+    assert a.trace.summary()["total_steps"] == 0
+
+
+def test_async_rejects_negative_tau(game):
+    with pytest.raises(ValueError):
+        AsyncPSEngine(
+            game.problem,
+            _as_async(PSConfig(adaseg=_cfg(), num_workers=M, rounds=R),
+                      staleness_bound=-1.0),
+            rng=jax.random.PRNGKey(0))

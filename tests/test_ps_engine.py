@@ -195,6 +195,47 @@ def test_trace_json_roundtrip(game, tmp_path):
     assert loaded.summary() == engine.trace.summary()
 
 
+def test_trace_load_accepts_other_vintages(tmp_path):
+    """TraceRecorder.load is the inverse of save across format versions:
+    records written before the async engine existed (no sim_time_s /
+    staleness / idle_frac keys) fall back to defaults, and keys from a
+    newer version than this one are dropped instead of crashing."""
+    old = {
+        "meta": {"optimizer": "adaseg", "compressor": "identity"},
+        "summary": {"rounds": 1},
+        "rounds": [{
+            "round": 0,
+            "local_steps": [5, 5],
+            "alive": [True, True],
+            "bytes_up": 80.0,
+            "bytes_down": 80.0,
+            "eta_min": 0.5,
+            "eta_max": 0.7,
+            "eta_mean": 0.6,
+            # pre-PR-4 file: no residual/wall/sim-time keys at all
+        }],
+    }
+    path = tmp_path / "old_trace.json"
+    path.write_text(json.dumps(old))
+    from repro.ps import TraceRecorder
+    tr = TraceRecorder.load(str(path))
+    rec = tr.rounds[0]
+    assert rec.local_steps == [5, 5]
+    assert rec.residual is None and rec.sim_time_s is None
+    assert rec.staleness is None and rec.idle_frac is None
+    assert tr.sim_time_s is None
+    assert "sim_time_s" not in tr.summary()
+
+    future = dict(old)
+    future["rounds"] = [dict(old["rounds"][0],
+                             from_the_future=123, sim_time_s=4.2)]
+    path2 = tmp_path / "future_trace.json"
+    path2.write_text(json.dumps(future))
+    tr2 = TraceRecorder.load(str(path2))
+    assert tr2.rounds[0].sim_time_s == 4.2
+    assert not hasattr(tr2.rounds[0], "from_the_future")
+
+
 def test_engine_rejects_mismatched_schedule(game):
     with pytest.raises(ValueError):
         PSEngine(
