@@ -1,16 +1,22 @@
 """Parameter-Server runtime sweeps (beyond the paper's figures).
 
-Three sweeps on the §4.1 bilinear game, all through ``repro.ps.PSEngine``:
+Four sweeps through ``repro.ps.PSEngine``:
 
 * **compression** — identity vs 8/4-bit stochastic quantization vs top-25%
   sparsification of the uphill w·z̃ messages (error feedback on): KKT
-  residual vs bytes shipped. Acceptance bar: ≥8-bit quantized sync stays
-  within 2× of the uncompressed residual.
+  residual vs bytes shipped, on the §4.1 bilinear game. Acceptance bar:
+  ≥8-bit quantized sync stays within 2× of the uncompressed residual.
 * **dropout** — Bernoulli per-round worker failures at p ∈ {0, 0.1, 0.3}
   with the Line-7 weights renormalized over survivors.
 * **heterogeneity** — Dirichlet-skewed worker oracles (α ∈ {∞, 0.5, 0.1})
   plus a straggler schedule: the federated setting where local methods earn
   their keep.
+* **codec backend** — reference tree-op sync codec vs the fused Pallas
+  uplink/merge kernels (``codec_backend="fused"``) on the same
+  1.25M-parameter pytree ``bench_kernels.bench_step_backends`` times, with
+  the analytic HBM-pass counts of the ``kernels.sync_compress`` traffic
+  model reported alongside (CPU interpret wall-times are not
+  hardware-indicative; the pass counts are the meaningful number).
 """
 from __future__ import annotations
 
@@ -19,7 +25,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core import AdaSEGConfig
+from repro.core import AdaSEGConfig, projections
+from repro.core.types import MinimaxProblem
+from repro.kernels.sync_compress.ops import codec_passes
 from repro.problems import make_bilinear_game
 from repro.ps import (
     BernoulliFaults,
@@ -111,11 +119,77 @@ def run(seed: int = 0) -> dict:
     return out
 
 
+def _bench_problem(n: int):
+    """The 1.25M-param pytree of ``bench_kernels.bench_step_backends``:
+    {x: (n,), y: (n/4,)} with a cheap linear oracle, so the timing isolates
+    the sync machinery rather than the gradient."""
+
+    def pinit(rng):
+        r1, r2 = jax.random.split(rng)
+        return {"x": 0.1 * jax.random.normal(r1, (n,)),
+                "y": 0.1 * jax.random.normal(r2, (n // 4,))}
+
+    def sample(rng):
+        return jax.random.normal(rng, (2,))
+
+    def oracle(z, xi):
+        return jax.tree.map(lambda v: 0.3 * v + xi[0] * 1e-3, z)
+
+    return MinimaxProblem(init=pinit, sample=sample, oracle=oracle,
+                          project=projections.box(-1.0, 1.0), name="bench")
+
+
+def run_codec_backends(seed: int = 0, n: int = 1 << 20, workers: int = 4,
+                       rounds: int = 2, k: int = 2) -> dict:
+    """Reference vs fused sync codec on the 1.25M-param pytree.
+
+    One `ps[codec,...]` row per (codec, backend) with the median per-round
+    wall time and the traffic model's HBM passes per uplink; a final
+    summary row carries the speedups. CPU interpret mode executes the fused
+    kernels as single jnp sweeps — indicative of fusion, not of TPU HBM
+    bandwidth, which is what the pass counts model.
+    """
+    prob = _bench_problem(n)
+    params = n + n // 4
+    out = {}
+    for comp in (StochasticQuantizeCompressor(bits=8),
+                 TopKCompressor(fraction=0.1)):
+        for backend in ("reference", "fused"):
+            cfg = PSConfig(
+                adaseg=AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=k),
+                num_workers=workers, rounds=rounds, compressor=comp,
+                codec_backend=backend,
+            )
+            engine = PSEngine(prob, cfg, rng=jax.random.PRNGKey(seed + 1))
+            engine.step_round()                       # compile 1-round chunk
+            t0 = time.perf_counter()
+            # checkpoint_every=1 (no path) keeps every remaining chunk at
+            # length 1, so the timed loop reuses the compiled chunk instead
+            # of tracing a fresh (rounds-1)-length scan
+            engine.run(checkpoint_every=1)
+            dt = time.perf_counter() - t0
+            per_round = dt / max(rounds - 1, 1) * 1e6
+            out[(comp.name, backend)] = per_round
+            ref_p, fused_p = codec_passes(comp.codec_spec)
+            passes = ref_p if backend == "reference" else fused_p
+            emit(f"ps[codec,{comp.name},{backend},params={params}]",
+                 per_round,
+                 f"hbm_passes_per_uplink={passes};"
+                 f"pass_ratio_vs_ref={passes / ref_p:.2f}")
+    for name in ("q8", "top0.1"):
+        ref, fused = out[(name, "reference")], out[(name, "fused")]
+        emit(f"ps[codec,{name},summary]", 0.0,
+             f"wall_speedup_fused={ref / fused:.2f}x;"
+             f"note=cpu_interpret_wall_not_hw_indicative")
+    return out
+
+
 def main() -> None:
     out = run()
     emit("ps[check]", 0.0,
          f"q8_within_2x={out['q8'] < 2.0 * out['identity']};"
          f"dropout_degrades_gracefully={out['dropout-0.3'] < 4.0 * out['dropout-0.0']}")
+    run_codec_backends()
 
 
 if __name__ == "__main__":

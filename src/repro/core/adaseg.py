@@ -207,9 +207,23 @@ def local_step(
 # Sync functions (Line 7): serial (stacked worker axis) and psum (shard_map).
 # ---------------------------------------------------------------------------
 
-def sync_weighted_stacked(z_tilde: PyTree, inv_eta: jax.Array) -> PyTree:
+def sync_weighted_stacked(z_tilde: PyTree, inv_eta: jax.Array, *,
+                          backend: str = "reference") -> PyTree:
     """Weighted average over a leading worker axis; returns the average
-    broadcast back to every worker (axis preserved)."""
+    broadcast back to every worker (axis preserved).
+
+    ``backend="fused"`` routes through the Pallas server-merge kernel
+    (``kernels.sync_compress.ops.sync_merge_stacked``): the 1/η weight
+    normalization, the weighted sum over workers and the broadcast back run
+    as one read + one write of the stacked fleet payload per leaf, instead
+    of the scale/sum/broadcast tree passes here.
+    """
+    if backend == "fused":
+        from ..kernels.sync_compress.ops import sync_merge_stacked
+
+        return sync_merge_stacked(z_tilde, inv_eta, normalize=True)
+    if backend != "reference":
+        raise ValueError(f"unknown sync backend {backend!r}")
     w = inv_eta / jnp.sum(inv_eta)                      # (M,) simplex weights
 
     def avg(leaf):

@@ -62,7 +62,27 @@ PyTree = Any
 
 
 class LocalWorker:
-    """Base protocol; subclasses fill in the optimizer-specific pieces."""
+    """Base protocol; subclasses fill in the optimizer-specific pieces.
+
+    Examples
+    --------
+    Any worker drives the same engine hooks — init, masked step, sync
+    weight/payload, output:
+
+    >>> import jax
+    >>> from repro.core import AdaSEGConfig
+    >>> from repro.problems import make_bilinear_game
+    >>> game = make_bilinear_game(jax.random.PRNGKey(0), n=4, sigma=0.1)
+    >>> worker = AdaSEGWorker(AdaSEGConfig(g0=1.0, diameter=2.0, k=2))
+    >>> st = worker.init(game.problem, jax.random.PRNGKey(1))
+    >>> st2 = worker.step(game.problem, st, jax.random.PRNGKey(2))
+    >>> int(st2.t), float(worker.sync_weight(st)) > 0
+    (1, True)
+    >>> frozen = worker.step(game.problem, st, jax.random.PRNGKey(2),
+    ...                      enabled=False)
+    >>> int(frozen.t)                 # masked step is a structural no-op
+    0
+    """
 
     name: str = "worker"
 
@@ -121,6 +141,21 @@ class AdaSEGWorker(LocalWorker):
     ``run_local_adaseg`` rng derivation — so the engine with this worker,
     identity compression, no faults and a uniform schedule stays
     **bit-exact** with the one-shot serial driver.
+
+    Examples
+    --------
+    >>> import jax
+    >>> from repro.core import AdaSEGConfig
+    >>> w = AdaSEGWorker(AdaSEGConfig(g0=1.0, diameter=2.0, k=3),
+    ...                  backend="fused")
+    >>> w.name
+    'adaseg(g0=1.0,D=2.0,alpha=1.0,avg=True)'
+    >>> w.fingerprint == AdaSEGWorker(
+    ...     AdaSEGConfig(g0=1.0, diameter=2.0, k=3)).fingerprint
+    True
+    >>> w.fingerprint != AdaSEGWorker(
+    ...     AdaSEGConfig(g0=2.0, diameter=2.0, k=3)).fingerprint
+    True
     """
 
     cfg: AdaSEGConfig

@@ -7,6 +7,12 @@
   or two-pass l2-ball projection, and the (Z_t)²/‖G‖² reductions fused into
   the update passes. This is the production step path — selected by
   ``core.adaseg.local_step(backend="fused")``.
+* ``sync_compress``  — fused Parameter-Server sync codecs: the Line-5/7
+  uplink (error-feedback add + 1/η weighting + stochastic quantize with
+  in-kernel threefry bits / top-k masking + residual write-back) and the
+  server-side weighted merge, one HBM sweep each where the reference path
+  takes ~5 tree passes. Selected by ``codec_backend="fused"`` on
+  ``repro.ps`` engine configs.
 * ``ssd_scan``       — Mamba2 SSD chunked scan (intra-chunk MXU matmuls +
   inter-chunk recurrence over summary states).
 

@@ -22,6 +22,23 @@ kernel can fuse them without a semantics fork:
 η handling mirrors the kernels: pass ``eta=`` directly, or ``sum_sq=`` (the
 AdaGrad accumulator Σ(Z_τ)²) plus static ``g0``/``d_alpha`` to fuse
 η = D·α/√(G₀² + Σ) into the kernels.
+
+Examples
+--------
+The one-shot fused double update with η computed in-kernel from the
+AdaGrad accumulator, box projection fused:
+
+>>> import jax, jax.numpy as jnp, numpy as np
+>>> from repro.kernels.adaseg_update.ops import adaseg_tree_update
+>>> z = {"w": jnp.array([0.5, -0.8, 0.2])}
+>>> m = jax.tree.map(lambda v: 0.3 * v, z)
+>>> g = jax.tree.map(lambda v: 0.1 * v, z)
+>>> z_t, z_tl, zsq = adaseg_tree_update(z, m, g, sum_sq=4.0, g0=1.0,
+...                                     d_alpha=2.0, lo=-1.0, hi=1.0)
+>>> ref = adaseg_tree_update(z, m, g, sum_sq=4.0, g0=1.0, d_alpha=2.0,
+...                          lo=-1.0, hi=1.0, use_kernel=False)
+>>> bool(np.allclose(z_t["w"], ref[0]["w"], rtol=1e-6))
+True
 """
 from __future__ import annotations
 

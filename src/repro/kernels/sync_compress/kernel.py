@@ -1,0 +1,354 @@
+"""Fused sync-codec Pallas kernels: the Line-5/7 uplink and server merge.
+
+The Parameter-Server sync round is memory-bound: the reference path forms
+``messages = w·payload``, adds the error-feedback residual, reduces the
+quantizer scale, quantizes (or top-k masks), writes the new residual and
+finally weighted-sums the fleet — each as its own pass over the parameter
+vector (~5 tree sweeps before XLA fusion, ~12 HBM passes by the traffic
+model). The kernels here fuse every element-wise stage of that pipeline so
+each HBM pass does all the work available at that point:
+
+* :func:`uplink_stats`    — quantize pass 1: the scale reduction
+  ``max|w·z + ef|`` computed straight from the raw payload and residual
+  (``eff`` is never materialized).
+* :func:`quantize_uplink` — quantize pass 2: stochastic uniform quantization
+  of ``eff`` with the rounding bits generated **in-register** (explicit
+  threefry2x32 on the element counter — the shared derivation of
+  :mod:`.ref`), the per-worker Line-7 weight applied on load, and the
+  residual ``eff − sent`` written back in the same pass.
+* :func:`eff_uplink`      — top-k pass 1: materialize ``eff = w·z + ef``
+  (the host selects the top-k indices on it).
+* :func:`mask_uplink`     — top-k pass 2: apply the survivor mask and write
+  the complementary residual in one pass.
+* :func:`merge_stacked`   — the server side: weight normalization
+  (optionally over survivors), weighted sum over the worker axis and the
+  broadcast back, one read + one write of the stacked fleet payload.
+
+Layout mirrors ``kernels.adaseg_update``: leaves arrive worker-stacked and
+flattened as ``(M, n)``, tiled to ``(M, nb·block)``; uplink kernels run on a
+``(M, nb)`` grid with per-worker scalars (weight, scale, aliveness, seed) in
+SMEM; the merge runs on a ``(nb,)`` grid over full-fleet ``(M, block)``
+tiles. Dead workers (``alive = 0``) send exact zeros and keep their residual
+frozen — the engines' fault semantics, fused.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import bits_to_uniform, threefry2x32
+
+
+def _tile_rows(x, block):
+    """Pad a stacked (M, n) leaf to (M, nb·block)."""
+    m, n = x.shape
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i, j: (i, 0), memory_space=pltpu.SMEM)
+
+
+def _seed_spec():
+    return pl.BlockSpec((1, 2), lambda i, j: (i, 0), memory_space=pltpu.SMEM)
+
+
+def _row_spec(block):
+    return pl.BlockSpec((1, block), lambda i, j: (i, j))
+
+
+def _acc_spec():
+    return pl.BlockSpec((1, 1), lambda i, j: (i, j), memory_space=pltpu.SMEM)
+
+
+def _eff_tile(z_ref, ef_ref, w_ref, *, has_w, has_ef):
+    """The codec's effective message for the current (worker, block) tile:
+    ``w·z (+ ef)`` — computed in-register, never written to HBM unless the
+    kernel's job IS to write it."""
+    eff = z_ref[...].astype(jnp.float32)
+    if has_w:
+        eff = w_ref[0, 0] * eff
+    if has_ef:
+        eff = eff + ef_ref[...].astype(jnp.float32)
+    return eff
+
+
+def _kernel_uniform(seed_ref, block):
+    """The shared uniform stream for this tile's global element indices:
+    threefry2x32 bits generated in-kernel, same derivation as
+    :func:`.ref.threefry_uniform`."""
+    j = pl.program_id(1)
+    idx = (j * block
+           + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1))
+    idx = idx.astype(jnp.uint32)
+    bits, _ = threefry2x32(seed_ref[0, 0], seed_ref[0, 1],
+                           idx, jnp.zeros_like(idx))
+    return bits_to_uniform(bits)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies. Argument lists are assembled dynamically from the static
+# has_* flags, so optional inputs (weight, residual, aliveness) cost nothing
+# when absent. Order: scalars (w, scale, alive, seed) then vectors (z/eff,
+# ef, mask), then outputs (sent/eff, ef_out / acc).
+# ---------------------------------------------------------------------------
+
+def _stats_kernel(*refs, has_w, has_ef):
+    it = iter(refs)
+    w_ref = next(it) if has_w else None
+    z_ref = next(it)
+    ef_ref = next(it) if has_ef else None
+    acc_ref = next(it)
+    eff = _eff_tile(z_ref, ef_ref, w_ref, has_w=has_w, has_ef=has_ef)
+    # pad lanes are zero-filled → |eff| = 0 there, which cannot win the max
+    # (the caller clamps the folded scale to ≥ 1e-30 anyway).
+    acc_ref[0, 0] = jnp.max(jnp.abs(eff))
+
+
+def _quantize_kernel(*refs, levels, block, has_w, has_ef, has_alive):
+    it = iter(refs)
+    w_ref = next(it) if has_w else None
+    scale_ref = next(it)
+    alive_ref = next(it) if has_alive else None
+    seed_ref = next(it)
+    z_ref = next(it)
+    ef_ref = next(it) if has_ef else None
+    sent_ref = next(it)
+    ef_out_ref = next(it) if has_ef else None
+
+    eff = _eff_tile(z_ref, ef_ref, w_ref, has_w=has_w, has_ef=has_ef)
+    scale = scale_ref[0, 0]
+    y = jnp.abs(eff) / scale * levels
+    lo = jnp.floor(y)
+    up = _kernel_uniform(seed_ref, block) < (y - lo)
+    mag = (lo + up.astype(eff.dtype)) * (scale / levels)
+    sent = jnp.sign(eff) * mag
+    ef_new = eff - sent
+    if has_alive:
+        ok = alive_ref[0, 0] > 0.0
+        sent = jnp.where(ok, sent, jnp.zeros_like(sent))
+        if has_ef:
+            ef_new = jnp.where(ok, eff - sent,
+                               ef_ref[...].astype(jnp.float32))
+    sent_ref[...] = sent.astype(sent_ref.dtype)
+    if has_ef:
+        ef_out_ref[...] = ef_new.astype(ef_out_ref.dtype)
+
+
+def _eff_kernel(*refs, has_w, has_ef):
+    it = iter(refs)
+    w_ref = next(it) if has_w else None
+    z_ref = next(it)
+    ef_ref = next(it) if has_ef else None
+    out_ref = next(it)
+    eff = _eff_tile(z_ref, ef_ref, w_ref, has_w=has_w, has_ef=has_ef)
+    out_ref[...] = eff.astype(out_ref.dtype)
+
+
+def _mask_kernel(*refs, has_ef, has_alive):
+    it = iter(refs)
+    alive_ref = next(it) if has_alive else None
+    eff_ref = next(it)
+    mask_ref = next(it)
+    ef_ref = next(it) if (has_ef and has_alive) else None
+    sent_ref = next(it)
+    ef_out_ref = next(it) if has_ef else None
+
+    eff = eff_ref[...].astype(jnp.float32)
+    sent = jnp.where(mask_ref[...] != 0, eff, jnp.zeros_like(eff))
+    ef_new = eff - sent
+    if has_alive:
+        ok = alive_ref[0, 0] > 0.0
+        sent = jnp.where(ok, sent, jnp.zeros_like(sent))
+        if has_ef:
+            ef_new = jnp.where(ok, eff - sent,
+                               ef_ref[...].astype(jnp.float32))
+    sent_ref[...] = sent.astype(sent_ref.dtype)
+    if has_ef:
+        ef_out_ref[...] = ef_new.astype(ef_out_ref.dtype)
+
+
+def _merge_kernel(*refs, m, normalize, has_w, has_recv):
+    it = iter(refs)
+    w_ref = next(it) if has_w else None
+    recv_ref = next(it) if has_recv else None
+    z_ref = next(it)
+    old_ref = next(it) if has_recv else None
+    out_ref = next(it)
+
+    z = z_ref[...].astype(jnp.float32)                  # (M, block)
+    if has_w:
+        w = w_ref[0, :]                                 # (M,)
+        if normalize:
+            w = w / jnp.sum(w)
+        z = w.reshape(m, 1) * z
+    mean = jnp.sum(z, axis=0, keepdims=True)            # (1, block)
+    merged = jnp.broadcast_to(mean, z_ref.shape)
+    if has_recv:
+        keep = recv_ref[0, :].reshape(m, 1) > 0.0
+        merged = jnp.where(keep, merged,
+                           old_ref[...].astype(jnp.float32))
+    out_ref[...] = merged.astype(out_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf entry points: worker-stacked flat (M, n) leaves; pytree
+# composition and the reference/fused switch live in ops.py.
+# ---------------------------------------------------------------------------
+
+def _uplink_call(kernel, scalars, vectors, out_vectors, acc, m, n, block,
+                 interpret, dtype):
+    """Shared pallas_call plumbing for the (M, nb)-grid uplink kernels."""
+    nb = (n + (-n) % block) // block
+    in_specs, args = [], []
+    for spec, a in scalars:
+        in_specs.append(spec)
+        args.append(a)
+    for v in vectors:
+        in_specs.append(_row_spec(block))
+        args.append(_tile_rows(v, block))
+    out_specs, out_shape = [], []
+    for _ in range(out_vectors):
+        out_specs.append(_row_spec(block))
+        out_shape.append(jax.ShapeDtypeStruct((m, nb * block), dtype))
+    if acc:
+        out_specs.append(_acc_spec())
+        out_shape.append(jax.ShapeDtypeStruct((m, nb), jnp.float32))
+    outs = pl.pallas_call(
+        kernel,
+        grid=(m, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    outs = list(outs) if isinstance(outs, (list, tuple)) else [outs]
+    return [o[:, :n] for o in outs[:out_vectors]] + outs[out_vectors:]
+
+
+def _w_arg(w):
+    return (_scalar_spec(), jnp.asarray(w, jnp.float32).reshape(-1, 1))
+
+
+def uplink_stats(z, w=None, ef=None, *, block: int = 4096,
+                 interpret: bool = False):
+    """Quantize pass 1 on a stacked (M, n) leaf: per-worker ``max|w·z+ef|``
+    without materializing the effective message. Returns ``(M,)`` maxima
+    (caller applies the 1e-30 clamp)."""
+    m, n = z.shape
+    scalars = [] if w is None else [_w_arg(w)]
+    vectors = [z] + ([] if ef is None else [ef])
+    kernel = functools.partial(_stats_kernel, has_w=w is not None,
+                               has_ef=ef is not None)
+    (acc,) = _uplink_call(kernel, scalars, vectors, 0, True, m, n, block,
+                          interpret, z.dtype)
+    return jnp.max(acc, axis=1)
+
+
+def quantize_uplink(z, seeds, scale, w=None, ef=None, alive=None, *,
+                    levels: float, block: int = 4096,
+                    interpret: bool = False):
+    """Quantize pass 2: one fused sweep doing EF add + w scaling +
+    stochastic quantization (threefry bits in-register) + residual
+    write-back on a stacked (M, n) leaf.
+
+    ``seeds`` is (M, 2) uint32 — the per-(worker, leaf) keys of the shared
+    derivation; ``scale`` is (M,) clamped maxima from :func:`uplink_stats`.
+    Returns ``(sent, ef_new)`` (``ef_new`` is None when ``ef`` is None).
+    """
+    m, n = z.shape
+    scalars = [] if w is None else [_w_arg(w)]
+    scalars.append((_scalar_spec(),
+                    jnp.asarray(scale, jnp.float32).reshape(-1, 1)))
+    if alive is not None:
+        scalars.append(_w_arg(alive))
+    scalars.append((_seed_spec(),
+                    jnp.asarray(seeds, jnp.uint32).reshape(m, 2)))
+    vectors = [z] + ([] if ef is None else [ef])
+    kernel = functools.partial(
+        _quantize_kernel, levels=levels, block=block, has_w=w is not None,
+        has_ef=ef is not None, has_alive=alive is not None,
+    )
+    outs = _uplink_call(kernel, scalars, vectors, 1 + (ef is not None),
+                        False, m, n, block, interpret, z.dtype)
+    return (outs[0], outs[1]) if ef is not None else (outs[0], None)
+
+
+def eff_uplink(z, w=None, ef=None, *, block: int = 4096,
+               interpret: bool = False):
+    """Top-k pass 1: materialize ``eff = w·z + ef`` in one fused sweep."""
+    m, n = z.shape
+    scalars = [] if w is None else [_w_arg(w)]
+    vectors = [z] + ([] if ef is None else [ef])
+    kernel = functools.partial(_eff_kernel, has_w=w is not None,
+                               has_ef=ef is not None)
+    (out,) = _uplink_call(kernel, scalars, vectors, 1, False, m, n, block,
+                          interpret, z.dtype)
+    return out
+
+
+def mask_uplink(eff, mask, ef=None, alive=None, *, want_ef: bool = True,
+                block: int = 4096, interpret: bool = False):
+    """Top-k pass 2: apply the survivor mask and write the complementary
+    residual in the same sweep. ``ef`` (the pre-round residual) is only
+    read when ``alive`` is given, to freeze dead workers' memory.
+    Returns ``(sent, ef_new)`` (``ef_new`` None when ``want_ef`` is False).
+    """
+    m, n = eff.shape
+    scalars = [] if alive is None else [_w_arg(alive)]
+    vectors = [eff, mask]
+    if want_ef and alive is not None:
+        vectors.append(jnp.zeros_like(eff) if ef is None else ef)
+    kernel = functools.partial(_mask_kernel, has_ef=want_ef,
+                               has_alive=alive is not None)
+    outs = _uplink_call(kernel, scalars, vectors, 1 + want_ef, False, m, n,
+                        block, interpret, eff.dtype)
+    return (outs[0], outs[1]) if want_ef else (outs[0], None)
+
+
+def merge_stacked(z, w=None, recv=None, old=None, *, normalize: bool = False,
+                  block: int = 4096, interpret: bool = False):
+    """Fused server merge on a stacked (M, n) leaf: weighted sum over the
+    worker axis (weights optionally normalized in-register — the Line-7
+    renormalization over survivors) broadcast back to every worker, with
+    non-receiving workers (``recv`` falsy) keeping ``old``.
+    """
+    m, n = z.shape
+    nb = (n + (-n) % block) // block
+    in_specs, args = [], []
+
+    def vec_smem(v):
+        in_specs.append(pl.BlockSpec((1, m), lambda j: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        args.append(jnp.asarray(v, jnp.float32).reshape(1, m))
+
+    if w is not None:
+        vec_smem(w)
+    if recv is not None:
+        vec_smem(recv)
+    full_spec = pl.BlockSpec((m, block), lambda j: (0, j))
+    in_specs.append(full_spec)
+    args.append(_tile_rows(z, block))
+    if recv is not None:
+        in_specs.append(full_spec)
+        args.append(_tile_rows(z if old is None else old, block))
+    kernel = functools.partial(
+        _merge_kernel, m=m, normalize=normalize, has_w=w is not None,
+        has_recv=recv is not None,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=full_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nb * block), z.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:, :n]

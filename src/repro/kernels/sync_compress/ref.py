@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for the fused sync-codec kernels — and the *shared rng
+derivation* both codec backends draw from.
+
+The fused uplink kernels (:mod:`.kernel`) generate their stochastic-rounding
+bits in-register with an explicit threefry2x32 implementation. For the fused
+and reference backends to agree to float tolerance, the rounding decisions
+must be bit-identical, so the per-element uniform draw is defined HERE, once,
+as a deterministic function of ``(leaf key, element index)``:
+
+    bits(i)    = threefry2x32(k0, k1, x0=i, x1=0)[0]
+    uniform(i) = bitcast_f32((bits(i) >> 9) | 0x3F800000) - 1.0   ∈ [0, 1)
+
+``repro.ps.compress.StochasticQuantizeCompressor`` (the reference backend)
+calls :func:`threefry_uniform`; the Pallas kernel runs the identical uint32
+arithmetic on in-kernel counters. Leaf keys come from the engines' usual
+``jax.random.split`` chain, so the derivation composes with the existing
+per-round / per-worker rng streams unchanged.
+
+The remaining functions are single-leaf references for each kernel primitive,
+with the exact expression sequences the kernels emit (f32 math, same
+clamping), so parity tests can compare leaf-by-leaf.
+
+Examples
+--------
+The uniform stream is a pure function of key and index:
+
+>>> import jax, numpy as np
+>>> from repro.kernels.sync_compress.ref import threefry_uniform
+>>> u = threefry_uniform(jax.random.PRNGKey(7), 4)
+>>> bool((u >= 0).all() and (u < 1).all())
+True
+>>> bool(np.array_equal(u, threefry_uniform(jax.random.PRNGKey(7), 4)))
+True
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = np.uint32(0x1BD11BDA)
+_MANTISSA = np.uint32(0x3F800000)
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Threefry-2x32 block cipher (20 rounds), the hash behind JAX's default
+    PRNG — here as explicit uint32 arithmetic (adds, xors, rotates) so the
+    identical expression runs in pure jnp *and* inside a Pallas kernel body.
+
+    All inputs are uint32 scalars/arrays (broadcastable); returns the two
+    output words ``(y0, y1)``.
+    """
+    ks = (jnp.uint32(k0), jnp.uint32(k1),
+          (jnp.uint32(k0) ^ jnp.uint32(k1) ^ _PARITY).astype(jnp.uint32))
+    x0 = (jnp.uint32(x0) + ks[0]).astype(jnp.uint32)
+    x1 = (jnp.uint32(x1) + ks[1]).astype(jnp.uint32)
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x0 = (x0 + x1).astype(jnp.uint32)
+            x1 = ((x1 << np.uint32(r)) | (x1 >> np.uint32(32 - r))) ^ x0
+        x0 = (x0 + ks[(i + 1) % 3]).astype(jnp.uint32)
+        x1 = (x1 + ks[(i + 2) % 3] + np.uint32(i + 1)).astype(jnp.uint32)
+    return x0, x1
+
+
+def bits_to_uniform(bits):
+    """uint32 bits → f32 uniform in [0, 1): the top 23 bits become the
+    mantissa of a float in [1, 2), minus 1."""
+    f = jax.lax.bitcast_convert_type(
+        (bits >> np.uint32(9)) | _MANTISSA, jnp.float32
+    )
+    return f - 1.0
+
+
+def key_data(key) -> jnp.ndarray:
+    """Raw uint32 ``(2,)`` words of a PRNG key (accepts new-style typed keys
+    and old-style raw arrays alike)."""
+    if jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return jnp.asarray(key, jnp.uint32)
+
+
+def threefry_uniform(key, n: int) -> jnp.ndarray:
+    """The shared per-element uniform stream: ``uniform(i)`` for counters
+    ``i = 0..n-1`` under leaf key ``key``. This is THE derivation both codec
+    backends use for stochastic quantization."""
+    kd = key_data(key)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    bits, _ = threefry2x32(kd[0], kd[1], idx, jnp.zeros_like(idx))
+    return bits_to_uniform(bits)
+
+
+# ---------------------------------------------------------------------------
+# Single-leaf kernel oracles. All take/return flat 1-D leaves; ``w`` is the
+# per-worker Line-7 weight (None = no scaling, the async wire format), ``ef``
+# the error-feedback residual (None = stateless codec).
+# ---------------------------------------------------------------------------
+
+def _eff(z, ef, w):
+    """The effective message the codec sees: w·z (+ ef)."""
+    out = z if w is None else jnp.float32(w) * z
+    return out if ef is None else out + ef
+
+
+def uplink_stats_ref(z, ef=None, w=None):
+    """Reference for the stats pass: ``max|w·z + ef|`` of one leaf (the
+    quantizer's scale, before the 1e-30 clamp)."""
+    return jnp.max(jnp.abs(_eff(z, ef, w)))
+
+
+def quantize_uplink_ref(z, key, scale, *, levels: float, ef=None, w=None,
+                        alive=None):
+    """Reference for the fused quantize-uplink pass: stochastic uniform
+    quantization of ``eff = w·z + ef`` to ``levels`` magnitude levels with
+    the shared threefry uniforms, plus the residual write-back.
+
+    Returns ``(sent, ef_new)`` — ``ef_new`` is ``eff − sent`` for survivors
+    and the frozen ``ef`` for dead workers (``alive`` falsy ⇒ ``sent = 0``).
+    """
+    eff = _eff(z, ef, w)
+    y = jnp.abs(eff) / scale * levels
+    lo = jnp.floor(y)
+    up = threefry_uniform(key, eff.size) < (y - lo)
+    mag = (lo + up.astype(eff.dtype)) * (scale / levels)
+    sent = jnp.sign(eff) * mag
+    ef_new = eff - sent
+    if alive is not None:
+        sent = jnp.where(alive, sent, jnp.zeros_like(sent))
+        old = jnp.zeros_like(ef_new) if ef is None else ef
+        ef_new = jnp.where(alive, eff - sent, old)
+    return sent, ef_new
+
+
+def eff_uplink_ref(z, ef=None, w=None):
+    """Reference for the eff pass (top-k pass 1): materialize w·z + ef."""
+    return _eff(z, ef, w)
+
+
+def mask_uplink_ref(eff, mask, *, alive=None, ef=None):
+    """Reference for the mask-apply pass (top-k pass 2): keep the masked
+    entries of ``eff``, write the complement back as the new residual.
+
+    Returns ``(sent, ef_new)`` with the same aliveness semantics as
+    :func:`quantize_uplink_ref`.
+    """
+    sent = jnp.where(mask != 0, eff, jnp.zeros_like(eff))
+    ef_new = eff - sent
+    if alive is not None:
+        sent = jnp.where(alive, sent, jnp.zeros_like(sent))
+        old = jnp.zeros_like(ef_new) if ef is None else ef
+        ef_new = jnp.where(alive, eff - sent, old)
+    return sent, ef_new
+
+
+def merge_ref(z, w=None, *, normalize=False, recv=None, old=None):
+    """Reference for the fused server merge on one worker-stacked leaf
+    ``(M, n)``: weighted sum over workers, broadcast back — with the weight
+    normalization and the survivor (``recv``) gating fused in.
+
+    ``w`` is ``(M,)`` raw weights (None = unit). ``recv`` (M,) selects which
+    rows receive the merge (others keep ``old``).
+    """
+    if w is None:
+        wb = jnp.ones((z.shape[0],), jnp.float32)
+    else:
+        wb = jnp.asarray(w, jnp.float32)
+    if normalize:
+        wb = wb / jnp.sum(wb)
+    wb = wb.reshape((-1,) + (1,) * (z.ndim - 1)).astype(z.dtype)
+    mean = jnp.sum(wb * z, axis=0, keepdims=True)
+    merged = jnp.broadcast_to(mean, z.shape)
+    if recv is None:
+        return merged
+    keep = recv.reshape((-1,) + (1,) * (z.ndim - 1))
+    return jnp.where(keep, merged, z if old is None else old)

@@ -40,6 +40,16 @@ Line 14               ``PSEngine.z_bar`` → worker outputs weighted by
 (global output z̄)     *realized* step counts (``weighted_worker_average``).
 ====================  =====================================================
 
+The sync hot path has its own kernel backend (``codec_backend="reference" |
+"fused"`` on either config): the fused path runs the whole Line-5/7 uplink —
+error-feedback add, 1/η weighting, stochastic quantize / top-k, residual
+write-back — and the server-side weighted merge as fused Pallas sweeps
+(``kernels.sync_compress``), with the quantizer's rounding bits generated
+in-kernel from the same threefry derivation the reference codecs use.
+Identity/top-k are bit-exact across backends, stochastic quantize agrees to
+rtol=1e-5, in all three execution semantics (``tests/test_sync_compress.py``,
+``tests/test_distributed.py``).
+
 ``PSEngine`` drives both execution paths (serial vmap / ``shard_map`` with a
 compressed psum), records per-round traces with wall-clock and
 local-steps/sec throughput (``ps.trace``), and checkpoints mid-stream via
@@ -80,6 +90,7 @@ from .compress import (
     StochasticQuantizeCompressor,
     SyncCompressor,
     TopKCompressor,
+    check_codec_backend,
     dense_bytes,
     make_compressed_psum_sync,
 )
@@ -136,6 +147,7 @@ __all__ = [
     "TraceRecorder",
     "UniformSchedule",
     "WorkerSchedule",
+    "check_codec_backend",
     "dense_bytes",
     "heterogeneous_bilinear",
     "heterogeneous_robust",

@@ -80,7 +80,7 @@ from ..checkpoint.serialize import load_pytree, save_pytree
 from ..core.adaseg import weighted_worker_average
 from ..core.tree import tree_add, tree_sub, tree_zeros_like
 from ..core.types import MinimaxProblem
-from .compress import IdentityCompressor, dense_bytes
+from .compress import IdentityCompressor, check_codec_backend, dense_bytes
 from .engine import (
     PSConfig,
     _per_worker,
@@ -124,7 +124,30 @@ class AsyncPSConfig(PSConfig):
 
 
 class AsyncPSEngine:
-    """Discrete-event asynchronous Parameter-Server runtime (serial path)."""
+    """Discrete-event asynchronous Parameter-Server runtime (serial path).
+
+    Examples
+    --------
+    A 2-worker fleet with a 3× straggler under bounded staleness τ=1: the
+    run finishes on the simulated clock with per-admission telemetry.
+
+    >>> import jax
+    >>> from repro.core import AdaSEGConfig
+    >>> from repro.problems import make_bilinear_game
+    >>> from repro.ps import ConstantLatency
+    >>> game = make_bilinear_game(jax.random.PRNGKey(0), n=4, sigma=0.1)
+    >>> acfg = AsyncPSConfig(adaseg=AdaSEGConfig(g0=1.0, diameter=2.0, k=2),
+    ...                      num_workers=2, rounds=2,
+    ...                      latency=ConstantLatency(step_s=(1.0, 3.0),
+    ...                                              up_s=0.1, down_s=0.1),
+    ...                      staleness_bound=1.0)
+    >>> eng = AsyncPSEngine(game.problem, acfg, rng=jax.random.PRNGKey(1))
+    >>> zbar = eng.run()
+    >>> eng.done, eng.sim_time > 0.0
+    (True, True)
+    >>> eng.trace.rounds[-1].sim_time_s is not None
+    True
+    """
 
     def __init__(
         self,
@@ -143,6 +166,8 @@ class AsyncPSEngine:
         self.schedule = _resolve_schedule(config)
         self.compressor = config.compressor or IdentityCompressor()
         self.faults = config.faults or NoFaults()
+        check_codec_backend(config.codec_backend, self.compressor)
+        self.codec_backend = config.codec_backend
         self.latency = config.latency or ConstantLatency()
         self.eval_fn = eval_fn
         self.tau = float(config.staleness_bound)
@@ -231,6 +256,7 @@ class AsyncPSEngine:
             "staleness_bound": (None if math.isinf(self.tau) else self.tau),
             "staleness_discount": self.gamma,
             "backend": getattr(self.worker, "backend", None),
+            "codec_backend": self.codec_backend,
             "execution": "event-driven",
             **(trace_meta or {}),
         })
@@ -297,21 +323,36 @@ class AsyncPSEngine:
 
         def store_compressed(state, table, sw, ef, mask, c_rngs):
             payload = worker.sync_payload(state)
-            eff = tree_add(payload, ef) if comp.error_feedback else payload
-            sent = jax.vmap(comp.compress)(eff, c_rngs)
+            if self.codec_backend == "fused":
+                # fused per-payload uplink: EF add + codec + residual
+                # write-back in kernel sweeps; the admission mask plays the
+                # aliveness role (non-admitted workers keep their residual)
+                from ..kernels.sync_compress.ops import codec_uplink_stacked
+
+                sent, ef_new = codec_uplink_stacked(
+                    payload, c_rngs,
+                    ef=ef if comp.error_feedback else None,
+                    alive=mask, codec=comp.codec_spec,
+                )
+                if not comp.error_feedback:
+                    ef_new = ef
+            else:
+                eff = (tree_add(payload, ef) if comp.error_feedback
+                       else payload)
+                sent = jax.vmap(comp.compress)(eff, c_rngs)
+                if comp.error_feedback:
+                    ef_new = jax.tree.map(
+                        lambda e_new, e_old: jnp.where(
+                            _per_worker(mask, e_new), e_new, e_old
+                        ),
+                        tree_sub(eff, sent), ef,
+                    )
+                else:
+                    ef_new = ef
             new_table = jax.tree.map(
                 lambda s, old: jnp.where(_per_worker(mask, s), s, old),
                 sent, table,
             )
-            if comp.error_feedback:
-                ef_new = jax.tree.map(
-                    lambda e_new, e_old: jnp.where(
-                        _per_worker(mask, e_new), e_new, e_old
-                    ),
-                    tree_sub(eff, sent), ef,
-                )
-            else:
-                ef_new = ef
             sw_now = jax.vmap(worker.sync_weight)(state)
             return new_table, jnp.where(mask, sw_now, sw), ef_new
 
@@ -350,6 +391,7 @@ class AsyncPSEngine:
             jax.jit(make_serial_chunk(
                 self.problem, worker, comp, self.config.num_workers,
                 k_pad, self.eval_fn, no_faults=True,
+                codec_backend=self.codec_backend,
             ))
             if self._lockstep_ok else None
         )

@@ -16,6 +16,19 @@ compression error telescopes instead of accumulating.
 ``compress`` sees ONE worker's message pytree (no leading worker axis); the
 serial engine vmaps it over the stacked worker axis, and the sharded engine
 calls it per shard before the psum — same code, both execution paths.
+
+Codec backends
+--------------
+``compress`` is the *reference* implementation. Each built-in compressor
+also exports a static :attr:`SyncCompressor.codec_spec` that the fused
+Pallas codec path (``kernels.sync_compress``) consumes when an engine is
+configured with ``codec_backend="fused"`` — the whole uplink (error-feedback
+add, w-scaling, quantize/top-k, residual write-back) then runs as fused
+kernel sweeps instead of separate tree passes. Stochastic quantization draws
+its rounding bits from the shared threefry derivation
+(:func:`repro.kernels.sync_compress.ref.threefry_uniform`) in BOTH backends,
+so fused ≡ reference holds to float tolerance (and bit-exactly for the
+deterministic codecs).
 """
 from __future__ import annotations
 
@@ -27,18 +40,46 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels.sync_compress.ref import threefry_uniform
+
 PyTree = Any
 
 
 def dense_bytes(tree: PyTree) -> float:
-    """Wire size of an uncompressed float32 message."""
+    """Wire size of an uncompressed float32 message.
+
+    Examples
+    --------
+    >>> import jax.numpy as jnp
+    >>> dense_bytes({"a": jnp.ones((4,)), "b": jnp.ones((2, 3))})
+    40.0
+    """
     return float(sum(4 * v.size for v in jax.tree.leaves(tree)))
 
 
 class SyncCompressor:
+    """Lossy codec contract for the uphill sync messages.
+
+    Subclasses implement :meth:`compress` (the reference round-trip) and
+    :meth:`message_bytes` (wire size for telemetry); built-ins additionally
+    expose :attr:`codec_spec` so the fused kernel backend can run the same
+    codec in-register.
+
+    Examples
+    --------
+    >>> import jax, jax.numpy as jnp
+    >>> comp = TopKCompressor(fraction=0.5)
+    >>> msg = {"g": jnp.array([3.0, -0.1, -2.0, 0.2])}
+    >>> out = comp.compress(msg, jax.random.PRNGKey(0))
+    >>> [float(v) for v in out["g"]]
+    [3.0, 0.0, -2.0, 0.0]
+    """
+
     name: str = "compressor"
     error_feedback: bool = False
     is_identity: bool = False
+    #: static spec for kernels.sync_compress (None = no fused path)
+    codec_spec: tuple | None = None
 
     def compress(self, msg: PyTree, rng) -> PyTree:
         """Lossy round-trip (compress + decompress) of one worker's message."""
@@ -52,10 +93,25 @@ class SyncCompressor:
 @dataclasses.dataclass(frozen=True)
 class IdentityCompressor(SyncCompressor):
     """No-op codec — the engine short-circuits it so the identity path stays
-    bit-exact with ``core.adaseg.sync_weighted_stacked``."""
+    bit-exact with ``core.adaseg.sync_weighted_stacked``.
+
+    Examples
+    --------
+    >>> import jax.numpy as jnp
+    >>> comp = IdentityCompressor()
+    >>> msg = {"g": jnp.ones((3,))}
+    >>> comp.compress(msg, None) is msg
+    True
+    >>> comp.message_bytes(msg)           # 3 × f32
+    12.0
+    """
 
     name: str = "identity"
     is_identity: bool = True
+
+    @property
+    def codec_spec(self) -> tuple:
+        return ("identity",)
 
     def compress(self, msg: PyTree, rng) -> PyTree:
         return msg
@@ -69,7 +125,27 @@ class StochasticQuantizeCompressor(SyncCompressor):
     """Per-leaf stochastic uniform quantization to ``bits`` bits (QSGD-style):
     values are scaled by the leaf's max-abs, rounded stochastically to one of
     2^bits − 1 levels (unbiased given the scale), and shipped with one f32
-    scale per leaf."""
+    scale per leaf.
+
+    The rounding decision per element uses the shared threefry uniform
+    stream (``kernels.sync_compress.ref.threefry_uniform``) — the same
+    derivation the fused kernel generates in-register — so both codec
+    backends make identical up/down choices for identical inputs.
+
+    Examples
+    --------
+    Quantization is a contraction onto the level grid — values stay within
+    one level of the input and the max-abs entry is exactly preserved:
+
+    >>> import jax, jax.numpy as jnp
+    >>> comp = StochasticQuantizeCompressor(bits=8)
+    >>> comp.name
+    'q8'
+    >>> msg = {"g": jnp.array([1.0, -0.3, 0.004])}
+    >>> out = comp.compress(msg, jax.random.PRNGKey(0))
+    >>> bool(jnp.max(jnp.abs(out["g"] - msg["g"])) <= 1.0 / 255)
+    True
+    """
 
     bits: int = 8
     name: str = "quantize"
@@ -80,6 +156,10 @@ class StochasticQuantizeCompressor(SyncCompressor):
             raise ValueError(f"bits must be in [1, 16], got {self.bits}")
         object.__setattr__(self, "name", f"q{self.bits}")
 
+    @property
+    def codec_spec(self) -> tuple:
+        return ("quantize", self.bits)
+
     def compress(self, msg: PyTree, rng) -> PyTree:
         levels = float(2 ** self.bits - 1)
         leaves, treedef = jax.tree.flatten(msg)
@@ -89,7 +169,7 @@ class StochasticQuantizeCompressor(SyncCompressor):
             scale = jnp.maximum(jnp.max(jnp.abs(leaf)), 1e-30)
             y = jnp.abs(leaf) / scale * levels
             lo = jnp.floor(y)
-            up = jax.random.uniform(r, leaf.shape) < (y - lo)
+            up = threefry_uniform(r, leaf.size).reshape(leaf.shape) < (y - lo)
             mag = (lo + up.astype(leaf.dtype)) * (scale / levels)
             return jnp.sign(leaf) * mag
 
@@ -107,7 +187,21 @@ class StochasticQuantizeCompressor(SyncCompressor):
 class TopKCompressor(SyncCompressor):
     """Keep the top ``fraction`` of entries of each leaf by magnitude, zero
     the rest; wire format is (index, value) pairs. Biased — which is exactly
-    why it is run under error feedback."""
+    why it is run under error feedback.
+
+    Examples
+    --------
+    Exactly ``ceil(fraction · size)`` entries survive per leaf:
+
+    >>> import jax, jax.numpy as jnp
+    >>> comp = TopKCompressor(fraction=0.5)
+    >>> out = comp.compress({"g": jnp.array([5.0, 1.0, -3.0, 0.5])},
+    ...                     jax.random.PRNGKey(0))
+    >>> [float(v) for v in out["g"]]
+    [5.0, 0.0, -3.0, 0.0]
+    >>> comp.message_bytes({"g": jnp.zeros((100,))})  # (idx, value) pairs
+    400.0
+    """
 
     fraction: float = 0.1
     name: str = "topk"
@@ -117,6 +211,10 @@ class TopKCompressor(SyncCompressor):
         if not 0.0 < self.fraction <= 1.0:
             raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
         object.__setattr__(self, "name", f"top{self.fraction:g}")
+
+    @property
+    def codec_spec(self) -> tuple:
+        return ("topk", self.fraction)
 
     def _k(self, size: int) -> int:
         return max(1, int(math.ceil(self.fraction * size)))
@@ -141,18 +239,68 @@ class TopKCompressor(SyncCompressor):
 
 
 def make_compressed_psum_sync(axis_names: tuple[str, ...],
-                              compressor: SyncCompressor):
+                              compressor: SyncCompressor,
+                              codec_backend: str = "reference"):
     """Compressed-psum hook for ``launch.sharded.run_local_adaseg_sharded``:
     the Line-7 all-reduce with each worker's uphill w·z̃ message run through
     ``compressor`` first (3-argument ``sync_fn`` form — the driver supplies
     a per-worker, per-round rng). Stateless: error feedback needs memory
-    across rounds, which is the PS engine's job (``repro.ps.engine``)."""
+    across rounds, which is the PS engine's job (``repro.ps.engine``).
+
+    ``codec_backend="fused"`` replaces the per-shard message-scale +
+    compress tree passes with the fused uplink kernel
+    (``kernels.sync_compress.ops.codec_uplink``); the codec must export a
+    :attr:`SyncCompressor.codec_spec`.
+
+    Examples
+    --------
+    The hook is a 3-argument ``sync_fn`` for the sharded driver (it runs
+    inside ``shard_map``, so here we only build it):
+
+    >>> sync = make_compressed_psum_sync(("data",),
+    ...                                  StochasticQuantizeCompressor(8),
+    ...                                  codec_backend="fused")
+    >>> callable(sync)
+    True
+    """
+    check_codec_backend(codec_backend, compressor)
 
     def sync(z_tilde: PyTree, inv_eta, rng) -> PyTree:
         denom = lax.psum(inv_eta, axis_names)
         w = inv_eta / denom
-        msg = jax.tree.map(lambda v: w.astype(v.dtype) * v, z_tilde)
-        sent = compressor.compress(msg, rng)
+        if codec_backend == "fused":
+            from ..kernels.sync_compress.ops import codec_uplink
+
+            sent, _ = codec_uplink(z_tilde, rng, w=w,
+                                   codec=compressor.codec_spec)
+        else:
+            msg = jax.tree.map(lambda v: w.astype(v.dtype) * v, z_tilde)
+            sent = compressor.compress(msg, rng)
         return jax.tree.map(lambda v: lax.psum(v, axis_names), sent)
 
     return sync
+
+
+def check_codec_backend(codec_backend: str,
+                        compressor: SyncCompressor | None) -> None:
+    """Validate a ``codec_backend`` setting against a compressor: the fused
+    Pallas path needs a static :attr:`SyncCompressor.codec_spec` (all
+    built-ins have one; custom codecs fall back to ``"reference"``).
+
+    Examples
+    --------
+    >>> check_codec_backend("fused", TopKCompressor(0.1))   # fine
+    >>> check_codec_backend("turbo", None)
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown codec backend 'turbo'
+    """
+    if codec_backend not in ("reference", "fused"):
+        raise ValueError(f"unknown codec backend {codec_backend!r}")
+    if (codec_backend == "fused" and compressor is not None
+            and compressor.codec_spec is None):
+        raise ValueError(
+            f"compressor {compressor.name!r} exports no codec_spec — the "
+            "fused codec backend only covers the built-in codecs "
+            "(identity / stochastic quantize / top-k)"
+        )

@@ -54,7 +54,12 @@ from ..core.adaseg import AdaSEGConfig, weighted_worker_average
 from ..core.tree import tree_add, tree_sub, tree_where, tree_zeros_like
 from ..core.types import MinimaxProblem
 from ..core.worker import AdaSEGWorker, LocalWorker
-from .compress import IdentityCompressor, SyncCompressor, dense_bytes
+from .compress import (
+    IdentityCompressor,
+    SyncCompressor,
+    check_codec_backend,
+    dense_bytes,
+)
 from .faults import FaultPolicy, NoFaults
 from .schedule import UniformSchedule, WorkerSchedule
 from .trace import RoundRecord, TraceRecorder
@@ -72,6 +77,14 @@ class PSConfig:
     ``worker=`` (any :class:`LocalWorker`, e.g. ``MinimaxWorker(sgda(...))``
     for the zoo). Generic workers carry no communication interval of their
     own, so give them ``local_k=`` (or an explicit ``schedule=``).
+
+    Examples
+    --------
+    >>> from repro.core import AdaSEGConfig
+    >>> cfg = PSConfig(adaseg=AdaSEGConfig(g0=1.0, diameter=2.0, k=5),
+    ...                num_workers=4, rounds=10, codec_backend="fused")
+    >>> cfg.num_workers, cfg.codec_backend
+    (4, 'fused')
     """
 
     num_workers: int
@@ -83,6 +96,7 @@ class PSConfig:
     compressor: SyncCompressor | None = None  # default: identity
     faults: FaultPolicy | None = None        # default: no faults
     backend: str = "reference"               # AdaSEG step backend
+    codec_backend: str = "reference"         # sync codec: reference | fused
 
 
 def _resolve_worker(config: PSConfig) -> LocalWorker:
@@ -122,7 +136,7 @@ def _per_worker(mask, leaf):
 
 
 def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
-                      num_workers: int):
+                      num_workers: int, codec_backend: str = "reference"):
     """Line 5–8 on the stacked worker axis: compress(w·payload) per worker,
     server sum, broadcast to survivors. The returned function takes
     ``(state, ef, alive_r, c_rng)``; ``alive_r is None`` means the fault
@@ -131,12 +145,56 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
     rounds stay bit-exact with them (dynamic all-True masks would still
     perturb XLA fusion).
 
+    ``codec_backend="fused"`` swaps the message-scale / EF add / codec /
+    residual tree pipeline and the weighted-sum-broadcast server side for
+    the fused Pallas sweeps of ``kernels.sync_compress`` (identity and
+    top-k stay bit-exact with this reference path; stochastic quantize
+    agrees to float tolerance under the shared threefry derivation).
+
     Module-level so the event-driven engine can build the *identical*
     program: bit-parity between the engines is shared code, not a
     maintained coincidence.
     """
     comp = compressor
     m = num_workers
+    if codec_backend == "fused":
+        from ..kernels.sync_compress.ops import (
+            codec_uplink_stacked,
+            sync_merge_stacked,
+        )
+
+        def sync_stacked_fused(state, ef, alive_r, c_rng):
+            sw = jax.vmap(worker.sync_weight)(state)          # (M,)
+            if alive_r is None:
+                recv = None
+                w = sw / jnp.sum(sw)
+            else:
+                w_raw = jnp.where(alive_r, sw, jnp.zeros_like(sw))
+                denom = jnp.sum(w_raw)
+                any_alive = denom > 0.0
+                w = w_raw / jnp.where(any_alive, denom, 1.0)
+                recv = jnp.logical_and(alive_r, any_alive)
+            payload = worker.sync_payload(state)
+            if comp.is_identity:
+                # one fused sweep: w-scale + server sum + broadcast
+                synced = sync_merge_stacked(payload, w, recv=recv,
+                                            old=None if recv is None
+                                            else payload)
+                return worker.merge_synced(state, synced), ef
+            c_rngs = jax.random.split(c_rng, m)
+            sent, ef_new = codec_uplink_stacked(
+                payload, c_rngs, w=w,
+                ef=ef if comp.error_feedback else None,
+                alive=alive_r, codec=comp.codec_spec,
+            )
+            if not comp.error_feedback:
+                ef_new = ef
+            synced = sync_merge_stacked(sent, recv=recv,
+                                        old=None if recv is None
+                                        else payload)
+            return worker.merge_synced(state, synced), ef_new
+
+        return sync_stacked_fused
 
     def sync_stacked(state, ef, alive_r, c_rng):
         sw = jax.vmap(worker.sync_weight)(state)              # (M,)
@@ -211,6 +269,7 @@ def make_serial_chunk(
     k_pad: int,
     eval_fn,
     no_faults: bool,
+    codec_backend: str = "reference",
 ):
     """Build the serial-path round chunk: scan of (sync → K_m^r masked local
     steps) over a leading rounds axis. ``PSEngine`` jits this as its whole
@@ -220,7 +279,7 @@ def make_serial_chunk(
     of the event-driven one (the chunking-invariance test pins that a
     1-round slice equals the full scan)."""
     m = num_workers
-    sync_stacked = make_sync_stacked(worker, compressor, m)
+    sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend)
 
     vstep = jax.vmap(
         lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
@@ -279,7 +338,27 @@ def make_serial_chunk(
 
 
 class PSEngine:
-    """Configurable Parameter-Server runtime, generic over LocalWorker."""
+    """Configurable Parameter-Server runtime, generic over LocalWorker.
+
+    Examples
+    --------
+    Two workers, two rounds of K=2 local steps on the bilinear game, with
+    per-round telemetry:
+
+    >>> import jax
+    >>> from repro.core import AdaSEGConfig
+    >>> from repro.problems import make_bilinear_game
+    >>> game = make_bilinear_game(jax.random.PRNGKey(0), n=4, sigma=0.1)
+    >>> cfg = PSConfig(adaseg=AdaSEGConfig(g0=1.0, diameter=2.0, k=2),
+    ...                num_workers=2, rounds=2)
+    >>> eng = PSEngine(game.problem, cfg, rng=jax.random.PRNGKey(1),
+    ...                eval_fn=game.residual)
+    >>> zbar = eng.run()                  # z̄ = (x̄, ȳ), Line 14
+    >>> [v.shape for v in jax.tree.leaves(zbar)], eng.round
+    ([(4,), (4,)], 2)
+    >>> len(eng.trace.rounds), eng.trace.rounds[-1].residual is not None
+    (2, True)
+    """
 
     def __init__(
         self,
@@ -298,6 +377,8 @@ class PSEngine:
         self.schedule = _resolve_schedule(config)
         self.compressor = config.compressor or IdentityCompressor()
         self.faults = config.faults or NoFaults()
+        check_codec_backend(config.codec_backend, self.compressor)
+        self.codec_backend = config.codec_backend
         self.eval_fn = eval_fn
         self._mesh = mesh
         self._worker_axes = tuple(worker_axes)
@@ -361,6 +442,7 @@ class PSEngine:
             "faults": type(self.faults).__name__,
             # the worker's actual step backend (None for workers without one)
             "backend": getattr(self.worker, "backend", None),
+            "codec_backend": self.codec_backend,
             "execution": "sharded" if mesh is not None else "serial",
             **(trace_meta or {}),
         })
@@ -389,7 +471,7 @@ class PSEngine:
         return make_serial_chunk(
             self.problem, self.worker, self.compressor,
             self.config.num_workers, self._k_pad, self.eval_fn,
-            self._no_faults,
+            self._no_faults, self.codec_backend,
         )
 
     def _make_sharded_chunk(self):
@@ -398,6 +480,7 @@ class PSEngine:
 
         problem, worker = self.problem, self.worker
         comp = self.compressor
+        codec_backend = self.codec_backend
         m, k_pad = self.config.num_workers, self._k_pad
         axes = self._worker_axes
         lead = axes if len(axes) > 1 else axes[0]
@@ -426,12 +509,28 @@ class PSEngine:
                     any_alive = denom > 0.0
                     w = w_raw / jnp.where(any_alive, denom, 1.0)
                 payload = worker.sync_payload(st)
-                msg = jax.tree.map(
-                    lambda v: w.astype(v.dtype) * v, payload
-                )
                 if comp.is_identity:
+                    msg = jax.tree.map(
+                        lambda v: w.astype(v.dtype) * v, payload
+                    )
                     sent, ef_new = msg, ef
+                elif codec_backend == "fused":
+                    # fused uplink sweep: w scaling + EF add + codec +
+                    # residual write-back, aliveness handled in-kernel
+                    from ..kernels.sync_compress.ops import codec_uplink
+
+                    sent, ef_new = codec_uplink(
+                        payload, c_rng, w=w,
+                        ef=ef if comp.error_feedback else None,
+                        alive=None if no_faults else al,
+                        codec=comp.codec_spec,
+                    )
+                    if not comp.error_feedback:
+                        ef_new = ef
                 else:
+                    msg = jax.tree.map(
+                        lambda v: w.astype(v.dtype) * v, payload
+                    )
                     eff = tree_add(msg, ef) if comp.error_feedback else msg
                     sent = comp.compress(eff, c_rng)
                     if not no_faults:

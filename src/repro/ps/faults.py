@@ -21,6 +21,19 @@ import numpy as np
 
 
 class FaultPolicy:
+    """Base class. Subclasses fill in :meth:`alive`.
+
+    Examples
+    --------
+    Every policy is a deterministic (rounds, workers) aliveness table:
+
+    >>> table = BernoulliFaults(p=0.5, seed=0).alive(4, 6)
+    >>> table.shape, table.dtype.name
+    ((6, 4), 'bool')
+    >>> bool((table == BernoulliFaults(p=0.5, seed=0).alive(4, 6)).all())
+    True
+    """
+
     def alive(self, num_workers: int, rounds: int) -> np.ndarray:
         """(rounds, num_workers) bool table; True = worker participates."""
         raise NotImplementedError
@@ -28,6 +41,15 @@ class FaultPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class NoFaults(FaultPolicy):
+    """Everyone up, every round — the engines' default (and the static
+    guarantee that lets them skip aliveness masking entirely).
+
+    Examples
+    --------
+    >>> bool(NoFaults().alive(2, 3).all())
+    True
+    """
+
     def alive(self, num_workers: int, rounds: int) -> np.ndarray:
         return np.ones((rounds, num_workers), dtype=bool)
 
@@ -38,7 +60,16 @@ class BernoulliFaults(FaultPolicy):
     ``protect_one`` keeps worker 0 always alive so the weighted average is
     never over an empty survivor set (the engine also tolerates an all-dead
     round: every weight masks to zero and nobody receives, so all anchors
-    simply carry over)."""
+    simply carry over).
+
+    Examples
+    --------
+    >>> table = BernoulliFaults(p=0.9, seed=1).alive(3, 8)
+    >>> bool(table[:, 0].all())                  # protected worker
+    True
+    >>> bool(table[:, 1:].all())                 # the rest actually fail
+    False
+    """
 
     p: float
     seed: int = 0
@@ -56,7 +87,15 @@ class BernoulliFaults(FaultPolicy):
 class OutageFaults(FaultPolicy):
     """Scripted outages: ``events`` is a tuple of (worker, start_round,
     end_round) half-open intervals during which the worker is down. Good for
-    reproducing a specific incident in tests and benchmarks."""
+    reproducing a specific incident in tests and benchmarks.
+
+    Examples
+    --------
+    Worker 1 down for rounds [1, 3):
+
+    >>> OutageFaults(events=((1, 1, 3),)).alive(2, 4)[:, 1]
+    array([ True, False, False,  True])
+    """
 
     events: tuple  # ((worker, start, end), ...)
 

@@ -45,7 +45,16 @@ def _per_worker_row(value, num_workers: int, name: str) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class LatencyTables:
-    """Realized (R, M) float64 delay tables for one fleet run."""
+    """Realized (R, M) float64 delay tables for one fleet run.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> t = LatencyTables(step_s=np.ones((2, 3)), up_s=np.zeros((2, 3)),
+    ...                   down_s=np.zeros((2, 3)))
+    >>> t.step_s.shape
+    (2, 3)
+    """
 
     step_s: np.ndarray   # seconds per local step
     up_s: np.ndarray     # uplink delay per round
@@ -59,7 +68,17 @@ class LatencyTables:
 
 
 class LatencyModel:
-    """Base class. Subclasses fill in :meth:`tables`."""
+    """Base class. Subclasses fill in :meth:`tables`.
+
+    Examples
+    --------
+    Models are seed-deterministic (R, M) table factories:
+
+    >>> lat = LognormalLatency(step_s=1.0, sigma=0.5, seed=2)
+    >>> a, b = lat.tables(3, 4), lat.tables(3, 4)
+    >>> a.step_s.shape, bool((a.step_s == b.step_s).all())
+    ((4, 3), True)
+    """
 
     def tables(self, num_workers: int, rounds: int) -> LatencyTables:
         raise NotImplementedError
@@ -72,6 +91,13 @@ class ConstantLatency(LatencyModel):
     Worker-equal values are the degenerate lockstep model (the sync-parity
     anchor); per-worker ``step_s`` like ``(1, 1, 1, 4)`` is the classic
     persistent-straggler fleet.
+
+    Examples
+    --------
+    >>> lat = ConstantLatency(step_s=(1.0, 4.0), up_s=0.5)
+    >>> t = lat.tables(num_workers=2, rounds=3)
+    >>> t.step_s[:, 1].tolist(), t.up_s[0].tolist()
+    ([4.0, 4.0, 4.0], [0.5, 0.5])
     """
 
     step_s: float | tuple = 1.0
@@ -95,7 +121,15 @@ class LognormalLatency(LatencyModel):
     """Heavy-tailed jitter: every (round, worker) compute/uplink draw is the
     median scaled by an independent lognormal multiplier ``exp(sigma · N)``
     — the standard model for datacenter straggler tails (median = the
-    configured value, mean above it)."""
+    configured value, mean above it).
+
+    Examples
+    --------
+    >>> lat = LognormalLatency(step_s=2.0, sigma=0.3, seed=7)
+    >>> t = lat.tables(num_workers=4, rounds=5)
+    >>> bool((t.step_s > 0).all())
+    True
+    """
 
     step_s: float = 1.0
     sigma: float = 0.5        # log-std of the per-round compute multiplier
@@ -130,7 +164,16 @@ class MarkovLatency(LatencyModel):
     slower state with probability ``p_slow`` per round and recover with
     probability ``p_recover``. Models transient co-tenancy/thermal
     throttling rather than a permanently slow machine; ``start_slow`` pins
-    chosen workers into the slow state at round 0."""
+    chosen workers into the slow state at round 0.
+
+    Examples
+    --------
+    >>> lat = MarkovLatency(step_s=1.0, slow_factor=8.0, start_slow=(0,),
+    ...                     p_recover=0.0, p_slow=0.0, seed=0)
+    >>> t = lat.tables(num_workers=2, rounds=3)
+    >>> t.step_s[:, 0].tolist(), t.step_s[:, 1].tolist()
+    ([8.0, 8.0, 8.0], [1.0, 1.0, 1.0])
+    """
 
     step_s: float = 1.0
     slow_factor: float = 8.0
@@ -167,7 +210,16 @@ class MarkovLatency(LatencyModel):
 class TraceLatency(LatencyModel):
     """Trace-driven delays: replay measured per-round tables (e.g. profiled
     from a real fleet). Inputs are array-likes of shape ``(R0, M)`` (or
-    ``(M,)``, or scalars); rounds beyond ``R0`` cycle through the trace."""
+    ``(M,)``, or scalars); rounds beyond ``R0`` cycle through the trace.
+
+    Examples
+    --------
+    A 2-round trace cycling over 3 simulated rounds:
+
+    >>> lat = TraceLatency(step_s=[[1.0, 2.0], [3.0, 4.0]])
+    >>> lat.tables(num_workers=2, rounds=3).step_s.tolist()
+    [[1.0, 2.0], [3.0, 4.0], [1.0, 2.0]]
+    """
 
     step_s: tuple
     up_s: tuple = (0.0,)

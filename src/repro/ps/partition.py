@@ -48,7 +48,22 @@ def heterogeneous_bilinear(
     """Per-worker noise means δ_m = shift_scale·(p_m − mean_m p_m)·B with
     p_m ~ Dir(alpha) over ``num_components`` random unit directions B. The
     across-worker mean of the shifts is exactly zero, so averaging the local
-    objectives recovers the original game."""
+    objectives recovers the original game.
+
+    Examples
+    --------
+    >>> import jax
+    >>> from repro.problems import make_bilinear_game
+    >>> game = make_bilinear_game(jax.random.PRNGKey(0), n=4, sigma=0.1)
+    >>> prob = heterogeneous_bilinear(game, 2, jax.random.PRNGKey(1),
+    ...                               alpha=0.5)
+    >>> prob.name
+    'bilinear@hetero'
+    >>> xi0 = prob.sample_worker(jax.random.PRNGKey(2), 0)
+    >>> xi1 = prob.sample_worker(jax.random.PRNGKey(2), 1)
+    >>> bool((xi0 != xi1).any())      # same rng, different local laws
+    True
+    """
     n = game.n
     g = num_components or min(8, n)
     r_p, r_b = jax.random.split(rng)
@@ -77,7 +92,18 @@ def heterogeneous_robust(
 ) -> MinimaxProblem:
     """Soft Dirichlet partition of the n examples: groups are quantile bins
     of a random feature projection; worker m draws minibatch indices with
-    probability ∝ p_m[group(i)]."""
+    probability ∝ p_m[group(i)].
+
+    Examples
+    --------
+    >>> import jax
+    >>> from repro.problems import make_robust_logistic
+    >>> rl = make_robust_logistic(jax.random.PRNGKey(0), n=32, d=4, batch=4)
+    >>> prob = heterogeneous_robust(rl, 2, jax.random.PRNGKey(1), alpha=0.3)
+    >>> idx = prob.sample_worker(jax.random.PRNGKey(2), 0)
+    >>> idx.shape, bool((idx >= 0).all() and (idx < 32).all())
+    ((4,), True)
+    """
     d = rl.features.shape[1]
     r_p, r_u = jax.random.split(rng)
     proj = rl.features @ jax.random.normal(r_u, (d,))
@@ -105,7 +131,19 @@ def heterogeneous_wgan(
     std: float = 0.05,
 ) -> MinimaxProblem:
     """Per-worker real-data distribution over the mixture modes, reweighted
-    by a Dirichlet row (Fig. E2's non-iid GAN setting)."""
+    by a Dirichlet row (Fig. E2's non-iid GAN setting).
+
+    Examples
+    --------
+    >>> import jax
+    >>> from repro.problems import make_wgan_problem
+    >>> wg = make_wgan_problem(jax.random.PRNGKey(0), latent_dim=2,
+    ...                        hidden=4, batch=4)
+    >>> prob = heterogeneous_wgan(wg, 2, jax.random.PRNGKey(1), alpha=0.6)
+    >>> xi = prob.sample_worker(jax.random.PRNGKey(2), 1)
+    >>> sorted(xi), xi["real"].shape
+    (['eps', 'real', 'z'], (4, 2))
+    """
     props = dirichlet_proportions(rng, num_workers, modes, alpha)
     mode_logits = jnp.log(props + 1e-8)                            # (M, modes)
 
@@ -132,7 +170,20 @@ def heterogeneous_wgan(
 def heterogenize(obj, num_workers: int, rng, alpha: float = 0.5,
                  **kwargs) -> MinimaxProblem:
     """Dispatch on the problem wrapper: BilinearGame, RobustLogistic or
-    WGANProblem → the matching Dirichlet-skewed per-worker problem."""
+    WGANProblem → the matching Dirichlet-skewed per-worker problem.
+
+    Examples
+    --------
+    >>> import jax
+    >>> from repro.problems import make_bilinear_game
+    >>> game = make_bilinear_game(jax.random.PRNGKey(0), n=4, sigma=0.1)
+    >>> heterogenize(game, 2, jax.random.PRNGKey(1)).name
+    'bilinear@hetero'
+    >>> heterogenize(object(), 2, jax.random.PRNGKey(1))
+    Traceback (most recent call last):
+        ...
+    TypeError: no heterogeneous partition for object
+    """
     if isinstance(obj, BilinearGame):
         return heterogeneous_bilinear(obj, num_workers, rng, alpha, **kwargs)
     if isinstance(obj, RobustLogistic):

@@ -25,7 +25,20 @@ import numpy as np
 
 
 class WorkerSchedule:
-    """Base class. Subclasses fill in :meth:`steps`."""
+    """Base class. Subclasses fill in :meth:`steps`.
+
+    Examples
+    --------
+    Any schedule yields a reproducible ``(rounds, workers)`` table bounded
+    by its static ``max_steps``:
+
+    >>> sched = StragglerSchedule(k=5, min_frac=0.4, seed=1)
+    >>> table = sched.steps(num_workers=3, rounds=4)
+    >>> table.shape, bool((table <= sched.max_steps(3)).all())
+    ((4, 3), True)
+    >>> bool((table == sched.steps(3, 4)).all())  # seed-deterministic
+    True
+    """
 
     def max_steps(self, num_workers: int) -> int:
         """Static upper bound on K_m^r — the engine's per-round scan length."""
@@ -40,7 +53,14 @@ class WorkerSchedule:
 class UniformSchedule(WorkerSchedule):
     """Every worker runs ``k`` steps every round — the paper's synchronous
     Parameter-Server setting. The engine with this schedule (plus identity
-    compression and no faults) reproduces ``run_local_adaseg`` bit-exactly."""
+    compression and no faults) reproduces ``run_local_adaseg`` bit-exactly.
+
+    Examples
+    --------
+    >>> UniformSchedule(k=3).steps(num_workers=2, rounds=2)
+    array([[3, 3],
+           [3, 3]], dtype=int32)
+    """
 
     k: int
 
@@ -54,7 +74,14 @@ class UniformSchedule(WorkerSchedule):
 @dataclasses.dataclass(frozen=True)
 class FixedSchedule(WorkerSchedule):
     """Static per-worker K_m, constant across rounds — the asynchronous
-    variant of Appendix E.1 ('Asynch-50' = K_m ∈ {50, 45, 40, 35})."""
+    variant of Appendix E.1 ('Asynch-50' = K_m ∈ {50, 45, 40, 35}).
+
+    Examples
+    --------
+    >>> FixedSchedule([3, 1]).steps(num_workers=2, rounds=2)
+    array([[3, 1],
+           [3, 1]], dtype=int32)
+    """
 
     local_steps: tuple
 
@@ -81,7 +108,18 @@ class StragglerSchedule(WorkerSchedule):
     """Seed-driven straggler/delay model: each round every worker completes
     ``K_m^r ~ Uniform{ceil(min_frac·k), …, k}`` steps before the sync
     deadline. Workers listed in ``slow_workers`` are persistent stragglers
-    pinned at the minimum — the adversarial-straggler scenario."""
+    pinned at the minimum — the adversarial-straggler scenario.
+
+    Examples
+    --------
+    >>> sched = StragglerSchedule(k=10, min_frac=0.5, seed=0,
+    ...                           slow_workers=(1,))
+    >>> table = sched.steps(num_workers=3, rounds=5)
+    >>> bool((table[:, 1] == 5).all())           # pinned straggler
+    True
+    >>> bool((table >= 5).all() and (table <= 10).all())
+    True
+    """
 
     k: int
     min_frac: float = 0.5
@@ -105,7 +143,15 @@ class ElasticSchedule(WorkerSchedule):
     """Elastic membership on top of an inner schedule: each round every
     worker independently sits out (K_m^r = 0) with probability ``dropout``.
     Sitting out ≠ failing — the worker still syncs (its stale anchor keeps
-    its 1/η weight in the Line-7 average)."""
+    its 1/η weight in the Line-7 average).
+
+    Examples
+    --------
+    >>> sched = ElasticSchedule(UniformSchedule(k=4), dropout=0.5, seed=3)
+    >>> table = sched.steps(num_workers=4, rounds=6)
+    >>> sorted(set(table.reshape(-1).tolist()))  # sat-out rounds are 0
+    [0, 4]
+    """
 
     inner: WorkerSchedule
     dropout: float = 0.2

@@ -32,6 +32,20 @@ from typing import Any
 
 @dataclasses.dataclass
 class RoundRecord:
+    """One round's (or admission batch's) telemetry — the unit of the trace
+    JSON's ``rounds`` list (field-by-field spec: ``docs/formats.md``).
+
+    Examples
+    --------
+    >>> rec = RoundRecord(round=0, local_steps=[3, 2], alive=[True, True],
+    ...                   bytes_up=80.0, bytes_down=80.0,
+    ...                   eta_min=0.5, eta_max=1.0, eta_mean=0.75)
+    >>> rec.eta_spread
+    2.0
+    >>> rec.sim_time_s is None        # sync engines leave async fields None
+    True
+    """
+
     round: int
     local_steps: list          # effective K per worker (0 = sat out / down)
     alive: list                # bool per worker
@@ -54,7 +68,24 @@ class RoundRecord:
 
 
 class TraceRecorder:
-    """Accumulates RoundRecords and summarizes/serializes them."""
+    """Accumulates RoundRecords and summarizes/serializes them.
+
+    Examples
+    --------
+    >>> import os, tempfile
+    >>> rec = TraceRecorder(meta={"problem": "demo"})
+    >>> rec.record(RoundRecord(round=0, local_steps=[2, 2],
+    ...                        alive=[True, True], bytes_up=8.0,
+    ...                        bytes_down=8.0, eta_min=1.0, eta_max=1.0,
+    ...                        eta_mean=1.0, residual=0.5))
+    >>> rec.total_steps, rec.total_bytes_up
+    (4, 8.0)
+    >>> with tempfile.TemporaryDirectory() as d:
+    ...     rec.save(os.path.join(d, "t.json"))
+    ...     back = TraceRecorder.load(os.path.join(d, "t.json"))
+    >>> back.meta["problem"], back.rounds[0].residual
+    ('demo', 0.5)
+    """
 
     def __init__(self, meta: dict | None = None):
         self.meta: dict = dict(meta or {})

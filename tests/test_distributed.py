@@ -332,3 +332,67 @@ def test_multipod_axis_shards():
         print("MULTIPOD_OK", axes)
     """)
     assert "MULTIPOD_OK" in out
+
+
+def test_fused_codec_sharded_matches_serial():
+    """Fused-codec acceptance on the sharded path (the PR's codec_backend
+    switch through shard_map): for every built-in codec the sharded fused
+    engine must match the serial fused engine within the rtol=1e-5 bar
+    (and the sharded reference engine at the same tolerance), under the
+    full hetero-K + faults policy stack; the fused compressed-psum hook
+    must agree with the reference hook through the one-shot driver."""
+    out = run_in_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import AdaSEGConfig
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.sharded import run_local_adaseg_sharded
+        from repro.problems import make_bilinear_game
+        from repro.ps import (BernoulliFaults, FixedSchedule, PSConfig,
+                              PSEngine, StochasticQuantizeCompressor,
+                              TopKCompressor, make_compressed_psum_sync)
+
+        game = make_bilinear_game(jax.random.PRNGKey(0), n=10, sigma=0.1)
+        cfg = AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=5)
+        mesh = make_test_mesh(4, 2)
+
+        def close(a, b, **kw):
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y), **kw)
+
+        for comp in (TopKCompressor(fraction=0.25),
+                     StochasticQuantizeCompressor(bits=8)):
+            kw = dict(adaseg=cfg, num_workers=4, rounds=4,
+                      schedule=FixedSchedule([5, 4, 3, 2]), compressor=comp,
+                      faults=BernoulliFaults(p=0.25, seed=5))
+            serial = PSEngine(game.problem,
+                              PSConfig(codec_backend="fused", **kw),
+                              rng=jax.random.PRNGKey(3))
+            sharded = PSEngine(game.problem,
+                               PSConfig(codec_backend="fused", **kw),
+                               rng=jax.random.PRNGKey(3), mesh=mesh)
+            sharded_ref = PSEngine(game.problem,
+                                   PSConfig(codec_backend="reference", **kw),
+                                   rng=jax.random.PRNGKey(3), mesh=mesh)
+            z_ser, z_sh, z_ref = serial.run(), sharded.run(), sharded_ref.run()
+            close(z_ser, z_sh, rtol=1e-5, atol=1e-6)
+            close(z_ref, z_sh, rtol=1e-5, atol=1e-6)
+            close(serial.state, sharded.state, rtol=1e-5, atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(serial.state.t),
+                                          np.asarray(sharded.state.t))
+
+        # stateless fused hook through the one-shot driver: identical keys →
+        # identical quantization decisions, so reference ≡ fused to rtol.
+        for frac_comp in (StochasticQuantizeCompressor(bits=8),):
+            z_r, _ = run_local_adaseg_sharded(
+                game.problem, cfg, mesh=mesh, rounds=4,
+                rng=jax.random.PRNGKey(2),
+                sync_fn=make_compressed_psum_sync(("data",), frac_comp))
+            z_f, _ = run_local_adaseg_sharded(
+                game.problem, cfg, mesh=mesh, rounds=4,
+                rng=jax.random.PRNGKey(2),
+                sync_fn=make_compressed_psum_sync(("data",), frac_comp,
+                                                  codec_backend="fused"))
+            close(z_r, z_f, rtol=1e-5, atol=1e-6)
+        print("FUSED_CODEC_SHARDED_OK")
+    """)
+    assert "FUSED_CODEC_SHARDED_OK" in out

@@ -1,0 +1,299 @@
+"""Fused sync-codec path (kernels/sync_compress): kernel↔reference parity,
+engine-level codec-backend parity, and the error-feedback telescoping
+invariant that makes biased codecs safe.
+
+Parity bars (the PR's acceptance criteria, same structure as the PR-1 step
+kernels): identity and top-k are bit-exact between backends; stochastic
+quantize agrees within rtol=1e-5 under the shared threefry derivation (both
+backends draw identical rounding bits; residual float noise is jit
+fusion-level only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AdaSEGConfig
+from repro.core.adaseg import sync_weighted_stacked
+from repro.kernels.sync_compress import ref as sc_ref
+from repro.kernels.sync_compress.ops import (
+    codec_passes,
+    codec_uplink,
+    codec_uplink_stacked,
+    sync_merge_stacked,
+)
+from repro.problems import make_bilinear_game
+from repro.ps import (
+    AsyncPSConfig,
+    AsyncPSEngine,
+    BernoulliFaults,
+    ConstantLatency,
+    IdentityCompressor,
+    PSConfig,
+    PSEngine,
+    StochasticQuantizeCompressor,
+    StragglerSchedule,
+    TopKCompressor,
+)
+
+M = 4
+
+CODECS = [
+    (("identity",), True),
+    (("topk", 0.25), True),
+    (("quantize", 8), False),
+]
+
+
+@pytest.fixture(scope="module")
+def stacked():
+    key = jax.random.PRNGKey(0)
+    z = {
+        "a": jax.random.normal(key, (M, 333)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (M, 7, 5)),
+    }
+    ef = jax.tree.map(lambda v: 0.05 * v, z)
+    return z, ef
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_bilinear_game(jax.random.PRNGKey(0), n=8, sigma=0.1)
+
+
+def _cfg(k=4):
+    return AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=k)
+
+
+def _assert_parity(a, b, exact, rtol=1e-5, atol=1e-6):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Ops-level parity: fused kernels vs pure-jnp references, same jit context.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec,exact", CODECS)
+@pytest.mark.parametrize("with_alive", [False, True])
+def test_uplink_fused_matches_reference(stacked, codec, exact, with_alive):
+    z, ef = stacked
+    w = jnp.array([0.1, 0.4, 0.2, 0.3])
+    alive = jnp.array([1.0, 0.0, 1.0, 1.0]) if with_alive else None
+    e = None if codec[0] == "identity" else ef
+    rngs = jax.random.split(jax.random.PRNGKey(3), M)
+    out_f = codec_uplink_stacked(z, rngs, w=w, ef=e, alive=alive,
+                                 codec=codec)
+    out_r = codec_uplink_stacked(z, rngs, w=w, ef=e, alive=alive,
+                                 codec=codec, use_kernel=False)
+    _assert_parity(out_f[0], out_r[0], exact)
+    if out_f[1] is not None:
+        _assert_parity(out_f[1], out_r[1], exact)
+
+
+def test_uplink_dead_worker_sends_zero_and_freezes_ef(stacked):
+    z, ef = stacked
+    alive = jnp.array([1.0, 0.0, 1.0, 1.0])
+    rngs = jax.random.split(jax.random.PRNGKey(3), M)
+    sent, ef_new = codec_uplink_stacked(z, rngs, ef=ef, alive=alive,
+                                        codec=("quantize", 8))
+    for s, e_new, e_old in zip(jax.tree.leaves(sent),
+                               jax.tree.leaves(ef_new),
+                               jax.tree.leaves(ef)):
+        assert float(jnp.abs(s[1]).max()) == 0.0
+        np.testing.assert_array_equal(np.asarray(e_new[1]),
+                                      np.asarray(e_old[1]))
+        assert float(jnp.abs(s[0]).max()) > 0.0
+
+
+def test_topk_keeps_exactly_k_entries(stacked):
+    z, _ = stacked
+    rngs = jax.random.split(jax.random.PRNGKey(3), M)
+    sent, _ = codec_uplink_stacked(z, rngs, codec=("topk", 0.25))
+    for s in jax.tree.leaves(sent):
+        n = s[0].size
+        k = max(1, int(np.ceil(0.25 * n)))
+        nz = (np.asarray(s).reshape(M, -1) != 0).sum(axis=1)
+        assert (nz <= k).all() and (nz >= 1).all()
+
+
+def test_quantize_shared_rng_derivation_is_the_compressors():
+    """The fused uplink (no weights, no EF) must reproduce the reference
+    ``StochasticQuantizeCompressor.compress`` — the two backends draw from
+    one rng derivation, not two streams that merely look alike."""
+    comp = StochasticQuantizeCompressor(bits=8)
+    msg = {"g": jax.random.normal(jax.random.PRNGKey(1), (257,))}
+    rng = jax.random.PRNGKey(9)
+    ref = jax.jit(comp.compress)(msg, rng)
+    fused, _ = codec_uplink(msg, rng, codec=("quantize", 8))
+    np.testing.assert_allclose(np.asarray(fused["g"]), np.asarray(ref["g"]),
+                               rtol=1e-5, atol=1e-7)
+    # identical rounding decisions: same level index everywhere
+    scale = float(jnp.maximum(jnp.max(jnp.abs(msg["g"])), 1e-30))
+    lvl = scale / 255.0
+    np.testing.assert_array_equal(
+        np.rint(np.asarray(fused["g"]) / lvl).astype(int),
+        np.rint(np.asarray(ref["g"]) / lvl).astype(int))
+
+
+def test_merge_fused_matches_sync_weighted_stacked(stacked):
+    z, _ = stacked
+    inv_eta = jnp.array([0.5, 1.0, 1.5, 2.0])
+    expected = jax.jit(sync_weighted_stacked)(z, inv_eta)
+    fused = sync_weighted_stacked(z, inv_eta, backend="fused")
+    _assert_parity(fused, expected, exact=True)
+    # survivor gating: non-receivers keep their old row
+    recv = jnp.array([1.0, 0.0, 1.0, 1.0])
+    old = jax.tree.map(lambda v: v + 7.0, z)
+    gated = sync_merge_stacked(z, inv_eta, recv=recv, old=old,
+                               normalize=True)
+    ref = sync_merge_stacked(z, inv_eta, recv=recv, old=old, normalize=True,
+                             use_kernel=False)
+    _assert_parity(gated, ref, exact=True)
+    for g, o in zip(jax.tree.leaves(gated), jax.tree.leaves(old)):
+        np.testing.assert_array_equal(np.asarray(g[1]), np.asarray(o[1]))
+
+
+def test_codec_pass_model_is_a_traffic_win():
+    for codec in (("identity",), ("quantize", 8), ("topk", 0.25)):
+        ref_passes, fused_passes = codec_passes(codec)
+        assert fused_passes < ref_passes
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback telescoping: Σ_r sent_r = Σ_r msg_r + ef_0 − ef_R, so the
+# compression error never accumulates — for BOTH backends.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", [("quantize", 4), ("topk", 0.25)])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_error_feedback_telescopes(codec, use_kernel):
+    key = jax.random.PRNGKey(0)
+    w = jnp.array([0.25, 0.35, 0.4])
+    ef = {"g": jnp.zeros((3, 101))}
+    sent_sum = {"g": jnp.zeros((3, 101))}
+    msg_sum = {"g": jnp.zeros((3, 101))}
+    for r in range(6):
+        key, kz, kc = jax.random.split(key, 3)
+        z = {"g": jax.random.normal(kz, (3, 101))}
+        rngs = jax.random.split(kc, 3)
+        sent, ef = codec_uplink_stacked(z, rngs, w=w, ef=ef, codec=codec,
+                                        use_kernel=use_kernel)
+        msg = jax.tree.map(lambda v: w[:, None] * v, z)
+        sent_sum = jax.tree.map(jnp.add, sent_sum, sent)
+        msg_sum = jax.tree.map(jnp.add, msg_sum, msg)
+    np.testing.assert_allclose(
+        np.asarray(sent_sum["g"]) + np.asarray(ef["g"]),
+        np.asarray(msg_sum["g"]), rtol=1e-4, atol=1e-5)
+    # and the residual actually carries mass for a biased codec
+    assert float(jnp.abs(ef["g"]).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: the codec_backend switch end to end (serial + async;
+# the sharded path is pinned in tests/test_distributed.py).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec_cls,exact", [
+    (IdentityCompressor, True),
+    (lambda: TopKCompressor(fraction=0.25), True),
+    (lambda: StochasticQuantizeCompressor(bits=8), False),
+])
+@pytest.mark.parametrize("hostile", [False, True])
+def test_engine_codec_backend_parity(game, codec_cls, exact, hostile):
+    comp = codec_cls() if callable(codec_cls) else codec_cls
+    faults = BernoulliFaults(p=0.3, seed=5) if hostile else None
+    schedule = (StragglerSchedule(k=4, min_frac=0.5, seed=7)
+                if hostile else None)
+    outs = {}
+    for cb in ("reference", "fused"):
+        pscfg = PSConfig(adaseg=_cfg(), num_workers=M, rounds=3,
+                         compressor=comp, faults=faults, schedule=schedule,
+                         codec_backend=cb)
+        eng = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(2))
+        outs[cb] = (eng.run(), eng.state, eng._ef)
+        assert eng.trace.meta["codec_backend"] == cb
+    _assert_parity(outs["reference"], outs["fused"], exact)
+
+
+def test_async_engine_codec_backend_parity(game):
+    lat = ConstantLatency(step_s=(1.0, 1.0, 4.0, 1.0), up_s=0.2, down_s=0.1)
+    outs = {}
+    for cb in ("reference", "fused"):
+        acfg = AsyncPSConfig(adaseg=_cfg(), num_workers=M, rounds=3,
+                             latency=lat, staleness_bound=1.0,
+                             compressor=StochasticQuantizeCompressor(bits=8),
+                             codec_backend=cb)
+        eng = AsyncPSEngine(game.problem, acfg, rng=jax.random.PRNGKey(2))
+        outs[cb] = (eng.run(), eng.state, eng._ef)
+    _assert_parity(outs["reference"], outs["fused"], exact=False)
+
+
+def test_fused_lockstep_still_bit_exact_with_sync_engine(game):
+    """The async engine's sync-as-special-case guarantee must survive the
+    fused codec backend: degenerate latency + identity compression executes
+    the synchronous engine's own (fused-merge) round chunk, so the two
+    engines agree bit-exactly by shared code. (The guarantee is scoped to
+    identity compression, as in PR 4: lossy codecs have per-payload async
+    wire semantics — the server, not the sender, applies the Line-7
+    weights — so sync and async quantize different tensors by design.)"""
+    pscfg = PSConfig(adaseg=_cfg(), num_workers=M, rounds=3,
+                     codec_backend="fused")
+    sync_eng = PSEngine(game.problem, pscfg, rng=jax.random.PRNGKey(2))
+    z_sync = sync_eng.run()
+    acfg = AsyncPSConfig(adaseg=_cfg(), num_workers=M, rounds=3,
+                         codec_backend="fused", staleness_bound=0.0)
+    async_eng = AsyncPSEngine(game.problem, acfg, rng=jax.random.PRNGKey(2))
+    z_async = async_eng.run()
+    assert async_eng._lockstep_chunk is not None
+    _assert_parity((z_sync, sync_eng.state), (z_async, async_eng.state),
+                   exact=True)
+
+
+def test_unknown_codec_backend_rejected(game):
+    with pytest.raises(ValueError, match="codec backend"):
+        PSEngine(game.problem,
+                 PSConfig(adaseg=_cfg(), num_workers=M, rounds=2,
+                          codec_backend="turbo"),
+                 rng=jax.random.PRNGKey(0))
+
+
+def test_custom_compressor_without_spec_rejected_on_fused(game):
+    class Custom(IdentityCompressor):
+        @property
+        def codec_spec(self):
+            return None
+
+    with pytest.raises(ValueError, match="codec_spec"):
+        PSEngine(game.problem,
+                 PSConfig(adaseg=_cfg(), num_workers=M, rounds=2,
+                          compressor=Custom(), codec_backend="fused"),
+                 rng=jax.random.PRNGKey(0))
+
+
+def test_threefry_uniform_matches_kernel_counters():
+    """The shared derivation is blocking-invariant: in-kernel counters at
+    any block size reproduce the reference stream bit-for-bit."""
+    from repro.kernels.sync_compress.kernel import quantize_uplink
+
+    key = jax.random.PRNGKey(11)
+    z = jax.random.normal(jax.random.PRNGKey(1), (1, 700))
+    seeds = key.reshape(1, 2)
+    scale = jnp.maximum(jnp.max(jnp.abs(z), axis=1), 1e-30)
+    outs = [
+        quantize_uplink(z, seeds, scale, levels=255.0, block=b,
+                        interpret=True)[0]
+        for b in (64, 256, 700)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+    # and the stream itself is the compressor's
+    u = sc_ref.threefry_uniform(key, 700)
+    y = jnp.abs(z[0]) / scale[0] * 255.0
+    lo = jnp.floor(y)
+    expect = jnp.sign(z[0]) * (lo + (u < y - lo)) * (scale[0] / 255.0)
+    np.testing.assert_allclose(np.asarray(outs[0][0]), np.asarray(expect),
+                               rtol=1e-5, atol=1e-7)
