@@ -1,0 +1,100 @@
+"""Real-model ModelWorker sweep through the PS engine — the perf trajectory.
+
+Trains a tiny dense transformer and the §4.2 WGAN-GP as
+:class:`repro.ps.ModelWorker` fleets on :class:`repro.ps.PSEngine` (identity
+and q8+error-feedback uplinks) and records throughput and traffic:
+
+* ``steps_per_sec``       — effective local extragradient steps / wall s
+* ``rounds_per_sec``      — communication rounds / wall s (post-compile)
+* ``bytes_up_per_round``  — Σ survivor compressed uplink bytes
+* ``bytes_down_per_round``— Σ survivor dense broadcast bytes
+
+Unlike the CSV-only benches, the sweep is *persisted*: every run appends an
+entry to ``BENCH_ps_models.json`` at the repo root (committed), so perf is
+comparable across PRs. Wall-clock numbers are CPU-host indicative only; the
+bytes columns are exact.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.core import AdaSEGConfig
+from repro.models import ModelWorker, make_lm_problem, tiny_lm_config
+from repro.problems import make_wgan_problem
+from repro.ps import PSConfig, PSEngine, StochasticQuantizeCompressor
+
+from .common import emit
+
+RESULTS_PATH = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_ps_models.json"
+)
+
+M, ROUNDS, WARMUP = 2, 4, 1
+
+
+def _sweep_cases():
+    lm = make_lm_problem(tiny_lm_config(), batch=2, seq=16)
+    lm_cfg = AdaSEGConfig(g0=20.0, diameter=2.0, alpha=1.0, k=2,
+                          average_output=False)
+    wg = make_wgan_problem(jax.random.PRNGKey(0))
+    wg_cfg = AdaSEGConfig(g0=50.0, diameter=1.0, alpha=1.0, k=5,
+                          average_output=False)
+    for codec_name, codec in (("identity", None),
+                              ("q8ef", StochasticQuantizeCompressor(bits=8))):
+        yield (f"tiny-lm/{codec_name}", lm, lm_cfg, 2,
+               "tiny-lm", codec)
+        yield (f"wgan/{codec_name}", wg.problem, wg_cfg, 5,
+               wg.problem.name, codec)
+
+
+def _measure(name, problem, acfg, local_k, arch, compressor):
+    worker = ModelWorker(acfg, arch=arch)
+    engine = PSEngine(
+        problem,
+        PSConfig(worker=worker, local_k=local_k, num_workers=M,
+                 rounds=WARMUP + ROUNDS, compressor=compressor),
+        rng=jax.random.PRNGKey(1),
+    )
+    engine.run(until_round=WARMUP)          # compile + first-round warmup
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+    recs = engine.trace.rounds[WARMUP:]
+    steps = sum(sum(r.local_steps) for r in recs)
+    result = {
+        "steps_per_sec": round(steps / dt, 2),
+        "rounds_per_sec": round(len(recs) / dt, 3),
+        "bytes_up_per_round": sum(r.bytes_up for r in recs) / len(recs),
+        "bytes_down_per_round": sum(r.bytes_down for r in recs) / len(recs),
+        "workers": M,
+        "local_k": local_k,
+    }
+    emit(f"ps_models:{name}", dt * 1e6 / len(recs),
+         f"steps/s={result['steps_per_sec']};"
+         f"up_B={result['bytes_up_per_round']:.0f}")
+    return result
+
+
+def main() -> None:
+    results = {name: _measure(name, *rest) for name, *rest in _sweep_cases()}
+    history = []
+    if RESULTS_PATH.exists():
+        history = json.loads(RESULTS_PATH.read_text()).get("entries", [])
+    history.append({
+        "run": len(history),
+        "backend": jax.default_backend(),
+        "results": results,
+    })
+    RESULTS_PATH.write_text(
+        json.dumps({"bench": "ps_models", "entries": history}, indent=1)
+        + "\n"
+    )
+    emit("ps_models:persist", 0.0, f"entries={len(history)}")
+
+
+if __name__ == "__main__":
+    main()

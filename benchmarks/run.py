@@ -10,6 +10,8 @@ docstring for the figure it reproduces):
     figE1  bench_async                time-to-target: sync barrier vs
                                       bounded-staleness async (sim clock)
     extra  bench_ps                   PS runtime: compression/dropout/hetero
+    extra  bench_ps_models            real-model ModelWorkers (tiny LM +
+                                      WGAN) on the engine → BENCH_ps_models.json
     figE1d bench_vt_growth            V_t cumulative gradient growth
     figE2  bench_wgan                 WGAN-GP (homog + Dirichlet hetero)
     extra  bench_robust               robust logistic (beyond paper)
@@ -35,6 +37,7 @@ def main() -> int:
         bench_fig4_scenarios,
         bench_kernels,
         bench_ps,
+        bench_ps_models,
         bench_robust,
         bench_vt_growth,
         bench_wgan,
@@ -46,6 +49,7 @@ def main() -> int:
         ("fig4x:fig4_scenarios", bench_fig4_scenarios.main),
         ("figE1:async", bench_async.main),
         ("extra:ps_runtime", bench_ps.main),
+        ("extra:ps_models", bench_ps_models.main),
         ("figE1d:vt_growth", bench_vt_growth.main),
         ("figE2-E5:wgan", bench_wgan.main),
         ("thm1-2-5:alpha_regimes", bench_alpha_theory.main),

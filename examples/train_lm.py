@@ -1,32 +1,31 @@
-"""End-to-end driver: train a language model with LocalAdaSEG.
+"""End-to-end driver: train a language model with LocalAdaSEG — through the
+Parameter-Server runtime (the unified stack).
 
     PYTHONPATH=src python examples/train_lm.py                     # ~20M model
     PYTHONPATH=src python examples/train_lm.py --preset 100m --rounds 40
     PYTHONPATH=src python examples/train_lm.py --arch mamba2-370m --smoke
+    PYTHONPATH=src python examples/train_lm.py --q8 --pallas       # q8-EF uplinks
+    PYTHONPATH=src python examples/train_lm.py --tau 1             # async SSP τ=1
 
-Uses the full production stack: ArchConfig model zoo, synthetic Markov-Zipf
-pipeline, the distributed LocalAdaSEG round function (M workers × K local
-extragradient steps + weighted sync), and msgpack checkpointing. On CPU the
-mesh is 1×1; on a real slice the same TrainPlan lowers against the
-production mesh (see repro/launch/dryrun.py).
+The model (ArchConfig zoo + synthetic Markov-Zipf pipeline) runs as a
+``repro.ps.ModelWorker`` on ``PSEngine`` via ``launch.train.make_ps_engine``:
+M workers × K local extragradient steps (a ``lax.scan``), inverse-η weighted
+sync, per-round telemetry, and msgpack checkpointing all come from the same
+engine that drives the paper's bilinear/WGAN experiments. ``--tau`` switches
+to the discrete-event ``AsyncPSEngine`` under bounded staleness; ``--q8``
+compresses the uplinks with error feedback; ``--pallas`` puts the flash
+attention kernel on the forward hot path.
 """
 import argparse
 import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint import save_pytree
 from repro.configs import get_config, smoke_config
 from repro.core.adaseg import AdaSEGConfig
-from repro.launch.mesh import make_test_mesh
-from repro.launch.train import (
-    TrainPlan,
-    init_train_state,
-    make_batches,
-    make_round_fn,
-)
+from repro.launch.train import TrainPlan, make_ps_engine
+from repro.ps import LognormalLatency, StochasticQuantizeCompressor
 
 PRESETS = {
     # name: (layers, d_model, heads, kv, d_ff, vocab) — ~20M / ~100M params
@@ -37,14 +36,18 @@ PRESETS = {
 
 def build_config(args):
     if args.arch:
-        return smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    layers, dm, h, kv, ff, vocab = PRESETS[args.preset]
-    base = get_config("qwen2-0.5b")  # dense GQA family
-    return dataclasses.replace(
-        base, name=f"lm-{args.preset}", num_layers=layers, d_model=dm,
-        num_heads=h, num_kv_heads=kv, d_ff=ff, vocab_size=vocab,
-        head_dim=dm // h, max_seq_len=args.seq,
-    )
+        cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    else:
+        layers, dm, h, kv, ff, vocab = PRESETS[args.preset]
+        base = get_config("qwen2-0.5b")  # dense GQA family
+        cfg = dataclasses.replace(
+            base, name=f"lm-{args.preset}", num_layers=layers, d_model=dm,
+            num_heads=h, num_kv_heads=kv, d_ff=ff, vocab_size=vocab,
+            head_dim=dm // h, max_seq_len=args.seq,
+        )
+    if args.pallas:
+        cfg = dataclasses.replace(cfg, attn_backend="pallas")
+    return cfg
 
 
 def main():
@@ -58,11 +61,18 @@ def main():
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--batch", type=int, default=8, help="global batch")
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--hetero", action="store_true",
+                    help="per-worker Markov-Zipf token distributions")
+    ap.add_argument("--q8", action="store_true",
+                    help="q8 stochastic-quantize uplinks + error feedback")
+    ap.add_argument("--pallas", action="store_true",
+                    help="flash-attention Pallas kernel on the hot path")
+    ap.add_argument("--tau", type=float, default=None,
+                    help="async engine with SSP staleness bound τ")
     ap.add_argument("--ckpt", default=None, help="checkpoint path")
     args = ap.parse_args()
 
     cfg = build_config(args)
-    mesh = make_test_mesh(1, 1)
     plan = TrainPlan(
         cfg=cfg,
         adaseg=AdaSEGConfig(g0=20.0, diameter=2.0,
@@ -74,25 +84,43 @@ def main():
         seq=args.seq,
         workers_override=args.workers,
     )
-    state = init_train_state(jax.random.PRNGKey(0), plan, mesh)
-    n_params = sum(v.size for v in jax.tree.leaves(state.params)) // max(
-        args.workers, 1)
+    engine = make_ps_engine(
+        plan, jax.random.PRNGKey(0), rounds=args.rounds,
+        hetero=args.hetero,
+        compressor=StochasticQuantizeCompressor(bits=8) if args.q8 else None,
+        latency=LognormalLatency(sigma=0.4) if args.tau is not None else None,
+        staleness_bound=args.tau,
+    )
+    n_params = sum(
+        v.size for v in jax.tree.leaves(engine.problem.init(
+            jax.random.PRNGKey(0)))
+    )
+    mode = (f"async τ={args.tau}" if args.tau is not None else "sync")
     print(f"model {cfg.name}: {n_params/1e6:.1f}M params/worker, "
           f"M={args.workers} workers, K={plan.k_local}, "
-          f"batch={plan.global_batch}×{plan.seq}")
+          f"batch={plan.global_batch}×{plan.seq}, {mode}, "
+          f"codec={'q8+EF' if args.q8 else 'identity'}")
 
-    round_fn = jax.jit(make_round_fn(plan))
     t_start = time.time()
-    for r in range(args.rounds):
-        batches = make_batches(jax.random.PRNGKey(1000 + r), plan, mesh)
-        state, metrics = round_fn(state, batches)
-        loss = float(metrics["loss"].mean())
-        eta = float(metrics["eta"].mean())
-        print(f"round {r+1:3d}/{args.rounds}  loss={loss:.4f}  "
-              f"mean η={eta:.5f}  t={int(state.t)}  "
-              f"({time.time()-t_start:.1f}s)")
+    if args.tau is not None:
+        engine.run()                       # drive the event queue to the end
+        for rec in engine.trace.rounds:
+            loss = ("-" if rec.residual is None else f"{rec.residual:.4f}")
+            idle = ("-" if rec.idle_frac is None else f"{rec.idle_frac:.0%}")
+            print(f"admission {rec.round:3d}  eval-loss={loss}  "
+                  f"mean η={rec.eta_mean:.5f}  "
+                  f"sim_t={rec.sim_time_s:.1f}s  idle={idle}")
+    else:
+        for r in range(1, args.rounds + 1):
+            engine.run(until_round=r)
+            rec = engine.trace.rounds[-1]
+            print(f"round {r:3d}/{args.rounds}  "
+                  f"eval-loss={rec.residual:.4f}  "
+                  f"mean η={rec.eta_mean:.5f}  "
+                  f"up={rec.bytes_up/1e6:.2f}MB  "
+                  f"({time.time()-t_start:.1f}s)")
     if args.ckpt:
-        save_pytree(args.ckpt, state)
+        engine.save(args.ckpt)
         print(f"checkpoint written to {args.ckpt}")
 
 

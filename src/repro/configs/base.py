@@ -71,6 +71,13 @@ class ArchConfig:
     norm: str = "rmsnorm"          # rmsnorm | layernorm (whisper)
     pos_embed: str = "rope"        # rope | learned (whisper)
 
+    # --- kernel backends --------------------------------------------------------
+    # "reference" = pure-jnp paths; "pallas" routes self-causal attention
+    # through kernels.flash_attention and SSD mixing through kernels.ssd_scan
+    # (forward Pallas, backward via the reference VJP).
+    attn_backend: str = "reference"
+    ssm_backend: str = "reference"
+
     # --- numerics ---------------------------------------------------------------
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
@@ -151,6 +158,8 @@ class ArchConfig:
         return self.num_layers % self.pattern_period()
 
     def validate(self) -> None:
+        assert self.attn_backend in ("reference", "pallas"), self.attn_backend
+        assert self.ssm_backend in ("reference", "pallas"), self.ssm_backend
         assert self.d_model % self.num_heads == 0 or self.head_dim
         assert self.num_heads % max(self.num_kv_heads, 1) == 0
         if self.num_experts:

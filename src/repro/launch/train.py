@@ -14,10 +14,21 @@ Worker placement (see ``launch.mesh.worker_axes_for``):
 * hierarchical mode — M = #pods; within a worker params are FSDP-sharded
                       over ``data`` (per-step reduce-scatter/all-gather),
                       and only the inter-pod sync is K-amortized.
+
+Since the unified-stack refactor this module owns **no optimizer math of its
+own**: η and the Line-7 sync come from ``core.adaseg`` (``eta_of``,
+``sync_weighted_stacked``) — the same functions the PS engines compile —
+and :func:`make_ps_engine` turns a :class:`TrainPlan` directly into a
+:class:`repro.ps.PSEngine` / :class:`repro.ps.AsyncPSEngine` over a
+:class:`repro.ps.ModelWorker`, which is how the examples and benchmarks
+drive real-model training. ``make_round_fn`` remains as the GSPMD-lowering
+adapter (one jit-able round over pre-materialized batches) for the
+dry-run/roofline tooling.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, NamedTuple
 
 import jax
@@ -26,7 +37,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..core.adaseg import AdaSEGConfig
+from ..core.adaseg import AdaSEGConfig, eta_of, sync_weighted_stacked
+from ..core.tree import tree_norm_sq
 from ..data.synthetic import batch_struct, make_batch
 from ..models import init_model, loss_fn
 from ..sharding.specs import build_param_shardings, sanitize_spec, stack_spec
@@ -42,13 +54,10 @@ class TrainState(NamedTuple):
     grad_sq_sum: jax.Array  # (M,) V_t diagnostic
 
 
-def _stacked_norm_sq(tree) -> jax.Array:
-    """Per-worker ‖·‖² over a (M, …) stacked pytree → (M,)."""
-    def one(leaf):
-        x = leaf.astype(jnp.float32)
-        return jnp.sum(x * x, axis=tuple(range(1, x.ndim)))
-
-    return jax.tree.reduce(jnp.add, jax.tree.map(one, tree))
+# Per-worker ‖·‖² over a (M, …) stacked pytree → (M,): the canonical
+# tree_norm_sq vmapped over the worker axis (bit-exact vs the old private
+# reduction — pinned by tests/test_model_worker.py).
+_stacked_norm_sq = jax.vmap(tree_norm_sq)
 
 
 def _bcast(eta: jax.Array, leaf: jax.Array) -> jax.Array:
@@ -107,13 +116,10 @@ def make_round_fn(plan: TrainPlan):
 
     vgrad = jax.vmap(jax.value_and_grad(worker_loss))
 
-    def eta_of(sum_sq):
-        return acfg.diameter * acfg.alpha / jnp.sqrt(acfg.g0**2 + sum_sq)
-
     def local_step(carry: TrainState, batch_k):
         b1 = jax.tree.map(lambda v: v[0], batch_k)
         b2 = jax.tree.map(lambda v: v[1], batch_k)
-        eta = eta_of(carry.sum_sq)                       # (M,)
+        eta = eta_of(acfg, carry.sum_sq)                 # (M,)
 
         _, m_t = vgrad(carry.params, b1)                 # M_t = G(z̃)
         z_t = jax.tree.map(
@@ -139,16 +145,16 @@ def make_round_fn(plan: TrainPlan):
         return new, jnp.mean(loss)
 
     def sync(state: TrainState) -> TrainState:
-        """Line 7: inverse-η weighted average over the worker axis."""
-        inv_eta = 1.0 / eta_of(state.sum_sq)             # (M,)
-        w = inv_eta / jnp.sum(inv_eta)
-
-        def avg(leaf):
-            wb = _bcast(w, leaf)
-            mean = jnp.sum(wb * leaf.astype(jnp.float32), axis=0, keepdims=True)
-            return jnp.broadcast_to(mean, leaf.shape).astype(leaf.dtype)
-
-        return state._replace(params=jax.tree.map(avg, state.params))
+        """Line 7: the engine's inverse-η weighted average
+        (``core.adaseg.sync_weighted_stacked``), accumulated in f32 like
+        the historical driver (a no-op cast for f32 params)."""
+        inv_eta = 1.0 / eta_of(acfg, state.sum_sq)       # (M,)
+        f32 = jax.tree.map(lambda l: l.astype(jnp.float32), state.params)
+        avg = sync_weighted_stacked(f32, inv_eta)
+        params = jax.tree.map(
+            lambda a, l: a.astype(l.dtype), avg, state.params
+        )
+        return state._replace(params=params)
 
     def round_fn(state: TrainState, batches):
         state = sync(state)
@@ -162,7 +168,7 @@ def make_round_fn(plan: TrainPlan):
                 )
                 losses.append(loss_k)
             losses = jnp.stack(losses)
-        return state, {"loss": losses, "eta": eta_of(state.sum_sq)}
+        return state, {"loss": losses, "eta": eta_of(acfg, state.sum_sq)}
 
     return round_fn
 
@@ -289,3 +295,85 @@ def make_batches(rng, plan: TrainPlan, mesh):
     return jax.tree.map(
         lambda v: v.reshape(plan.k_local, 2, m, b, *v.shape[1:]), flat
     )
+
+
+# ---------------------------------------------------------------------------
+# The unified stack: a TrainPlan is a PSEngine configuration
+# ---------------------------------------------------------------------------
+
+def make_ps_engine(
+    plan: TrainPlan,
+    rng,
+    *,
+    rounds: int,
+    mesh=None,
+    hetero: bool = False,
+    schedule=None,
+    compressor=None,
+    faults=None,
+    codec_backend: str = "reference",
+    latency=None,
+    staleness_bound: float | None = None,
+    staleness_discount: float = 1.0,
+    eval_fn="loss",
+    trace_meta: dict | None = None,
+):
+    """A TrainPlan as a Parameter-Server engine — the one training stack.
+
+    Builds the plan's architecture as a :func:`repro.models.make_lm_problem`
+    and its AdaSEG spelling as a :class:`repro.ps.ModelWorker`, then hands
+    both to the PS runtime, so real-model training gets schedules,
+    compression + error feedback, faults, checkpoint/resume and telemetry
+    from the exact same code path as the optimizer zoo.
+
+    * ``mesh=None`` — serial vmap engine (``plan.workers_override`` sets M).
+    * ``mesh=...``  — ``shard_map`` engine over ``plan.worker_axes(mesh)``.
+    * ``latency``/``staleness_bound`` — :class:`repro.ps.AsyncPSEngine`
+      discrete-event simulation instead (serial path; τ=0 is bit-exact with
+      the synchronous engine by shared code).
+
+    ``eval_fn="loss"`` installs :func:`repro.models.make_eval_loss` on a
+    held-out batch; pass ``None`` (or a callable) to override.
+    """
+    from ..models.problem import make_eval_loss, make_lm_problem
+    from ..models.worker import ModelWorker
+    from ..ps import AsyncPSConfig, AsyncPSEngine, PSConfig, PSEngine
+
+    m = plan.num_workers(mesh) if mesh is not None else plan.workers_override
+    if not m:
+        raise ValueError(
+            "make_ps_engine needs a mesh or plan.workers_override"
+        )
+    b = plan.per_worker_batch(mesh) if mesh is not None else (
+        plan.global_batch // m
+    )
+    problem = make_lm_problem(
+        plan.cfg, batch=b, seq=plan.seq,
+        hetero_workers=(m if hetero else None),
+    )
+    worker = ModelWorker(plan.adaseg, arch=plan.cfg.name)
+    if eval_fn == "loss":
+        eval_fn = make_eval_loss(plan.cfg, batch=b, seq=plan.seq)
+
+    is_async = latency is not None or staleness_bound is not None
+    common = dict(
+        num_workers=m, rounds=rounds, worker=worker, local_k=plan.k_local,
+        schedule=schedule, compressor=compressor, faults=faults,
+        codec_backend=codec_backend,
+    )
+    if is_async:
+        if mesh is not None:
+            raise ValueError("the async engine runs the serial path only")
+        config = AsyncPSConfig(
+            **common, latency=latency,
+            staleness_bound=(math.inf if staleness_bound is None
+                             else staleness_bound),
+            staleness_discount=staleness_discount,
+        )
+        return AsyncPSEngine(problem, config, rng, eval_fn=eval_fn,
+                             trace_meta=trace_meta)
+    config = PSConfig(**common)
+    waxes = plan.worker_axes(mesh) if mesh is not None else ("data",)
+    return PSEngine(problem, config, rng, mesh=mesh,
+                    worker_axes=waxes, eval_fn=eval_fn,
+                    trace_meta=trace_meta)

@@ -1,4 +1,7 @@
-"""Model zoo: composable backbones for the assigned architectures."""
+"""Model zoo: composable backbones for the assigned architectures, plus the
+PS-runtime face of the stack — real models as problems
+(:mod:`.problem`) and LocalWorkers (:mod:`.worker`)."""
+from .problem import make_eval_loss, make_lm_problem, tiny_lm_config
 from .transformer import (
     cache_specs,
     decode_step,
@@ -8,8 +11,10 @@ from .transformer import (
     init_model,
     loss_fn,
 )
+from .worker import ModelWorker
 
 __all__ = [
+    "ModelWorker",
     "cache_specs",
     "decode_step",
     "encode",
@@ -17,4 +22,7 @@ __all__ = [
     "init_cache",
     "init_model",
     "loss_fn",
+    "make_eval_loss",
+    "make_lm_problem",
+    "tiny_lm_config",
 ]

@@ -11,6 +11,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..kernels.flash_attention import ops as flash_ops
+from ..kernels.flash_attention.ref import attention_ref
 from .layers import (
     MODEL,
     _normal,
@@ -132,6 +134,42 @@ def _chunked_attention(q, k, v, *, scale, cap, causal, window, block=1024):
     return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, dh)
 
 
+def _flash_self_attention(q, k, v, *, scale, cap, window):
+    """Self-causal attention on the model's (B, S, H, D) layout via the
+    Pallas flash kernel (``cfg.attn_backend="pallas"``).
+
+    The kernel has no transpose rule, so the backward pass differentiates
+    the pure-jnp reference (`attention_ref`, validated against the kernel
+    at rtol 1e-5) — forward Pallas, backward reference VJP.
+    """
+    def _ref(q, k, v):
+        out = attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal=True, window=window, softcap=cap, scale=scale,
+        )
+        return out.transpose(0, 2, 1, 3)
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        out = flash_ops.attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal=True, window=window, softcap=cap, scale=scale,
+        )
+        return out.transpose(0, 2, 1, 3)
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        _, pull = jax.vjp(_ref, *res)
+        return pull(g)
+
+    f.defvjp(fwd, bwd)
+    return f(q, k, v)
+
+
 def apply_attention(
     p,
     cfg: ArchConfig,
@@ -151,7 +189,11 @@ def apply_attention(
     s_len, t_len = q.shape[1], k.shape[1]
     scale = cfg.attn_scale or cfg.head_dim_ ** -0.5
     is_self_causal = causal and cross_states is None
-    if is_self_causal and s_len >= CHUNKED_ATTN_THRESHOLD:
+    if is_self_causal and cfg.attn_backend == "pallas":
+        out = _flash_self_attention(
+            q, k, v, scale=scale, cap=cfg.attn_softcap, window=window,
+        )
+    elif is_self_causal and s_len >= CHUNKED_ATTN_THRESHOLD:
         out = _chunked_attention(
             q, k, v, scale=scale, cap=cfg.attn_softcap,
             causal=True, window=window,

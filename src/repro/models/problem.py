@@ -1,0 +1,135 @@
+"""Real models as :class:`~repro.core.types.MinimaxProblem` instances.
+
+This is the bridge that lets the dormant LM stack (``repro.models`` +
+``repro.configs``) train through the Parameter-Server runtime: a language
+model is a *minimization-only* minimax problem (``core.types`` docstring —
+the dual block is empty, the same machinery applies verbatim), so wrapping
+``models.loss_fn`` as a problem oracle puts million+-parameter transformers
+on the exact same engine code path as the paper's bilinear game — schedules,
+compression + error feedback, faults, τ-staleness, bit-exact resume and all.
+
+* ``init(rng)``    — ``models.init_model`` parameters (specs discarded; the
+  engine stacks/shards the param pytree like any other worker state).
+* ``sample(rng)``  — one Markov-Zipf batch from ``data.synthetic``; the
+  engine's existing per-(round, step, worker) rng derivation therefore *is*
+  the per-worker data stream.
+* ``oracle(z, ξ)`` — ``jax.grad`` of the next-token cross-entropy (+ MoE
+  router aux); with ``cfg.attn_backend="pallas"`` / ``ssm_backend="pallas"``
+  the forward/backward hot path runs the ``kernels.flash_attention`` /
+  ``kernels.ssd_scan`` Pallas kernels.
+* ``project``      — identity (unconstrained), which also makes the fused
+  AdaSEG step kernels eligible (``core.projections.spec_of``).
+
+Heterogeneity: ``hetero_workers=M`` installs a ``sample_worker`` whose
+Markov repetition probability varies per worker id — each worker draws from
+its own local token distribution, the federated skew the paper studies in
+§4.2, threaded through the engine's ``worker_id`` plumbing.
+
+Examples
+--------
+A tiny transformer as a problem — one oracle call is one model gradient:
+
+>>> import jax
+>>> from repro.configs.base import ArchConfig
+>>> from repro.models.problem import make_lm_problem, tiny_lm_config
+>>> cfg = tiny_lm_config()
+>>> prob = make_lm_problem(cfg, batch=2, seq=8)
+>>> z0 = prob.init(jax.random.PRNGKey(0))
+>>> g = prob.oracle(z0, prob.sample(jax.random.PRNGKey(1)))
+>>> jax.tree.structure(g) == jax.tree.structure(z0)
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import projections
+from ..core.types import MinimaxProblem
+from ..data.synthetic import make_batch, sample_tokens
+from .transformer import init_model, loss_fn
+
+
+def tiny_lm_config(name: str = "tiny-lm", *, vocab: int = 64,
+                   d_model: int = 32, layers: int = 2,
+                   attn_backend: str = "reference") -> ArchConfig:
+    """A CPU-second-scale dense transformer config for tests/benchmarks."""
+    return ArchConfig(
+        name=name, arch_type="dense", num_layers=layers, d_model=d_model,
+        num_heads=2, num_kv_heads=1, d_ff=2 * d_model, vocab_size=vocab,
+        head_dim=d_model // 2, max_seq_len=64, attn_backend=attn_backend,
+    )
+
+
+def _hetero_sampler(cfg: ArchConfig, batch: int, seq: int,
+                    hetero_workers: int):
+    """Per-worker Markov-Zipf stream: the repetition probability sweeps
+    0.1 → 0.8 across worker ids, so each worker's token distribution is
+    genuinely local (and a function of the engine-provided worker_id)."""
+    span = max(hetero_workers - 1, 1)
+
+    def sample_worker(rng, worker_id):
+        p_rep = 0.1 + 0.7 * jnp.asarray(worker_id, jnp.float32) / span
+        r1, r2 = jax.random.split(jax.random.fold_in(rng, 11))
+        base = sample_tokens(r1, batch, seq, cfg.vocab_size)
+        rep = jax.random.bernoulli(r2, p_rep, base.shape)
+        shifted = (jnp.roll(base, 1, axis=1) + 1) % cfg.vocab_size
+        toks = jnp.where(rep, shifted, base).astype(jnp.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.encoder_seq:
+            out["frontend"] = 0.02 * jax.random.normal(
+                jax.random.fold_in(rng, 1),
+                (batch, cfg.encoder_seq, cfg.d_model),
+                dtype=jnp.dtype(cfg.compute_dtype),
+            )
+        return out
+
+    return sample_worker
+
+
+def make_lm_problem(cfg: ArchConfig, *, batch: int, seq: int,
+                    hetero_workers: int | None = None) -> MinimaxProblem:
+    """Language-model training as a minimization-only MinimaxProblem.
+
+    ``batch``/``seq`` are per-worker, per-oracle-call shapes; the engine's
+    extragradient step makes two oracle calls per local step, each with its
+    own derived key, so every (round, step, worker, call) sees a fresh
+    deterministic batch.
+    """
+    cfg.validate()
+
+    def init(rng):
+        return init_model(rng, cfg)[0]
+
+    def sample(rng):
+        return make_batch(rng, cfg, batch, seq)
+
+    def oracle(z, xi):
+        return jax.grad(loss_fn)(z, cfg, xi)
+
+    return MinimaxProblem(
+        init=init,
+        sample=sample,
+        oracle=oracle,
+        project=projections.identity(),
+        name=f"lm[{cfg.name}]x{batch}x{seq}",
+        sample_worker=(_hetero_sampler(cfg, batch, seq, hetero_workers)
+                       if hetero_workers else None),
+    )
+
+
+def make_eval_loss(cfg: ArchConfig, *, batch: int, seq: int,
+                   rng=None):
+    """Held-out-loss ``eval_fn`` for the engines: cross-entropy of the
+    global output iterate z̄ on one fixed deterministic batch."""
+    rng = jax.random.PRNGKey(987) if rng is None else rng
+    eval_batch = make_batch(rng, cfg, batch, seq)
+
+    @jax.jit
+    def eval_fn(params):
+        return loss_fn(params, cfg, eval_batch)
+
+    return eval_fn

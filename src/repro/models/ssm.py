@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ArchConfig
+from ..kernels.ssd_scan import ops as ssd_ops
 from .layers import MODEL, _normal, apply_conv1d, apply_rmsnorm, conv1d_step, init_conv1d, init_rmsnorm
 
 
@@ -122,6 +123,27 @@ def ssd_chunked(x, dt, a, b, c, chunk):
     return (y_diag + y_off).reshape(bsz, l, h, pdim).astype(out_dtype)
 
 
+def _ssd_pallas(xh, dt, a, b, c, chunk):
+    """SSD mixing via the Pallas scan kernel (``cfg.ssm_backend="pallas"``).
+
+    The kernel has no transpose rule, so the backward pass differentiates
+    the chunked jnp reference — forward Pallas, backward reference VJP.
+    """
+    @jax.custom_vjp
+    def f(x, dt, a, b, c):
+        return ssd_ops.ssd(x, dt, a, b, c, chunk=chunk)
+
+    def fwd(x, dt, a, b, c):
+        return f(x, dt, a, b, c), (x, dt, a, b, c)
+
+    def bwd(res, g):
+        _, pull = jax.vjp(lambda *z: ssd_chunked(*z, chunk), *res)
+        return pull(g)
+
+    f.defvjp(fwd, bwd)
+    return f(xh, dt, a, b, c)
+
+
 def apply_ssm(p, cfg: ArchConfig, x):
     """Full-sequence Mamba2 block. x: (B, S, D) → (B, S, D)."""
     di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
@@ -133,7 +155,10 @@ def apply_ssm(p, cfg: ArchConfig, x):
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     a = -jnp.exp(p["a_log"])
     xh = xs.reshape(*xs.shape[:2], h, pd)
-    y = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk)
+    if cfg.ssm_backend == "pallas":
+        y = _ssd_pallas(xh, dt, a, b, c, cfg.ssm_chunk)
+    else:
+        y = ssd_chunked(xh, dt, a, b, c, cfg.ssm_chunk)
     y = y + p["d_skip"][:, None].astype(y.dtype) * xh
     y = y.reshape(*xs.shape)
     y = apply_rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)

@@ -84,6 +84,7 @@ event heap rebuilt from per-worker state and every policy re-derived from
 its seed.
 """
 from ..core.worker import AdaSEGWorker, LocalWorker
+from ..models.worker import ModelWorker
 from .async_engine import AsyncPSConfig, AsyncPSEngine
 from .compress import (
     IdentityCompressor,
@@ -134,6 +135,7 @@ __all__ = [
     "LocalWorker",
     "LognormalLatency",
     "MarkovLatency",
+    "ModelWorker",
     "NoFaults",
     "OutageFaults",
     "PSConfig",

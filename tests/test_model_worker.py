@@ -1,0 +1,365 @@
+"""The unified training stack: real models (transformer LM / WGAN) as
+ModelWorkers on the PS runtime.
+
+Covers the PR's acceptance bars: models train through PSEngine with q8-EF
+compression, AsyncPSEngine at τ=0 is bit-exact with the sync engine,
+ModelWorker checkpoints round-trip bit-exactly mid-stream (serial and
+async) with wrong-architecture restores rejected, the Pallas
+flash-attention/SSD kernels on the model hot path agree with the reference
+math under grad, and the refactored ``launch.train.make_round_fn``
+reproduces the pre-refactor trajectory bit-exactly (the η/norm/sync math
+now comes from ``core.adaseg``)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AdaSEGConfig, run_local_adaseg
+from repro.core.adaseg import eta_of
+from repro.core.tree import tree_norm_sq
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import (
+    TrainPlan,
+    init_train_state,
+    make_batches,
+    make_ps_engine,
+    make_round_fn,
+)
+from repro.models import (
+    ModelWorker,
+    loss_fn,
+    make_lm_problem,
+    tiny_lm_config,
+)
+from repro.problems import make_wgan_problem
+from repro.ps import (
+    AsyncPSConfig,
+    AsyncPSEngine,
+    ConstantLatency,
+    PSConfig,
+    PSEngine,
+    StochasticQuantizeCompressor,
+)
+
+M, R, K = 2, 2, 2
+BATCH, SEQ = 2, 8
+
+
+@pytest.fixture(scope="module")
+def lm_problem():
+    return make_lm_problem(tiny_lm_config(), batch=BATCH, seq=SEQ)
+
+
+@pytest.fixture(scope="module")
+def wgan():
+    return make_wgan_problem(jax.random.PRNGKey(0))
+
+
+def _acfg(**kw):
+    base = dict(g0=20.0, diameter=2.0, alpha=1.0, k=K, average_output=False)
+    base.update(kw)
+    return AdaSEGConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _as_async(pscfg: PSConfig, **extra) -> AsyncPSConfig:
+    base = {f.name: getattr(pscfg, f.name)
+            for f in dataclasses.fields(PSConfig)}
+    return AsyncPSConfig(**base, **extra)
+
+
+# ---------------------------------------------------------------------------
+# Real models train through the engine (q8-EF on)
+# ---------------------------------------------------------------------------
+
+def test_lm_trains_through_engine_with_q8_ef(lm_problem):
+    worker = ModelWorker(_acfg(), arch="tiny-lm")
+    eng = PSEngine(
+        lm_problem,
+        PSConfig(worker=worker, local_k=K, num_workers=M, rounds=R,
+                 compressor=StochasticQuantizeCompressor(bits=8)),
+        rng=jax.random.PRNGKey(1),
+        eval_fn=lambda z: loss_fn(z, tiny_lm_config(),
+                                  lm_problem.sample(jax.random.PRNGKey(9))),
+    )
+    z = eng.run()
+    # z̄ is a real parameter pytree and the eval loss is finite
+    assert jax.tree.structure(z) == jax.tree.structure(
+        lm_problem.init(jax.random.PRNGKey(0)))
+    assert np.isfinite(eng.trace.rounds[-1].residual)
+    # q8 uplinks genuinely compress vs the dense broadcast
+    rec = eng.trace.rounds[-1]
+    assert 0 < rec.bytes_up < 0.5 * rec.bytes_down
+
+
+def test_wgan_modelworker_matches_serial_driver(wgan):
+    """ModelWorker adds only the architecture fingerprint — on identity
+    compression the engine must reproduce ``run_local_adaseg`` bit-exactly
+    for the real WGAN minimax problem."""
+    cfg = _acfg(g0=50.0, diameter=1.0)
+    z_ser, _ = run_local_adaseg(
+        wgan.problem, cfg, num_workers=M, rounds=R,
+        rng=jax.random.PRNGKey(2))
+    eng = PSEngine(
+        wgan.problem,
+        PSConfig(worker=ModelWorker(cfg, arch=wgan.problem.name),
+                 local_k=K, num_workers=M, rounds=R),
+        rng=jax.random.PRNGKey(2))
+    _assert_trees_equal(z_ser, eng.run())
+
+
+# ---------------------------------------------------------------------------
+# Async engine: τ=0 bit-exact with sync on model payloads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", ["lm", "wgan"])
+def test_async_tau0_bit_exact_with_sync(case, lm_problem, wgan):
+    if case == "lm":
+        problem, cfg, arch = lm_problem, _acfg(), "tiny-lm"
+    else:
+        problem, cfg, arch = (wgan.problem, _acfg(g0=50.0, diameter=1.0),
+                              wgan.problem.name)
+    pscfg = PSConfig(worker=ModelWorker(cfg, arch=arch), local_k=K,
+                     num_workers=M, rounds=R)
+    eng = PSEngine(problem, pscfg, rng=jax.random.PRNGKey(3))
+    z_sync = eng.run()
+    a = AsyncPSEngine(
+        problem,
+        _as_async(pscfg,
+                  latency=ConstantLatency(step_s=(1.0, 3.0), up_s=0.5),
+                  staleness_bound=0.0),
+        rng=jax.random.PRNGKey(3))
+    _assert_trees_equal(z_sync, a.run())
+    _assert_trees_equal(eng.state, a.state)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing: bit-exact mid-stream resume, wrong-arch rejected
+# ---------------------------------------------------------------------------
+
+def test_model_checkpoint_roundtrip_serial(lm_problem, tmp_path):
+    path = str(tmp_path / "lm.ckpt")
+    mk = lambda: PSEngine(
+        lm_problem,
+        PSConfig(worker=ModelWorker(_acfg(), arch="tiny-lm"), local_k=K,
+                 num_workers=M, rounds=3,
+                 compressor=StochasticQuantizeCompressor(bits=8)),
+        rng=jax.random.PRNGKey(4))
+    ref = mk()
+    z_ref = ref.run()
+
+    eng = mk()
+    eng.run(until_round=1)
+    eng.save(path)
+    resumed = mk().restore(path)
+    assert resumed.round == 1
+    _assert_trees_equal(eng.state, resumed.state)
+    _assert_trees_equal(z_ref, resumed.run())
+
+
+def test_model_checkpoint_roundtrip_async(lm_problem, tmp_path):
+    path = str(tmp_path / "lm_async.ckpt")
+    cfg = _as_async(
+        PSConfig(worker=ModelWorker(_acfg(), arch="tiny-lm"), local_k=K,
+                 num_workers=M, rounds=3),
+        latency=ConstantLatency(step_s=(1.0, 2.0), up_s=0.3),
+        staleness_bound=1.0)
+    mk = lambda: AsyncPSEngine(lm_problem, cfg, rng=jax.random.PRNGKey(5))
+    ref = mk()
+    z_ref = ref.run()
+
+    eng = mk()
+    eng.run(until_admissions=2)          # kill mid-event-queue
+    eng.save(path)
+    resumed = mk().restore(path)
+    _assert_trees_equal(eng.state, resumed.state)
+    _assert_trees_equal(z_ref, resumed.run())
+
+
+def test_wrong_architecture_restore_rejected(lm_problem, tmp_path):
+    path = str(tmp_path / "arch.ckpt")
+    eng = PSEngine(
+        lm_problem,
+        PSConfig(worker=ModelWorker(_acfg(), arch="tiny-lm"), local_k=K,
+                 num_workers=M, rounds=R),
+        rng=jax.random.PRNGKey(6))
+    eng.run(until_round=1)
+    eng.save(path)
+    other = PSEngine(
+        lm_problem,
+        PSConfig(worker=ModelWorker(_acfg(), arch="other-arch"), local_k=K,
+                 num_workers=M, rounds=R),
+        rng=jax.random.PRNGKey(6))
+    with pytest.raises(ValueError, match="different optimizer"):
+        other.restore(path)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels on the model hot path
+# ---------------------------------------------------------------------------
+
+def test_pallas_attention_backend_matches_reference_under_grad():
+    cfg_r = tiny_lm_config()
+    cfg_p = tiny_lm_config(attn_backend="pallas")
+    from repro.models import init_model
+    from repro.data.synthetic import make_batch
+
+    params, _ = init_model(jax.random.PRNGKey(0), cfg_r)
+    batch = make_batch(jax.random.PRNGKey(1), cfg_r, BATCH, 16)
+    lr, gr = jax.value_and_grad(loss_fn)(params, cfg_r, batch)
+    lp, gp = jax.value_and_grad(loss_fn)(params, cfg_p, batch)
+    np.testing.assert_allclose(float(lr), float(lp), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(gr), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_pallas_ssd_backend_matches_reference_under_grad():
+    from repro.models import init_model
+    from repro.data.synthetic import make_batch
+
+    base = dataclasses.replace(
+        tiny_lm_config(name="tiny-ssm"), arch_type="ssm",
+        layer_pattern="ssm", ssm_state=8, ssm_head_dim=16, ssm_chunk=8)
+    cfg_p = dataclasses.replace(base, ssm_backend="pallas")
+    params, _ = init_model(jax.random.PRNGKey(0), base)
+    batch = make_batch(jax.random.PRNGKey(1), base, BATCH, 16)
+    lr, gr = jax.value_and_grad(loss_fn)(params, base, batch)
+    lp, gp = jax.value_and_grad(loss_fn)(params, cfg_p, batch)
+    np.testing.assert_allclose(float(lr), float(lp), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(gr), jax.tree.leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# launch.train refactor: η math deduped, trajectory pinned
+# ---------------------------------------------------------------------------
+
+def _old_stacked_norm_sq(tree):
+    """Pre-refactor launch.train._stacked_norm_sq, vendored verbatim."""
+    def one(leaf):
+        x = leaf.astype(jnp.float32)
+        return jnp.sum(x * x, axis=tuple(range(1, x.ndim)))
+
+    return jax.tree.reduce(jnp.add, jax.tree.map(one, tree))
+
+
+def _old_round_fn(plan):
+    """Pre-refactor launch.train.make_round_fn, vendored verbatim: private
+    η formula, private per-worker norm reduction, private f32 weighted
+    sync. The refactored module must reproduce it bit-exactly."""
+    from repro.launch.train import TrainState, _bcast
+
+    cfg, acfg = plan.cfg, plan.adaseg
+
+    def worker_loss(params, batch):
+        return loss_fn(params, cfg, batch)
+
+    vgrad = jax.vmap(jax.value_and_grad(worker_loss))
+
+    def eta_of_(sum_sq):
+        return acfg.diameter * acfg.alpha / jnp.sqrt(acfg.g0**2 + sum_sq)
+
+    def local_step(carry, batch_k):
+        b1 = jax.tree.map(lambda v: v[0], batch_k)
+        b2 = jax.tree.map(lambda v: v[1], batch_k)
+        eta = eta_of_(carry.sum_sq)
+
+        _, m_t = vgrad(carry.params, b1)
+        z_t = jax.tree.map(
+            lambda z, g: z - _bcast(eta, z) * g, carry.params, m_t)
+        loss, g_t = vgrad(z_t, b2)
+        z_new = jax.tree.map(
+            lambda z, g: z - _bcast(eta, z) * g, carry.params, g_t)
+
+        diff1 = jax.tree.map(jnp.subtract, z_t, carry.params)
+        diff2 = jax.tree.map(jnp.subtract, z_t, z_new)
+        z_sq = (_old_stacked_norm_sq(diff1) + _old_stacked_norm_sq(diff2)) / (
+            5.0 * eta**2)
+        gss = (carry.grad_sq_sum + _old_stacked_norm_sq(g_t)
+               + _old_stacked_norm_sq(m_t))
+        new = TrainState(params=z_new, sum_sq=carry.sum_sq + z_sq,
+                         t=carry.t + 1, grad_sq_sum=gss)
+        return new, jnp.mean(loss)
+
+    def sync(state):
+        inv_eta = 1.0 / eta_of_(state.sum_sq)
+        w = inv_eta / jnp.sum(inv_eta)
+
+        def avg(leaf):
+            wb = _bcast(w, leaf)
+            mean = jnp.sum(wb * leaf.astype(jnp.float32), axis=0,
+                           keepdims=True)
+            return jnp.broadcast_to(mean, leaf.shape).astype(leaf.dtype)
+
+        return state._replace(params=jax.tree.map(avg, state.params))
+
+    def round_fn(state, batches):
+        state = sync(state)
+        state, losses = jax.lax.scan(local_step, state, batches)
+        return state, {"loss": losses, "eta": eta_of_(state.sum_sq)}
+
+    return round_fn
+
+
+def _tiny_plan():
+    return TrainPlan(
+        cfg=tiny_lm_config(), adaseg=_acfg(), worker_mode="paper",
+        k_local=K, global_batch=BATCH * M, seq=SEQ, workers_override=M)
+
+
+def test_round_fn_reproduces_pre_refactor_trajectory():
+    """Acceptance bar: the refactored round loop (η/sync delegated to
+    core.adaseg) is bit-exact with the vendored pre-refactor code over
+    several rounds."""
+    plan = _tiny_plan()
+    mesh = make_test_mesh(1, 1)
+    state_old = state_new = init_train_state(jax.random.PRNGKey(0), plan,
+                                             mesh)
+    old_fn = jax.jit(_old_round_fn(plan))
+    new_fn = jax.jit(make_round_fn(plan))
+    for r in range(3):
+        batches = make_batches(jax.random.PRNGKey(100 + r), plan, mesh)
+        state_old, m_old = old_fn(state_old, batches)
+        state_new, m_new = new_fn(state_new, batches)
+    _assert_trees_equal(state_old, state_new)
+    _assert_trees_equal(m_old, m_new)
+
+
+def test_eta_and_norm_dedup_numerically_identical():
+    """Satellite: the deleted private implementations and the canonical
+    core.adaseg/core.tree versions are the same function, bit for bit."""
+    acfg = _acfg()
+    sum_sq = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (7,))) * 40.0
+    old_eta = acfg.diameter * acfg.alpha / jnp.sqrt(acfg.g0**2 + sum_sq)
+    np.testing.assert_array_equal(np.asarray(old_eta),
+                                  np.asarray(eta_of(acfg, sum_sq)))
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    tree = {"a": jax.random.normal(ks[0], (4, 3, 5)),
+            "b": {"c": jax.random.normal(ks[1], (4, 7)),
+                  "d": jax.random.normal(ks[2], (4, 2, 2, 2))}}
+    np.testing.assert_array_equal(
+        np.asarray(_old_stacked_norm_sq(tree)),
+        np.asarray(jax.vmap(tree_norm_sq)(tree)))
+
+
+def test_make_ps_engine_adapter(lm_problem):
+    """A TrainPlan drives the PS engine directly — the examples' code
+    path: same architecture, same M/K, telemetry populated."""
+    eng = make_ps_engine(_tiny_plan(), jax.random.PRNGKey(0), rounds=R)
+    z = eng.run()
+    assert jax.tree.structure(z) == jax.tree.structure(
+        lm_problem.init(jax.random.PRNGKey(0)))
+    assert len(eng.trace.rounds) == R
+    assert np.isfinite(eng.trace.rounds[-1].residual)
+    assert eng.config.num_workers == M and eng.config.local_k == K
