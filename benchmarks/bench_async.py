@@ -41,7 +41,7 @@ from repro.ps import (
     TraceRecorder,
 )
 
-from .common import emit
+from .common import emit, persist_trajectory
 
 M, R, K = 4, 24, 10
 N = 10
@@ -125,6 +125,9 @@ def main() -> None:
             emit(f"async[check:{opt_name}/{pol}]", 0.0,
                  f"beats_sync_to_target={ok};speedup={speedup:.2f}x")
     emit("async[check]", 0.0, f"all_async_beat_sync={all(checks)}")
+    persist_trajectory("async", {
+        f"{opt}/{pol}": row for (opt, pol), row in out.items()
+    })
 
 
 if __name__ == "__main__":

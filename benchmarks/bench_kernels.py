@@ -29,10 +29,10 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan.ref import ssd_ref
 from repro.models.ssm import ssd_chunked
 
-from .common import emit, timed
+from .common import emit, persist_trajectory, timed
 
 
-def bench_step_backends(n: int = 1 << 20) -> None:
+def bench_step_backends(n: int = 1 << 20) -> dict:
     """Fused Pallas step vs reference tree-op step, identical problem.
 
     The pytree is {x: (n,), y: (n/4,)} → 1.25M params at the default n;
@@ -78,9 +78,11 @@ def bench_step_backends(n: int = 1 << 20) -> None:
     emit(f"step[fused,params={params}]", med["fused"],
          f"backend=pallas_explore_anchor;hbm_passes~7;"
          f"speedup_vs_reference={med['reference'] / med['fused']:.2f}x")
+    return {"step_reference_us": med["reference"],
+            "step_fused_us": med["fused"]}
 
 
-def run() -> None:
+def run() -> dict:
     # --- adaseg update: jnp reference path (the production CPU path) -------
     n = 1 << 20
     tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (n,))}
@@ -94,9 +96,10 @@ def run() -> None:
     emit("kernel[adaseg_update_ref,n=1M]", us,
          f"hbm_bytes_fused={bytes_fused};unfused={bytes_unfused};"
          f"traffic_ratio={bytes_fused/bytes_unfused:.2f}")
+    results = {"adaseg_update_ref_us": us}
 
     # --- full optimizer step: fused Pallas backend vs reference tree ops ---
-    bench_step_backends()
+    results.update(bench_step_backends())
 
     # --- attention: dense vs sliding window FLOPs --------------------------
     b, h, s, d, w = 1, 4, 1024, 64, 128
@@ -114,6 +117,8 @@ def run() -> None:
     emit("kernel[attention_dense,s=1024]", us_d, f"flops={flops_dense:.3e}")
     emit("kernel[attention_window128,s=1024]", us_l,
          f"flops={flops_win:.3e};flop_ratio={flops_win/flops_dense:.3f}")
+    results["attention_dense_us"] = us_d
+    results["attention_window_us"] = us_l
 
     # --- SSD: chunked (MXU formulation) vs sequential scan ------------------
     bsz, l, heads, p, nst = 2, 512, 4, 32, 64
@@ -130,10 +135,13 @@ def run() -> None:
     emit("kernel[ssd_sequential,s=512]", us_seq, "impl=lax.scan")
     emit("kernel[ssd_chunked,s=512]", us_chk,
          f"impl=SSD;speedup_vs_scan={us_seq/us_chk:.2f}x")
+    results["ssd_sequential_us"] = us_seq
+    results["ssd_chunked_us"] = us_chk
+    return results
 
 
 def main() -> None:
-    run()
+    persist_trajectory("kernels", run())
 
 
 if __name__ == "__main__":

@@ -17,9 +17,18 @@ Four sweeps through ``repro.ps.PSEngine``:
   the analytic HBM-pass counts of the ``kernels.sync_compress`` traffic
   model reported alongside (CPU interpret wall-times are not
   hardware-indicative; the pass counts are the meaningful number).
+* **span overhead** — the same engine run with the ``repro.obs`` span/metric
+  layer enabled vs disabled (``SpanTracer(enabled=False)`` is the
+  timing-only shell), per-round chunks so every round records spans: the
+  enabled/disabled wall ratio is the instrumentation tax, which the PR's
+  acceptance bar caps at 5%.
+
+Headline numbers persist to ``BENCH_ps.json`` via
+:func:`benchmarks.common.persist_trajectory` for the CI regression gate.
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
@@ -28,6 +37,7 @@ import numpy as np
 from repro.core import AdaSEGConfig, projections
 from repro.core.types import MinimaxProblem
 from repro.kernels.sync_compress.ops import codec_passes
+from repro.obs import MetricsRegistry, SpanTracer
 from repro.problems import make_bilinear_game
 from repro.ps import (
     BernoulliFaults,
@@ -40,7 +50,7 @@ from repro.ps import (
     heterogeneous_bilinear,
 )
 
-from .common import emit
+from .common import emit, persist_trajectory
 
 M, K, R = 4, 20, 40
 N = 10
@@ -184,12 +194,64 @@ def run_codec_backends(seed: int = 0, n: int = 1 << 20, workers: int = 4,
     return out
 
 
+def run_span_overhead(seed: int = 0, rounds: int = 60, reps: int = 5) -> dict:
+    """Wall cost of the ``repro.obs`` span/metric layer on the main sweep's
+    engine, worst-cased with one-round chunks (spans recorded every round).
+
+    Order-balanced interleaved medians of (tracing-enabled,
+    tracing-disabled) runs — the order flips every rep so cache/thermal
+    drift doesn't bias one side; each engine warms its compiled one-round
+    chunk before timing. Reported as the enabled/disabled ratio − 1 — the
+    acceptance bar is < 5%.
+    """
+    game = make_bilinear_game(jax.random.PRNGKey(seed), n=N, sigma=0.1)
+
+    def _timed_run(enabled: bool) -> float:
+        cfg = PSConfig(
+            adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=K),
+            num_workers=M, rounds=rounds,
+        )
+        engine = PSEngine(
+            game.problem, cfg, rng=jax.random.PRNGKey(seed + 1),
+            tracer=SpanTracer(enabled=enabled),
+            metrics=MetricsRegistry(enabled=enabled),
+        )
+        engine.step_round()                       # compile one-round chunk
+        t0 = time.perf_counter()
+        engine.run(checkpoint_every=1)            # per-round chunks
+        dt = time.perf_counter() - t0
+        if enabled:
+            # warmup round + the timed ones each recorded a round span
+            assert len(engine.tracer.by_cat("round")) == rounds
+        return dt / (rounds - 1)
+
+    _timed_run(True)      # discard: first run pays one-time global jit
+    on, off = [], []      # compiles (z_bar etc.), not instrumentation
+    for i in range(reps):
+        for enabled in ((True, False) if i % 2 == 0 else (False, True)):
+            (on if enabled else off).append(_timed_run(enabled))
+    per_on, per_off = statistics.median(on), statistics.median(off)
+    overhead = per_on / per_off - 1.0
+    emit(f"ps[span_overhead,rounds={rounds}]", per_on * 1e6,
+         f"disabled_us={per_off * 1e6:.1f};overhead={overhead * 100:.2f}%;"
+         f"within_5pct={overhead < 0.05}")
+    return {"per_round_us_traced": per_on * 1e6,
+            "per_round_us_untraced": per_off * 1e6,
+            "overhead_frac": overhead}
+
+
 def main() -> None:
     out = run()
     emit("ps[check]", 0.0,
          f"q8_within_2x={out['q8'] < 2.0 * out['identity']};"
          f"dropout_degrades_gracefully={out['dropout-0.3'] < 4.0 * out['dropout-0.0']}")
-    run_codec_backends()
+    codec = run_codec_backends()
+    overhead = run_span_overhead()
+    persist_trajectory("ps", {
+        "residuals": out,
+        "codec_per_round_us": {f"{c}/{b}": v for (c, b), v in codec.items()},
+        "span_overhead": overhead,
+    })
 
 
 if __name__ == "__main__":

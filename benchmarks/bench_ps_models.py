@@ -9,15 +9,14 @@ and q8+error-feedback uplinks) and records throughput and traffic:
 * ``bytes_up_per_round``  — Σ survivor compressed uplink bytes
 * ``bytes_down_per_round``— Σ survivor dense broadcast bytes
 
-Unlike the CSV-only benches, the sweep is *persisted*: every run appends an
-entry to ``BENCH_ps_models.json`` at the repo root (committed), so perf is
-comparable across PRs. Wall-clock numbers are CPU-host indicative only; the
-bytes columns are exact.
+The sweep is *persisted*: every run appends an entry to
+``BENCH_ps_models.json`` at the repo root via
+:func:`benchmarks.common.persist_trajectory` (committed), so perf is
+comparable across PRs and gated by ``benchmarks/regress.py``. Wall-clock
+numbers are CPU-host indicative only; the bytes columns are exact.
 """
 from __future__ import annotations
 
-import json
-import pathlib
 import time
 
 import jax
@@ -27,11 +26,7 @@ from repro.models import ModelWorker, make_lm_problem, tiny_lm_config
 from repro.problems import make_wgan_problem
 from repro.ps import PSConfig, PSEngine, StochasticQuantizeCompressor
 
-from .common import emit
-
-RESULTS_PATH = pathlib.Path(__file__).resolve().parent.parent / (
-    "BENCH_ps_models.json"
-)
+from .common import emit, persist_trajectory
 
 M, ROUNDS, WARMUP = 2, 4, 1
 
@@ -81,19 +76,7 @@ def _measure(name, problem, acfg, local_k, arch, compressor):
 
 def main() -> None:
     results = {name: _measure(name, *rest) for name, *rest in _sweep_cases()}
-    history = []
-    if RESULTS_PATH.exists():
-        history = json.loads(RESULTS_PATH.read_text()).get("entries", [])
-    history.append({
-        "run": len(history),
-        "backend": jax.default_backend(),
-        "results": results,
-    })
-    RESULTS_PATH.write_text(
-        json.dumps({"bench": "ps_models", "entries": history}, indent=1)
-        + "\n"
-    )
-    emit("ps_models:persist", 0.0, f"entries={len(history)}")
+    persist_trajectory("ps_models", results)
 
 
 if __name__ == "__main__":

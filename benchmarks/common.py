@@ -1,9 +1,22 @@
-"""Shared benchmark utilities: timing, CSV emission, metric evaluation."""
+"""Shared benchmark utilities: timing, CSV emission, trajectory persistence.
+
+Every bench harness persists its headline numbers through
+:func:`persist_trajectory` into one ``BENCH_<name>.json`` per bench at the
+repo root (committed), so perf is comparable across PRs: each run *appends*
+an entry carrying its run index, the JAX backend it measured on, and the
+results dict — the trajectory ``benchmarks/regress.py`` gates on in CI.
+``set_json_dir`` (or ``run.py --json-dir``) redirects the files, e.g. to a
+scratch dir for the injected-regression test.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
+
+_JSON_DIR = pathlib.Path(__file__).resolve().parent.parent
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):
@@ -23,3 +36,45 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """CSV row: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def set_json_dir(path) -> None:
+    """Redirect where :func:`persist_trajectory` reads/writes BENCH files."""
+    global _JSON_DIR
+    _JSON_DIR = pathlib.Path(path)
+
+
+def trajectory_path(bench: str) -> pathlib.Path:
+    return _JSON_DIR / f"BENCH_{bench}.json"
+
+
+def load_trajectory(bench: str) -> dict:
+    """The persisted ``{"bench": ..., "entries": [...]}`` payload
+    (an empty trajectory if the file doesn't exist yet)."""
+    path = trajectory_path(bench)
+    if not path.exists():
+        return {"bench": bench, "entries": []}
+    return json.loads(path.read_text())
+
+
+def persist_trajectory(bench: str, results: dict) -> dict:
+    """Append one run's ``results`` to ``BENCH_<bench>.json``.
+
+    The entry records the run index and ``jax.default_backend()`` so the
+    regression gate only ever compares runs measured on the same backend.
+    Returns the appended entry.
+    """
+    payload = load_trajectory(bench)
+    entry = {
+        "run": len(payload["entries"]),
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    payload["entries"].append(entry)
+    trajectory_path(bench).write_text(
+        json.dumps({"bench": bench, "entries": payload["entries"]}, indent=1)
+        + "\n"
+    )
+    emit(f"{bench}:persist", 0.0,
+         f"entries={len(payload['entries'])};file={trajectory_path(bench).name}")
+    return entry

@@ -1,0 +1,159 @@
+"""CI perf-regression gate over the persisted ``BENCH_*.json`` trajectories.
+
+Every bench harness appends one entry per run (via
+:func:`benchmarks.common.persist_trajectory`), so the repo carries each
+benchmark's full perf trajectory. This gate diffs the **newest** entry of
+each trajectory against its **baseline** — the most recent earlier entry
+measured on the same JAX backend (wall numbers from different backends are
+not comparable) — with per-metric-class tolerances:
+
+* **exact** (``bytes*``, ``workers``, ``local_k``, ``max_staleness``) —
+  deterministic outputs of seeded runs: *any* drift is a hard failure, it
+  means the numerics changed, not the machine.
+* **lower-better** (``*_us``, ``*residual*``, ``*time*``, ``idle_frac``)
+  — regression ratio = (new − base) / base.
+* **higher-better** (``*per_sec*``, ``*speedup*``) — ratio mirrored.
+
+Timing ratios inside ``(warn, fail)`` print a report-only warning; above
+``fail`` they fail the gate. The defaults are generous because CI hosts are
+noisy CPUs — the gate is for catching step-function regressions (an
+accidental recompile per round, a dropped fusion), not ±10% jitter.
+
+Exit status: nonzero iff any hard failure. ``--json-dir`` points at a
+different trajectory directory (used by the injected-regression test).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import load_trajectory, trajectory_path
+
+EXACT = ("bytes", "workers", "local_k", "max_staleness")
+HIGHER_BETTER = ("per_sec", "speedup")
+# (span overhead_frac is deliberately ungated: it hovers near zero, so the
+# ratio of two noisy near-zero numbers is meaningless — the <5% bar lives
+# in bench_ps itself; its absolute per-round _us times ARE gated.)
+LOWER_BETTER = ("_us", "us_", "residual", "time", "idle_frac", "wall")
+
+#: Benches whose trajectories the gate knows how to read.
+BENCHES = ("ps", "ps_models", "async", "kernels")
+
+
+def _classify(name: str) -> str | None:
+    if any(t in name for t in EXACT):
+        return "exact"
+    if any(t in name for t in HIGHER_BETTER):
+        return "higher"
+    if any(t in name for t in LOWER_BETTER):
+        return "lower"
+    return None  # informational — not gated
+
+
+def _flatten(results: dict, prefix: str = "") -> dict:
+    out = {}
+    for k, v in results.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, prefix=f"{key}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def _baseline(entries: list[dict], new: dict) -> dict | None:
+    """Most recent entry before ``new`` on the same backend."""
+    for e in reversed(entries[:-1]):
+        if e.get("backend") == new.get("backend"):
+            return e
+    return None
+
+
+def compare(base: dict, new: dict, *, warn: float, fail: float
+            ) -> list[dict]:
+    """Per-metric verdicts between two flattened results dicts."""
+    rows = []
+    b, n = _flatten(base), _flatten(new)
+    for name in sorted(set(b) & set(n)):
+        cls = _classify(name)
+        if cls is None:
+            continue
+        bv, nv = b[name], n[name]
+        if cls == "exact":
+            drift = abs(nv - bv) / max(abs(bv), 1e-30)
+            status = "fail" if drift > 1e-9 else "ok"
+            rows.append({"metric": name, "class": cls, "base": bv,
+                         "new": nv, "ratio": drift, "status": status})
+            continue
+        denom = max(abs(bv), 1e-30)
+        ratio = (nv - bv) / denom if cls == "lower" else (bv - nv) / denom
+        status = ("fail" if ratio > fail
+                  else "warn" if ratio > warn else "ok")
+        rows.append({"metric": name, "class": cls, "base": bv, "new": nv,
+                     "ratio": ratio, "status": status})
+    return rows
+
+
+def gate(benches=BENCHES, *, warn: float = 0.25, fail: float = 0.60,
+         verbose: bool = True) -> int:
+    """Run the gate over every trajectory; returns the exit status."""
+    failures = warnings = compared = 0
+    for bench in benches:
+        payload = load_trajectory(bench)
+        entries = payload.get("entries", [])
+        if len(entries) < 2:
+            if verbose:
+                print(f"regress[{bench}]: skipped "
+                      f"({len(entries)} entries in "
+                      f"{trajectory_path(bench).name})")
+            continue
+        new = entries[-1]
+        base = _baseline(entries, new)
+        if base is None:
+            if verbose:
+                print(f"regress[{bench}]: skipped (no prior entry on "
+                      f"backend={new.get('backend')})")
+            continue
+        compared += 1
+        for row in compare(base["results"], new["results"],
+                           warn=warn, fail=fail):
+            if row["status"] == "fail":
+                failures += 1
+            elif row["status"] == "warn":
+                warnings += 1
+            if verbose and row["status"] != "ok":
+                print(f"regress[{bench}] {row['status'].upper()} "
+                      f"{row['metric']} ({row['class']}): "
+                      f"{row['base']:.4g} -> {row['new']:.4g} "
+                      f"(ratio {row['ratio']:+.2%})")
+        if verbose:
+            print(f"regress[{bench}]: run {base['run']} -> {new['run']} "
+                  f"on {new.get('backend')}")
+    if verbose:
+        print(f"regress: {compared} trajectories compared, "
+              f"{warnings} warnings, {failures} failures")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json-dir", default=None,
+                    help="directory holding the BENCH_*.json trajectories "
+                         "(default: repo root)")
+    ap.add_argument("--warn", type=float, default=0.25,
+                    help="report-only threshold on the regression ratio")
+    ap.add_argument("--fail", type=float, default=0.60,
+                    help="hard-failure threshold on the regression ratio")
+    ap.add_argument("--bench", action="append", default=None,
+                    help="gate only this bench (repeatable)")
+    args = ap.parse_args(argv)
+    if args.json_dir is not None:
+        from .common import set_json_dir
+
+        set_json_dir(args.json_dir)
+    return gate(tuple(args.bench) if args.bench else BENCHES,
+                warn=args.warn, fail=args.fail)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,12 +23,34 @@ therefore a separate entry point).
 """
 from __future__ import annotations
 
+import argparse
+import pathlib
 import sys
 import time
 import traceback
 
+#: bench modules with their own entry point (env-gated), exempt from the
+#: registry-completeness check below
+EXEMPT = {"bench_roofline"}
 
-def main() -> int:
+
+def _check_registry(benches) -> None:
+    """Every ``bench_*.py`` in this directory must be wired into the
+    orchestrator (or listed in EXEMPT) — a new bench that silently never
+    runs is how perf trajectories go stale."""
+    here = pathlib.Path(__file__).resolve().parent
+    on_disk = {p.stem for p in here.glob("bench_*.py")}
+    wired = {fn.__module__.rsplit(".", 1)[-1] for _, fn in benches}
+    missing = on_disk - wired - EXEMPT
+    if missing:
+        raise RuntimeError(
+            f"bench modules not in the run.py registry: {sorted(missing)} "
+            "(add them to `benches` or to EXEMPT)"
+        )
+
+
+def registry() -> list:
+    """The orchestrator's bench list: (label, entry point) per module."""
     from . import (
         bench_alpha_theory,
         bench_async,
@@ -43,7 +65,7 @@ def main() -> int:
         bench_wgan,
     )
 
-    benches = [
+    return [
         ("fig3:bilinear_ksweep", bench_bilinear_ksweep.main),
         ("fig4:bilinear_optimizers", bench_bilinear_optimizers.main),
         ("fig4x:fig4_scenarios", bench_fig4_scenarios.main),
@@ -56,6 +78,21 @@ def main() -> int:
         ("extra:robust_logistic", bench_robust.main),
         ("extra:kernels", bench_kernels.main),
     ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="run every benchmark harness")
+    ap.add_argument("--json-dir", default=None,
+                    help="redirect BENCH_*.json trajectory persistence "
+                         "(default: repo root)")
+    args = ap.parse_args(argv)
+    if args.json_dir is not None:
+        from .common import set_json_dir
+
+        set_json_dir(args.json_dir)
+
+    benches = registry()
+    _check_registry(benches)
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches:

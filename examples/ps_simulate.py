@@ -17,6 +17,15 @@ The final act drops the barrier entirely: the *event-driven* engine
 (``AsyncPSEngine``) runs the same algorithm over simulated time with one
 Markov-slow worker and a τ=2 staleness bound, crashes mid-event-queue, and
 resumes bit-exactly — admissions, simulated clock and all.
+
+Both engines record ``repro.obs`` spans as they go; the script exports two
+Perfetto/Chrome timelines next to itself (open them at
+https://ui.perfetto.dev):
+
+* ``perfetto_sync_wall.json``  — the synchronous run on the host wall clock;
+* ``perfetto_async_sim.json``  — the τ=2 straggler run on the *simulated*
+  clock, one swimlane per worker: uplink flights, staleness holds,
+  broadcasts, local compute and the slow worker's long phases.
 """
 import dataclasses
 import math
@@ -27,6 +36,7 @@ import jax
 import numpy as np
 
 from repro.core import AdaSEGConfig
+from repro.obs import save_trace_events, validate_trace_events
 from repro.optim import MinimaxWorker, segda
 from repro.problems import make_bilinear_game
 from repro.ps import (
@@ -98,6 +108,12 @@ def main():
           f"residual {res_zoo:.4f} vs LocalAdaSEG {res:.4f} "
           f"at {baseline.trace.steps_per_sec:,.0f} steps/sec")
 
+    # Wall-clock timeline of the resumed synchronous run.
+    out = os.path.join(os.path.dirname(__file__), "perfetto_sync_wall.json")
+    validate_trace_events(save_trace_events(out, engine.tracer, clock="wall"))
+    print(f"wall-clock Perfetto trace -> {out} "
+          f"({len(engine.tracer.spans)} spans; open at ui.perfetto.dev)")
+
     async_demo(game, problem)
 
 
@@ -122,6 +138,17 @@ def async_demo(game, problem):
 
     reference = fresh()
     z_ref = reference.run()               # the uninterrupted timeline
+
+    # Simulated-clock timeline of the τ=2 straggler run: per-worker
+    # swimlanes of uplink / held / broadcast / compute, server admissions
+    # on their own lane.
+    out = os.path.join(os.path.dirname(__file__), "perfetto_async_sim.json")
+    validate_trace_events(
+        save_trace_events(out, reference.tracer, clock="sim")
+    )
+    print(f"\nsim-clock Perfetto trace -> {out} "
+          f"({len(reference.tracer.spans)} spans on "
+          f"{len(reference.tracer.tracks())} tracks)")
 
     with tempfile.TemporaryDirectory() as tmp:
         ckpt = os.path.join(tmp, "async_engine.msgpack")

@@ -31,16 +31,20 @@ def _unpack_leaf(d) -> np.ndarray:
     return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
 
 
-def save_pytree(path: str, tree) -> None:
+def save_pytree(path: str, tree) -> int:
+    """Write ``tree`` atomically; returns bytes written (for telemetry —
+    the engines attach it to their ``checkpoint`` spans)."""
     leaves, treedef = jax.tree.flatten(tree)
     payload = {
         "treedef": str(treedef),
         "leaves": [_pack_leaf(x) for x in leaves],
     }
+    blob = msgpack.packb(payload)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload))
+        f.write(blob)
     os.replace(tmp, path)
+    return len(blob)
 
 
 def load_pytree(path: str, like):

@@ -147,24 +147,28 @@ def run_local_adaseg_sharded(
             rngs_round, sync_rng = inputs
             # Line 5–8: weighted sync at the top of each round, as one
             # all-reduce of (possibly compressed) w·z̃ across worker axes.
-            inv_eta = 1.0 / eta_of(cfg, st.sum_sq)
-            if wants_rng:
-                st = st._replace(z_tilde=sync(st.z_tilde, inv_eta, sync_rng))
-            else:
-                st = st._replace(z_tilde=sync(st.z_tilde, inv_eta))
+            with jax.named_scope("sync"):
+                inv_eta = 1.0 / eta_of(cfg, st.sum_sq)
+                if wants_rng:
+                    st = st._replace(
+                        z_tilde=sync(st.z_tilde, inv_eta, sync_rng)
+                    )
+                else:
+                    st = st._replace(z_tilde=sync(st.z_tilde, inv_eta))
 
-            if has_ls:
-                def body(s, inp):
-                    r, i = inp
-                    return local_step(problem, cfg, s, r,
-                                      enabled=i < k_m, backend=backend)
+            with jax.named_scope("local-compute"):
+                if has_ls:
+                    def body(s, inp):
+                        r, i = inp
+                        return local_step(problem, cfg, s, r,
+                                          enabled=i < k_m, backend=backend)
 
-                return lax.scan(body, st, (rngs_round, jnp.arange(k)))
+                    return lax.scan(body, st, (rngs_round, jnp.arange(k)))
 
-            def body(s, r):
-                return local_step(problem, cfg, s, r, backend=backend)
+                def body(s, r):
+                    return local_step(problem, cfg, s, r, backend=backend)
 
-            return lax.scan(body, st, rngs_round)
+                return lax.scan(body, st, rngs_round)
 
         state, hist = lax.scan(round_fn, state, (s_rngs[0], sy_rngs))
 

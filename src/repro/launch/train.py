@@ -317,6 +317,8 @@ def make_ps_engine(
     staleness_discount: float = 1.0,
     eval_fn="loss",
     trace_meta: dict | None = None,
+    tracer=None,
+    metrics=None,
 ):
     """A TrainPlan as a Parameter-Server engine — the one training stack.
 
@@ -371,9 +373,11 @@ def make_ps_engine(
             staleness_discount=staleness_discount,
         )
         return AsyncPSEngine(problem, config, rng, eval_fn=eval_fn,
-                             trace_meta=trace_meta)
+                             trace_meta=trace_meta, tracer=tracer,
+                             metrics=metrics)
     config = PSConfig(**common)
     waxes = plan.worker_axes(mesh) if mesh is not None else ("data",)
     return PSEngine(problem, config, rng, mesh=mesh,
                     worker_axes=waxes, eval_fn=eval_fn,
-                    trace_meta=trace_meta)
+                    trace_meta=trace_meta, tracer=tracer,
+                    metrics=metrics)

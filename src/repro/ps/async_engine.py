@@ -88,6 +88,7 @@ from .engine import (
     _resolve_worker,
     make_serial_chunk,
 )
+from ..obs import MetricsRegistry, SpanTracer, modeled_sync_cost
 from .faults import NoFaults
 from .latency import ConstantLatency, LatencyModel
 from .trace import RoundRecord, TraceRecorder
@@ -157,9 +158,16 @@ class AsyncPSEngine:
         *,
         eval_fn: Callable[[PyTree], jax.Array] | None = None,
         trace_meta: dict | None = None,
+        tracer: SpanTracer | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         if config.staleness_bound < 0:
             raise ValueError("staleness_bound must be >= 0")
+        # Dual-clock observability: spans carry the simulated clock (exact —
+        # the event machine knows each phase's interval) next to host wall
+        # time; recording is host-side only, so it cannot perturb numerics.
+        self.tracer = tracer if tracer is not None else SpanTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.problem = problem
         self.config = config
         self.worker = _resolve_worker(config)
@@ -227,6 +235,7 @@ class AsyncPSEngine:
         # barrier: the server waits for the whole fleet's payloads, not
         # merely for the fleet to have started the round.
         self._progress = np.full((m,), -1, np.int32)
+        self._arrive_t = np.zeros((m,), np.float64)   # span layer only
         self._busy_s = np.zeros((m,), np.float64)
         self._steps_cum = np.zeros((m,), np.int32)
         # Steps already attributed to a trace record: each admission records
@@ -444,6 +453,10 @@ class AsyncPSEngine:
             self._ev_busy[m] = reboot
             self._ev_is_phase[m] = False
             heapq.heappush(self._heap, (self._ev_time[m], _EV_START, m))
+            self.tracer.add_span(
+                f"reboot r{r}", cat="reboot", track=f"worker/{m}",
+                sim_t0=t, sim_t1=t + reboot, round=int(r), worker=int(m),
+            )
 
     def _run_phase(self, m: int, r: int) -> None:
         """Execute worker ``m``'s round-``r`` local steps on the stacked
@@ -453,9 +466,13 @@ class AsyncPSEngine:
             return
         ks_vec = np.zeros((self.config.num_workers,), np.int32)
         ks_vec[m] = k
-        self._state = self._phase_fn(
-            self._state, self._step_rngs(r), jnp.asarray(ks_vec)
-        )
+        # wall-clock view: the host executes phases back-to-back; the sim
+        # interval of this phase was spanned at admission time
+        with self.tracer.span(f"phase r{r} w{m}", cat="local-compute",
+                              track=f"worker/{m}", round=int(r), steps=k):
+            self._state = self._phase_fn(
+                self._state, self._step_rngs(r), jnp.asarray(ks_vec)
+            )
         self._steps_cum[m] += k
 
     def _handle_start(self, m: int, t: float) -> None:
@@ -487,79 +504,145 @@ class AsyncPSEngine:
         mask[adm] = True
         rounds_of = {m: int(self._ev_round[m]) for m in adm}
 
-        if self.compressor.is_identity:
-            self._srv_payload, srv_sw = self._store_fn(
-                self._state, self._srv_payload, jnp.asarray(self._srv_sw),
-                jnp.asarray(mask),
-            )
-        else:
-            c_rngs = np.asarray(self._c_rngs(0)).copy()
+        with self.tracer.span(
+            f"admission {self.n_admissions}", cat="admission",
+            sim_t0=t, sim_t1=t, admitted=len(adm),
+        ) as adm_sp:
+            with self.tracer.span("uplink-decode", cat="uplink-encode",
+                                  sim_t0=t, sim_t1=t):
+                if self.compressor.is_identity:
+                    self._srv_payload, srv_sw = self._store_fn(
+                        self._state, self._srv_payload,
+                        jnp.asarray(self._srv_sw), jnp.asarray(mask),
+                    )
+                else:
+                    c_rngs = np.asarray(self._c_rngs(0)).copy()
+                    for m in adm:
+                        c_rngs[m] = np.asarray(self._c_rngs(rounds_of[m]))[m]
+                    self._srv_payload, srv_sw, self._ef = self._store_c_fn(
+                        self._state, self._srv_payload,
+                        jnp.asarray(self._srv_sw),
+                        self._ef, jnp.asarray(mask), jnp.asarray(c_rngs),
+                    )
+            self._srv_sw = np.asarray(srv_sw)
             for m in adm:
-                c_rngs[m] = np.asarray(self._c_rngs(rounds_of[m]))[m]
-            self._srv_payload, srv_sw, self._ef = self._store_c_fn(
-                self._state, self._srv_payload, jnp.asarray(self._srv_sw),
-                self._ef, jnp.asarray(mask), jnp.asarray(c_rngs),
+                self._srv_version[m] = rounds_of[m]
+            self._heard[adm] = True
+
+            # Staleness of every stored entry, rounds behind the freshest.
+            vmax = int(self._srv_version[self._heard].max())
+            stale = np.where(self._heard, vmax - self._srv_version, 0)
+
+            r0 = rounds_of[adm[0]]
+            lockstep = (
+                self._lockstep_chunk is not None
+                and len(adm) == m_tot
+                and all(r == r0 for r in rounds_of.values())
             )
-        self._srv_sw = np.asarray(srv_sw)
+            # Record before mutating state: η and residual at admission time
+            # (post-previous-phase, pre-merge — merge_synced never touches
+            # the output iterate, so the residual is the same either side).
+            self._record_admission(
+                adm, t, np.asarray(self._veta(self._state)), stale
+            )
+            rec = self.trace.rounds[-1]
+
+            with self.tracer.span("server-merge", cat="server-merge",
+                                  sim_t0=t, sim_t1=t,
+                                  lockstep=lockstep) as merge_sp:
+                if lockstep:
+                    # The whole fleet is here, in the same round, with zero
+                    # staleness: run the synchronous engine's compiled round
+                    # body (sync + all local steps fused), making PSEngine a
+                    # bit-exact special case by shared code. Phases are
+                    # thereby pre-executed; the START events below only
+                    # carry the timing.
+                    counts = (
+                        self._steps_cum + self._ks[r0] * self._alive[r0]
+                    ).astype(np.float32)
+                    self._state, self._ef, _, _ = self._lockstep_chunk(
+                        self._state, self._ef,
+                        self._round_rngs[r0:r0 + 1],
+                        jnp.asarray(self._ks[r0:r0 + 1]),
+                        jnp.asarray(self._alive[r0:r0 + 1]),
+                        jnp.asarray(counts[None]),
+                    )
+                else:
+                    discount = np.asarray(
+                        (1.0 + stale) ** (-self.gamma), np.float32
+                    )
+                    self._state = self._admit_fn(
+                        self._state, self._srv_payload,
+                        jnp.asarray(self._srv_sw),
+                        jnp.asarray(discount), jnp.asarray(self._heard),
+                        jnp.asarray(mask),
+                    )
+                jax.block_until_ready(jax.tree.leaves(self._state)[0])
+
+            for m in adm:
+                r = rounds_of[m]
+                compute = float(self._ks[r, m]) * self._lat.step_s[r, m]
+                down = float(self._lat.down_s[r, m])
+                self._status[m] = _COMPUTE
+                self._ev_round[m] = r + 1
+                self._ev_time[m] = t + down + compute
+                self._ev_busy[m] = compute
+                self._ev_is_phase[m] = not lockstep
+                if lockstep:
+                    self._steps_cum[m] += int(self._ks[r, m])
+                heapq.heappush(self._heap, (self._ev_time[m], _EV_START, m))
+                # Per-worker simulated-clock story of this admission: the
+                # staleness hold, the broadcast flight, and the local phase
+                # the worker now starts (its sim interval is known exactly).
+                track = f"worker/{m}"
+                if t > self._arrive_t[m]:
+                    self.tracer.add_span(
+                        f"held r{r}", cat="held", track=track,
+                        sim_t0=float(self._arrive_t[m]), sim_t1=t,
+                        round=r, worker=int(m),
+                    )
+                if down > 0.0:
+                    self.tracer.add_span(
+                        f"broadcast r{r}", cat="broadcast", track=track,
+                        sim_t0=t, sim_t1=t + down, round=r, worker=int(m),
+                        bytes=float(self._dense_bytes),
+                    )
+                if compute > 0.0:
+                    self.tracer.add_span(
+                        f"local-compute r{r}", cat="local-compute",
+                        track=track, sim_t0=t + down,
+                        sim_t1=t + down + compute, round=r, worker=int(m),
+                        steps=int(self._ks[r, m]),
+                        staleness=int(stale[m]),
+                    )
+            self.n_admissions += 1
+
+        # Wall timing stays in the span layer (the recorded trace must be
+        # deterministic for crash-resume bit-exactness); the full record
+        # rides on the admission span so TraceRecorder.from_spans can
+        # rebuild it with wall_time_s derived from the span.
+        adm_sp.attrs.update(vars(rec))
+        self.metrics.inc("bytes_up", rec.bytes_up, engine="async")
+        self.metrics.inc("bytes_down", rec.bytes_down, engine="async")
+        self.metrics.inc("admissions", 1, engine="async")
+        self.metrics.set_gauge("eta_spread", rec.eta_spread, engine="async")
+        if rec.idle_frac is not None:
+            self.metrics.set_gauge("idle_frac", rec.idle_frac,
+                                   engine="async", t_sim=t)
         for m in adm:
-            self._srv_version[m] = rounds_of[m]
-        self._heard[adm] = True
-
-        # Staleness of every stored entry, in rounds behind the freshest.
-        vmax = int(self._srv_version[self._heard].max())
-        stale = np.where(self._heard, vmax - self._srv_version, 0)
-
-        r0 = rounds_of[adm[0]]
-        lockstep = (
-            self._lockstep_chunk is not None
-            and len(adm) == m_tot
-            and all(r == r0 for r in rounds_of.values())
+            self.metrics.observe("staleness", float(stale[m]),
+                                 engine="async", t_sim=t)
+        cost = modeled_sync_cost(
+            getattr(self.compressor, "codec_spec", None),
+            self._dense_bytes, workers=len(adm),
+            backend=self.codec_backend,
         )
-        # Record before mutating state: η and residual at admission time
-        # (post-previous-phase, pre-merge — merge_synced never touches the
-        # output iterate, so the residual is the same on either side).
-        self._record_admission(
-            adm, t, np.asarray(self._veta(self._state)), stale
+        self.metrics.observe(
+            "admission_wall_s", adm_sp.wall_dur, engine="async",
+            codec=self.compressor.name, backend=self.codec_backend,
+            modeled_hbm_passes=cost["hbm_passes"],
+            modeled_hbm_s=cost["hbm_s"], t_sim=t,
         )
-
-        if lockstep:
-            # The whole fleet is here, in the same round, with zero
-            # staleness: run the synchronous engine's compiled round body
-            # (sync + all local steps fused), making PSEngine a bit-exact
-            # special case by shared code. Phases are thereby pre-executed;
-            # the START events below only carry the timing.
-            counts = (
-                self._steps_cum + self._ks[r0] * self._alive[r0]
-            ).astype(np.float32)
-            self._state, self._ef, _, _ = self._lockstep_chunk(
-                self._state, self._ef,
-                self._round_rngs[r0:r0 + 1],
-                jnp.asarray(self._ks[r0:r0 + 1]),
-                jnp.asarray(self._alive[r0:r0 + 1]),
-                jnp.asarray(counts[None]),
-            )
-        else:
-            discount = np.asarray(
-                (1.0 + stale) ** (-self.gamma), np.float32
-            )
-            self._state = self._admit_fn(
-                self._state, self._srv_payload, jnp.asarray(self._srv_sw),
-                jnp.asarray(discount), jnp.asarray(self._heard),
-                jnp.asarray(mask),
-            )
-
-        for m in adm:
-            r = rounds_of[m]
-            compute = float(self._ks[r, m]) * self._lat.step_s[r, m]
-            self._status[m] = _COMPUTE
-            self._ev_round[m] = r + 1
-            self._ev_time[m] = t + self._lat.down_s[r, m] + compute
-            self._ev_busy[m] = compute
-            self._ev_is_phase[m] = not lockstep
-            if lockstep:
-                self._steps_cum[m] += int(self._ks[r, m])
-            heapq.heappush(self._heap, (self._ev_time[m], _EV_START, m))
-        self.n_admissions += 1
 
     def _idle_frac(self, t: float) -> float | None:
         if t <= 0.0:
@@ -615,7 +698,7 @@ class AsyncPSEngine:
             stale = np.zeros_like(self._srv_version)
         final_steps = self._steps_cum - self._steps_recorded
         self._steps_recorded += final_steps
-        self.trace.record(RoundRecord(
+        rec = RoundRecord(
             round=self.n_admissions,
             local_steps=final_steps.tolist(),
             alive=[False] * self.config.num_workers,
@@ -629,7 +712,11 @@ class AsyncPSEngine:
             staleness=[int(s) if h else None
                        for s, h in zip(stale, self._heard)],
             idle_frac=self._idle_frac(t),
-        ))
+        )
+        self.trace.record(rec)
+        self.tracer.add_span(
+            "final", cat="admission", sim_t0=t, sim_t1=t, **vars(rec)
+        )
         self._final_recorded = True
 
     # ------------------------------------------------------------------
@@ -665,6 +752,17 @@ class AsyncPSEngine:
         that many server admissions (lifetime total); ``checkpoint_every``
         saves ``checkpoint_path`` every that-many admissions."""
         last_ckpt = self.n_admissions
+        t_start = self.now
+        with self.tracer.span("run", cat="run", engine="async",
+                              tau=self.tau) as run_sp:
+            self._drive(until_time, until_admissions,
+                        checkpoint_path, checkpoint_every, last_ckpt)
+            run_sp.sim_t0 = t_start
+            run_sp.sim_t1 = self.sim_time
+        return self.z_bar()
+
+    def _drive(self, until_time, until_admissions, checkpoint_path,
+               checkpoint_every, last_ckpt) -> None:
         while self._heap:
             if until_time is not None and self._heap[0][0] > until_time:
                 break
@@ -679,6 +777,14 @@ class AsyncPSEngine:
                 else:
                     self._status[m] = _HELD
                     self._progress[m] = int(self._ev_round[m])
+                    self._arrive_t[m] = t
+                    r = int(self._ev_round[m])
+                    self.tracer.add_span(
+                        f"uplink r{r}", cat="uplink", track=f"worker/{m}",
+                        sim_t0=t - float(self._lat.up_s[r, m]), sim_t1=t,
+                        round=r, worker=int(m),
+                        bytes=float(self._msg_bytes),
+                    )
             self.now = t
             adm = self._admissible()
             if adm:
@@ -696,7 +802,6 @@ class AsyncPSEngine:
             self._record_final()
         if checkpoint_path is not None:
             self.save(checkpoint_path)
-        return self.z_bar()
 
     @property
     def state(self) -> PyTree:
@@ -745,7 +850,12 @@ class AsyncPSEngine:
         }
 
     def save(self, path: str) -> None:
-        save_pytree(path, self._ckpt_tree())
+        with self.tracer.span("checkpoint-save", cat="checkpoint",
+                              sim_t0=self.now, sim_t1=self.now,
+                              path=path) as sp:
+            sp.attrs["bytes"] = save_pytree(path, self._ckpt_tree())
+            self.metrics.inc("checkpoint_bytes", sp.attrs["bytes"],
+                             engine="async")
 
     def restore(self, path: str) -> "AsyncPSEngine":
         """Resume mid-event-queue: the heap is rebuilt from the per-worker
@@ -805,6 +915,9 @@ class AsyncPSEngine:
         self.trace.rounds = [
             rec for rec in self.trace.rounds if rec.round < self.n_admissions
         ]
+        # held workers' uplink-arrival instants aren't checkpointed (span
+        # layer only); clamp to "arrived by now" so held spans stay sane
+        self._arrive_t[:] = np.minimum(self._arrive_t, self.now)
         return self
 
 

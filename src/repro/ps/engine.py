@@ -41,7 +41,6 @@ different seed *or a different optimizer* are rejected.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
@@ -54,6 +53,7 @@ from ..core.adaseg import AdaSEGConfig, weighted_worker_average
 from ..core.tree import tree_add, tree_sub, tree_where, tree_zeros_like
 from ..core.types import MinimaxProblem
 from ..core.worker import AdaSEGWorker, LocalWorker
+from ..obs import MetricsRegistry, SpanTracer, modeled_sync_cost
 from .compress import (
     IdentityCompressor,
     SyncCompressor,
@@ -163,6 +163,7 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
             sync_merge_stacked,
         )
 
+        @jax.named_scope("sync")
         def sync_stacked_fused(state, ef, alive_r, c_rng):
             sw = jax.vmap(worker.sync_weight)(state)          # (M,)
             if alive_r is None:
@@ -196,6 +197,7 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
 
         return sync_stacked_fused
 
+    @jax.named_scope("sync")
     def sync_stacked(state, ef, alive_r, c_rng):
         sw = jax.vmap(worker.sync_weight)(state)              # (M,)
         if alive_r is None:
@@ -308,24 +310,26 @@ def make_serial_chunk(
             st = vstep(st, rngs, enabled)
             return st, None
 
-        state, _ = lax.scan(
-            body, state, (step_rngs, jnp.arange(k_pad))
-        )
+        with jax.named_scope("local-compute"):
+            state, _ = lax.scan(
+                body, state, (step_rngs, jnp.arange(k_pad))
+            )
 
         eta_end = veta(state)                             # (M,)
-        if eval_fn is None:
-            res = jnp.float32(jnp.nan)
-        else:
-            counts = jnp.where(
-                jnp.sum(counts_r) > 0.0, counts_r,
-                jnp.ones_like(counts_r),
-            )
-            res = jnp.asarray(
-                eval_fn(weighted_worker_average(
-                    worker.output(state), counts
-                )),
-                dtype=jnp.float32,
-            )
+        with jax.named_scope("eval"):
+            if eval_fn is None:
+                res = jnp.float32(jnp.nan)
+            else:
+                counts = jnp.where(
+                    jnp.sum(counts_r) > 0.0, counts_r,
+                    jnp.ones_like(counts_r),
+                )
+                res = jnp.asarray(
+                    eval_fn(weighted_worker_average(
+                        worker.output(state), counts
+                    )),
+                    dtype=jnp.float32,
+                )
         return (state, ef), (eta_end, res)
 
     def chunk(state, ef, round_rngs, ks, alive, counts_cum):
@@ -370,9 +374,16 @@ class PSEngine:
         worker_axes: tuple[str, ...] = ("data",),
         eval_fn: Callable[[PyTree], jax.Array] | None = None,
         trace_meta: dict | None = None,
+        tracer: SpanTracer | None = None,
+        metrics: MetricsRegistry | None = None,
     ):
         self.problem = problem
         self.config = config
+        # Observability is host-side only (spans/metrics never enter a jit),
+        # so the default-enabled tracer cannot perturb the numerics — the
+        # inertness pins in tests/test_obs.py run with it on.
+        self.tracer = tracer if tracer is not None else SpanTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.worker = _resolve_worker(config)
         self.schedule = _resolve_schedule(config)
         self.compressor = config.compressor or IdentityCompressor()
@@ -611,23 +622,30 @@ class PSEngine:
 
     def _run_chunk(self, r0: int, r1: int) -> None:
         sl = slice(r0, r1)
-        t0 = time.perf_counter()
-        state, ef, etas, ress = self._chunk_fn(
-            self._state, self._ef,
-            self._round_rngs[sl],
-            jnp.asarray(self._ks[sl]),
-            jnp.asarray(self._alive[sl]),
-            jnp.asarray(self._counts_cum[sl]),
-        )
-        jax.block_until_ready(state)
-        wall = time.perf_counter() - t0
+        with self.tracer.span(f"chunk [{r0},{r1})", cat="chunk",
+                              rounds=r1 - r0) as chunk_sp:
+            state, ef, etas, ress = self._chunk_fn(
+                self._state, self._ef,
+                self._round_rngs[sl],
+                jnp.asarray(self._ks[sl]),
+                jnp.asarray(self._alive[sl]),
+                jnp.asarray(self._counts_cum[sl]),
+            )
+            jax.block_until_ready(state)
         self._state, self._ef = state, ef
         self.round = r1
 
         # Attribute the chunk's wall-clock uniformly across its rounds
         # (dispatch is per-chunk; finer attribution would need per-round
-        # host sync, which is exactly what the chunked scan avoids).
+        # host sync, which is exactly what the chunked scan avoids). The
+        # timing source is the span layer, not an ad-hoc timer.
+        wall = chunk_sp.wall_dur
         per_round_wall = wall / max(r1 - r0, 1)
+        cost = modeled_sync_cost(
+            getattr(self.compressor, "codec_spec", None),
+            self._dense_bytes, workers=self.config.num_workers,
+            backend=self.codec_backend,
+        )
         etas = np.asarray(etas)
         ress = np.asarray(ress)
         for i, r in enumerate(range(r0, r1)):
@@ -639,8 +657,9 @@ class PSEngine:
                 res = None
             if (res is None and self.eval_fn is not None and r == r1 - 1):
                 # sharded path: residual at the chunk boundary, host-side
-                res = float(self.eval_fn(self.z_bar()))
-            self.trace.record(RoundRecord(
+                with self.tracer.span(f"eval r{r}", cat="eval", round=r):
+                    res = float(self.eval_fn(self.z_bar()))
+            rec = RoundRecord(
                 round=r,
                 local_steps=self._eff_steps[r].tolist(),
                 alive=alive.tolist(),
@@ -653,7 +672,32 @@ class PSEngine:
                 wall_time_s=per_round_wall,
                 steps_per_sec=eff / per_round_wall if per_round_wall > 0
                 else None,
-            ))
+            )
+            self.trace.record(rec)
+            # Round span: the chunk's wall uniformly attributed, carrying
+            # the full RoundRecord so TraceRecorder.from_spans can rebuild
+            # the telemetry from the span layer alone. (vars(), not
+            # dataclasses.asdict: the record is flat and asdict's deep copy
+            # costs ~25µs — real money in the per-round hot path.)
+            if self.tracer.enabled:
+                self.tracer.add_span(
+                    f"round {r}", cat="round", parent=chunk_sp.id,
+                    wall_t0=chunk_sp.wall_t0 + i * per_round_wall,
+                    wall_t1=chunk_sp.wall_t0 + (i + 1) * per_round_wall,
+                    **vars(rec),
+                )
+            self.metrics.inc("bytes_up", rec.bytes_up, engine="sync")
+            self.metrics.inc("bytes_down", rec.bytes_down, engine="sync")
+            self.metrics.inc("local_steps", eff, engine="sync")
+            self.metrics.set_gauge("eta_spread", rec.eta_spread,
+                                   engine="sync")
+            # measured round wall next to the traffic model's prediction
+            self.metrics.observe(
+                "round_wall_s", per_round_wall, engine="sync",
+                codec=self.compressor.name, backend=self.codec_backend,
+                modeled_hbm_passes=cost["hbm_passes"],
+                modeled_hbm_s=cost["hbm_s"],
+            )
 
     def run(
         self,
@@ -667,12 +711,14 @@ class PSEngine:
         round scan and writes ``checkpoint_path`` at each boundary."""
         target = self.config.rounds if until_round is None else int(until_round)
         target = min(target, self.config.rounds)
-        while self.round < target:
-            r1 = (min(target, self.round + checkpoint_every)
-                  if checkpoint_every else target)
-            self._run_chunk(self.round, r1)
-            if checkpoint_path is not None:
-                self.save(checkpoint_path)
+        with self.tracer.span(f"run [{self.round},{target})", cat="run",
+                              engine="sync"):
+            while self.round < target:
+                r1 = (min(target, self.round + checkpoint_every)
+                      if checkpoint_every else target)
+                self._run_chunk(self.round, r1)
+                if checkpoint_path is not None:
+                    self.save(checkpoint_path)
         return self.z_bar()
 
     def step_round(self) -> None:
@@ -711,7 +757,11 @@ class PSEngine:
 
     def save(self, path: str) -> None:
         """Serialize engine state via checkpoint.serialize (msgpack)."""
-        save_pytree(path, self._ckpt_tree())
+        with self.tracer.span(f"checkpoint r{self.round}", cat="checkpoint",
+                              round=self.round) as sp:
+            sp.attrs["bytes"] = save_pytree(path, self._ckpt_tree())
+            self.metrics.inc("checkpoint_bytes", sp.attrs["bytes"],
+                             engine="sync")
 
     def restore(self, path: str) -> "PSEngine":
         """Resume mid-stream: policies and rng streams are re-derived from

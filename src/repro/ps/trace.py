@@ -29,6 +29,13 @@ import dataclasses
 import json
 from typing import Any
 
+#: Trace JSON schema version, continuing the field-shaped revision history
+#: of ``docs/formats.md`` (1–4 were implicit). 5 is the first revision to
+#: stamp the file with an explicit ``version`` key; loaders treat a missing
+#: key as 1, the oldest vintage — safe, since every post-v1 field is
+#: optional anyway.
+TRACE_VERSION = 5
+
 
 @dataclasses.dataclass
 class RoundRecord:
@@ -90,9 +97,54 @@ class TraceRecorder:
     def __init__(self, meta: dict | None = None):
         self.meta: dict = dict(meta or {})
         self.rounds: list[RoundRecord] = []
+        self.version: int = TRACE_VERSION
 
     def record(self, rec: RoundRecord) -> None:
         self.rounds.append(rec)
+
+    @classmethod
+    def from_spans(cls, tracer_or_spans, meta: dict | None = None
+                   ) -> "TraceRecorder":
+        """Rebuild a recorder from the span layer (:mod:`repro.obs.spans`).
+
+        The engines attach every :class:`RoundRecord`'s fields to the span
+        that timed it (``cat="round"`` in the sync engine, ``"admission"``
+        in the event-driven one), so the span trace alone reconstructs the
+        trace JSON — with ``wall_time_s``/``steps_per_sec`` *derived from
+        the span's wall clock* when the record itself left them unset (the
+        async engine's records stay deterministic for crash-resume
+        bit-exactness; the nondeterministic wall timing lives here).
+
+        Examples
+        --------
+        >>> from repro.obs.spans import SpanTracer
+        >>> tr = SpanTracer()
+        >>> _ = tr.add_span("round 0", cat="round", wall_t0=1.0, wall_t1=1.5,
+        ...                 round=0, local_steps=[2, 2], alive=[True, True],
+        ...                 bytes_up=8.0, bytes_down=8.0, eta_min=1.0,
+        ...                 eta_max=1.0, eta_mean=1.0)
+        >>> rec = TraceRecorder.from_spans(tr)
+        >>> rec.rounds[0].wall_time_s, rec.rounds[0].steps_per_sec
+        (0.5, 8.0)
+        """
+        spans = getattr(tracer_or_spans, "spans", tracer_or_spans)
+        known = {f.name for f in dataclasses.fields(RoundRecord)}
+        rec = cls(meta=meta)
+        for sp in spans:
+            if sp.cat not in ("round", "admission"):
+                continue
+            fields = {k: v for k, v in sp.attrs.items() if k in known}
+            if "round" not in fields or "local_steps" not in fields:
+                continue  # a span without a riding record (e.g. bare timing)
+            r = RoundRecord(**fields)
+            if r.wall_time_s is None and sp.wall_dur is not None:
+                r.wall_time_s = sp.wall_dur
+                steps = sum(r.local_steps)
+                if r.wall_time_s > 0.0 and steps:
+                    r.steps_per_sec = steps / r.wall_time_s
+            rec.record(r)
+        rec.rounds.sort(key=lambda r: r.round)
+        return rec
 
     # -- aggregates ---------------------------------------------------------
 
@@ -181,6 +233,7 @@ class TraceRecorder:
             return v
 
         payload = {
+            "version": self.version,
             "meta": self.meta,
             "summary": self.summary(),
             "rounds": [
@@ -205,6 +258,8 @@ class TraceRecorder:
             payload = json.load(f)
         known = {f.name for f in dataclasses.fields(RoundRecord)}
         rec = cls(meta=payload.get("meta"))
+        # pre-versioning traces carry no "version" key: that's version 1
+        rec.version = int(payload.get("version", 1))
         for r in payload.get("rounds", []):
             rec.record(RoundRecord(**{k: v for k, v in r.items()
                                       if k in known}))

@@ -1,0 +1,139 @@
+"""Benchmark trajectory persistence and the CI perf-regression gate:
+append-only BENCH_*.json entries, baseline selection by backend, the
+warn/fail tolerance bands, the exact-metric class, and — the acceptance
+pin — a nonzero exit on an injected synthetic regression."""
+import json
+
+import pytest
+
+from benchmarks import common, regress
+from benchmarks.run import EXEMPT, _check_registry, registry
+
+
+@pytest.fixture()
+def json_dir(tmp_path):
+    """Point the persistence layer at a scratch dir, restore after."""
+    old = common._JSON_DIR
+    common.set_json_dir(tmp_path)
+    yield tmp_path
+    common.set_json_dir(old)
+
+
+def _entry(results, run=0, backend="cpu"):
+    return {"run": run, "backend": backend, "results": results}
+
+
+def _write(json_dir, bench, entries):
+    (json_dir / f"BENCH_{bench}.json").write_text(
+        json.dumps({"bench": bench, "entries": entries}))
+
+
+BASE = {"step_us": 100.0, "steps_per_sec": 1000.0,
+        "bytes_up_per_round": 80.0, "residual": 0.2}
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+
+def test_persist_trajectory_appends(json_dir, capsys):
+    common.persist_trajectory("demo", {"x_us": 1.0})
+    common.persist_trajectory("demo", {"x_us": 2.0})
+    payload = json.loads((json_dir / "BENCH_demo.json").read_text())
+    assert payload["bench"] == "demo"
+    assert [e["run"] for e in payload["entries"]] == [0, 1]
+    assert all("backend" in e for e in payload["entries"])
+    assert payload == common.load_trajectory("demo")
+    assert "demo:persist" in capsys.readouterr().out
+
+
+def test_load_missing_trajectory_is_empty(json_dir):
+    assert common.load_trajectory("nope") == {"bench": "nope", "entries": []}
+
+
+# ---------------------------------------------------------------------------
+# Gate verdicts
+# ---------------------------------------------------------------------------
+
+def test_gate_ok_on_flat_trajectory(json_dir):
+    _write(json_dir, "ps", [_entry(BASE, 0), _entry(BASE, 1)])
+    assert regress.gate(("ps",), verbose=False) == 0
+
+
+def test_gate_fails_on_injected_regression(json_dir):
+    slow = dict(BASE, step_us=1000.0)          # 10× synthetic regression
+    _write(json_dir, "ps", [_entry(BASE, 0), _entry(slow, 1)])
+    assert regress.gate(("ps",), verbose=False) == 1
+    # and through the CLI, which is what the CI job invokes
+    assert regress.main(["--json-dir", str(json_dir), "--bench", "ps"]) == 1
+
+
+def test_gate_fails_on_throughput_drop(json_dir):
+    slow = dict(BASE, steps_per_sec=100.0)     # higher-better metric
+    _write(json_dir, "ps", [_entry(BASE, 0), _entry(slow, 1)])
+    assert regress.gate(("ps",), verbose=False) == 1
+
+
+def test_gate_warns_inside_band(json_dir, capsys):
+    meh = dict(BASE, step_us=140.0)            # +40%: warn < 0.6 fail
+    _write(json_dir, "ps", [_entry(BASE, 0), _entry(meh, 1)])
+    assert regress.gate(("ps",), verbose=True) == 0
+    assert "WARN" in capsys.readouterr().out
+
+
+def test_exact_metric_drift_is_a_hard_failure(json_dir):
+    drift = dict(BASE, bytes_up_per_round=81.0)  # deterministic quantity
+    _write(json_dir, "ps", [_entry(BASE, 0), _entry(drift, 1)])
+    assert regress.gate(("ps",), verbose=False) == 1
+
+
+def test_gate_skips_cross_backend_and_short_trajectories(json_dir):
+    _write(json_dir, "ps", [_entry(BASE, 0, backend="tpu"),
+                            _entry(dict(BASE, step_us=1e6), 1)])
+    assert regress.gate(("ps",), verbose=False) == 0   # no cpu baseline
+    _write(json_dir, "kernels", [_entry(BASE, 0)])
+    assert regress.gate(("kernels",), verbose=False) == 0  # single entry
+
+
+def test_nested_results_are_flattened(json_dir):
+    base = {"codec_per_round_us": {"q8/reference": 100.0}}
+    bad = {"codec_per_round_us": {"q8/reference": 1000.0}}
+    _write(json_dir, "ps", [_entry(base, 0), _entry(bad, 1)])
+    assert regress.gate(("ps",), verbose=False) == 1
+
+
+def test_improvements_pass(json_dir):
+    fast = dict(BASE, step_us=10.0, steps_per_sec=9000.0)
+    _write(json_dir, "ps", [_entry(BASE, 0), _entry(fast, 1)])
+    assert regress.gate(("ps",), verbose=False) == 0
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_bench_module():
+    """Every benchmarks/bench_*.py is wired into run.py (or EXEMPT)."""
+    _check_registry(registry())                # raises on a missing module
+
+
+def test_registry_check_catches_missing():
+    benches = [b for b in registry() if "kernels" not in b[0]]
+    with pytest.raises(RuntimeError, match="bench_kernels"):
+        _check_registry(benches)
+    assert "bench_roofline" in EXEMPT          # env-gated separate entry
+
+
+def test_committed_trajectories_are_gateable():
+    """The repo ships ≥3 trajectories the CI perf-gate runs against, each
+    loadable and carrying ≥1 complete entry."""
+    found = 0
+    for bench in regress.BENCHES:
+        payload = common.load_trajectory(bench)
+        if not payload["entries"]:
+            continue
+        found += 1
+        for e in payload["entries"]:
+            assert {"run", "backend", "results"} <= e.keys()
+            assert regress._flatten(e["results"])   # gateable scalars
+    assert found >= 3
