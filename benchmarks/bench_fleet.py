@@ -1,0 +1,223 @@
+"""Fleet scale: compiled round scans + sampled-client rounds at 10k workers.
+
+The paper's headline claim is near-linear speedup in the worker count M, so
+the runtime must make fleet size a *compiled-code axis*, not a Python-loop
+axis. This bench pins the three mechanisms that get it there:
+
+* **seed path vs cached scan** (M=512, full participation): the pre-PR
+  engine path — every engine constructed its own ``jax.jit`` of the round
+  chunk (no process-wide cache, no donation), so every benchmark loop,
+  checkpoint drill or lockstep async engine re-paid the full trace+compile
+  — against the cached/donated chunk, both end-to-end (construct + run).
+  Acceptance bar: the cached path clears **≥10× rounds/sec**. A second
+  loop-vs-scan pair isolates the per-round dispatch amortization (driving
+  ``step_round()`` R times vs one scan chunk) with compilation excluded
+  from both sides.
+* **fleet sweep** M ∈ {8, 64, 512, 4096, 10000}: sampled-client rounds
+  (``ClientSampler``, ``sample=min(M, 64)``) materialize only the drawn
+  lanes per round, so rounds/sec stays interactive while the fleet store
+  grows to 10k workers — including a full M=10k sampled sweep.
+* **async batched admission** (M=512 fleet, 64 sampled): the event-driven
+  engine's vectorized event machine (arrays-as-queue, batched phase
+  execution) driving a sampled fleet on the simulated clock.
+
+Headline numbers persist via ``persist_trajectory`` into
+``BENCH_fleet.json`` so ``benchmarks/regress.py`` gates rounds/sec from the
+first CI run. Metric naming: ``*_per_sec`` / ``*speedup`` are the gate's
+higher-better classes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import AdaSEGConfig
+from repro.problems import make_bilinear_game
+from repro.ps import (
+    AsyncPSConfig,
+    AsyncPSEngine,
+    ClientSampler,
+    ConstantLatency,
+    PSConfig,
+    PSEngine,
+)
+from repro.obs import SpanTracer
+
+from .common import emit, persist_trajectory
+
+N_DIM = 8
+D = float(np.sqrt(2 * N_DIM))
+K = 4
+ROUNDS = 24          # headline-comparison rounds (a representative short run)
+SWEEP_ROUNDS = 12    # fleet-width sweep rounds
+FLEETS = (8, 64, 512, 4096, 10_000)
+SAMPLE_CAP = 64      # sampled lanes per round in the sweep
+
+
+def _cfg(m: int, rounds: int, sampler: ClientSampler | None = None
+         ) -> PSConfig:
+    return PSConfig(
+        adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=K),
+        num_workers=m, rounds=rounds, sampler=sampler,
+    )
+
+
+def _engine(problem, cfg, *, trace: bool = False) -> PSEngine:
+    # span recording off: this bench measures the engine hot path, and the
+    # per-round span/metric bookkeeping is what the scan path amortizes
+    return PSEngine(problem, cfg, rng=jax.random.PRNGKey(1),
+                    tracer=SpanTracer(enabled=trace))
+
+
+def seed_vs_cached(problem, m: int = 512) -> dict:
+    """End-to-end (construct + run) at fleet M: the pre-PR engine path —
+    a fresh per-engine ``jax.jit`` of the round chunk, so every engine
+    construction re-pays the full trace+compile, with no buffer donation —
+    against the process-wide cached/donated chunk."""
+    from repro.ps.engine import make_serial_chunk
+
+    cfg = _cfg(m, ROUNDS)
+
+    def fresh(pre_pr: bool) -> PSEngine:
+        eng = _engine(problem, cfg)
+        if pre_pr:
+            # exactly what PSEngine.__init__ did before the chunk cache:
+            # jit the builder output per engine (fresh callable ⇒ fresh
+            # trace+compile), no donate_argnums
+            eng._chunk_fn = jax.jit(make_serial_chunk(
+                problem, eng.worker, eng.compressor, m, eng._k_pad,
+                None, True, "reference"))
+        return eng
+
+    fresh(False).run()            # warm the cached path once
+
+    t0 = time.perf_counter()
+    fresh(True).run()
+    seed_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    eng = fresh(False)
+    eng.run()
+    cached_s = time.perf_counter() - t0
+
+    steps = int(sum(sum(r.local_steps) for r in eng.trace.rounds))
+    out = {
+        "seed_rounds_per_sec": ROUNDS / seed_s,
+        "cached_rounds_per_sec": ROUNDS / cached_s,
+        "cached_steps_per_sec": steps / cached_s,
+        "speedup_vs_seed": seed_s / cached_s,
+    }
+    emit(f"fleet[seed-vs-cached m={m}]", cached_s * 1e6 / ROUNDS,
+         f"seed_rounds_per_sec={out['seed_rounds_per_sec']:.1f};"
+         f"cached_rounds_per_sec={out['cached_rounds_per_sec']:.1f};"
+         f"speedup_vs_seed={out['speedup_vs_seed']:.1f}x")
+    return out
+
+
+def loop_vs_scan(problem, m: int = 512) -> dict:
+    """Per-round driving vs one donated scan chunk, compilation excluded
+    from both sides: isolates what the chunked scan amortizes (dispatch,
+    per-round host sync, telemetry transfer)."""
+    cfg = _cfg(m, ROUNDS)
+    # warm the process-wide compiled-chunk cache for both scan lengths
+    # (full-run chunk and the loop's length-1 chunk), so the timed engines
+    # measure execution, not compilation
+    warm = _engine(problem, cfg)
+    warm.run()
+    warm = _engine(problem, cfg)
+    warm.step_round()
+
+    eng = _engine(problem, cfg)
+    t0 = time.perf_counter()
+    for _ in range(ROUNDS):
+        eng.step_round()          # host sync + telemetry every round
+    loop_s = time.perf_counter() - t0
+
+    eng = _engine(problem, cfg)
+    t0 = time.perf_counter()
+    eng.run()                     # one chunk: donated buffers, bulk telemetry
+    scan_s = time.perf_counter() - t0
+
+    out = {
+        "loop_rounds_per_sec": ROUNDS / loop_s,
+        "scan_rounds_per_sec": ROUNDS / scan_s,
+        "dispatch_amortization": loop_s / scan_s,
+    }
+    emit(f"fleet[loop-vs-scan m={m}]", scan_s * 1e6 / ROUNDS,
+         f"loop_rounds_per_sec={out['loop_rounds_per_sec']:.1f};"
+         f"scan_rounds_per_sec={out['scan_rounds_per_sec']:.1f};"
+         f"dispatch_amortization={out['dispatch_amortization']:.1f}x")
+    return out
+
+
+def sampled_sweep(problem) -> dict:
+    """Rounds/sec across fleet widths with sampled-client rounds: each round
+    gathers ``sample`` lanes from the (fleet, ...) store, so the compiled
+    round cost is set by the sample, not the fleet."""
+    out = {}
+    for fleet in FLEETS:
+        sample = min(fleet, SAMPLE_CAP)
+        cfg = _cfg(fleet, SWEEP_ROUNDS,
+                   sampler=ClientSampler(sample=sample, seed=3))
+        _engine(problem, cfg).run()           # compile warmup (cached chunk)
+        eng = _engine(problem, cfg)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        steps = int(sum(sum(r.local_steps) for r in eng.trace.rounds))
+        out[f"fleet{fleet}"] = {
+            "rounds_per_sec": SWEEP_ROUNDS / dt,
+            "steps_per_sec": steps / dt,
+        }
+        emit(f"fleet[sweep fleet={fleet} sample={sample}]",
+             dt * 1e6 / SWEEP_ROUNDS,
+             f"rounds_per_sec={SWEEP_ROUNDS / dt:.1f};"
+             f"steps_per_sec={steps / dt:.0f}")
+    return out
+
+
+def async_sampled(problem, fleet: int = 512, sample: int = 64) -> dict:
+    """Event-driven engine on a sampled fleet: the vectorized event machine
+    admits arrivals in batches on the simulated clock."""
+    cfg = AsyncPSConfig(
+        adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=K),
+        num_workers=fleet, rounds=SWEEP_ROUNDS,
+        sampler=ClientSampler(sample=sample, seed=3),
+        latency=ConstantLatency(step_s=1.0, up_s=0.2, down_s=0.1),
+    )
+    eng = AsyncPSEngine(problem, cfg, rng=jax.random.PRNGKey(1),
+                        tracer=SpanTracer(enabled=False))
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    n_adm = eng.n_admissions
+    out = {
+        "admissions_per_sec": n_adm / dt,
+        "sim_time_s": eng.sim_time,
+    }
+    emit(f"fleet[async fleet={fleet} sample={sample}]", dt * 1e6,
+         f"admissions={n_adm};admissions_per_sec={n_adm / dt:.1f};"
+         f"sim_time_s={eng.sim_time:.1f}")
+    return out
+
+
+def main() -> None:
+    game = make_bilinear_game(jax.random.PRNGKey(0), n=N_DIM, sigma=0.1)
+    p = game.problem
+    results = {
+        "m512": seed_vs_cached(p),
+        "m512_dispatch": loop_vs_scan(p),
+        "sweep": sampled_sweep(p),
+        "async512": async_sampled(p),
+    }
+    ok = results["m512"]["speedup_vs_seed"] >= 10.0
+    emit("fleet[check]", 0.0,
+         f"speedup_vs_seed_ge_10x={ok};"
+         f"speedup={results['m512']['speedup_vs_seed']:.1f}x")
+    persist_trajectory("fleet", results)
+
+
+if __name__ == "__main__":
+    main()

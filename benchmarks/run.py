@@ -16,6 +16,12 @@ docstring for the figure it reproduces):
     figE2  bench_wgan                 WGAN-GP (homog + Dirichlet hetero)
     extra  bench_robust               robust logistic (beyond paper)
     extra  bench_kernels              kernel micro-benches + traffic models
+    extra  bench_fleet                fleet scale: scan-vs-loop speedup,
+                                      sampled-client sweep to 10k workers
+
+``--only``/``--skip`` filter the sweep by substring of the bench label
+(e.g. ``--skip fleet`` keeps the heavy fleet bench out of a quick local
+run); the registry-completeness check always sees the full list.
 
 The roofline/dry-run table is produced by ``repro.launch.dryrun`` +
 ``benchmarks/bench_roofline.py`` (it needs the 512-device env var and is
@@ -57,6 +63,7 @@ def registry() -> list:
         bench_bilinear_ksweep,
         bench_bilinear_optimizers,
         bench_fig4_scenarios,
+        bench_fleet,
         bench_kernels,
         bench_ps,
         bench_ps_models,
@@ -77,7 +84,27 @@ def registry() -> list:
         ("thm1-2-5:alpha_regimes", bench_alpha_theory.main),
         ("extra:robust_logistic", bench_robust.main),
         ("extra:kernels", bench_kernels.main),
+        ("extra:fleet", bench_fleet.main),
     ]
+
+
+def select(benches, only=None, skip=None) -> list:
+    """Filter (label, fn) rows by substring: keep labels matching any
+    ``--only`` term (all, when none given), then drop any matching a
+    ``--skip`` term. Raises on a filter that matches nothing — a typo'd
+    filter silently running everything (or nothing) is worse than an
+    error."""
+    out = benches
+    if only:
+        out = [row for row in out if any(t in row[0] for t in only)]
+        if not out:
+            raise SystemExit(f"--only {only} matches no bench label")
+    if skip:
+        dropped = [row for row in out if any(t in row[0] for t in skip)]
+        if not dropped:
+            raise SystemExit(f"--skip {skip} matches no bench label")
+        out = [row for row in out if row not in dropped]
+    return out
 
 
 def main(argv=None) -> int:
@@ -85,6 +112,12 @@ def main(argv=None) -> int:
     ap.add_argument("--json-dir", default=None,
                     help="redirect BENCH_*.json trajectory persistence "
                          "(default: repo root)")
+    ap.add_argument("--only", action="append", default=None,
+                    help="run only benches whose label contains this "
+                         "substring (repeatable)")
+    ap.add_argument("--skip", action="append", default=None,
+                    help="skip benches whose label contains this substring "
+                         "(repeatable), e.g. --skip fleet")
     args = ap.parse_args(argv)
     if args.json_dir is not None:
         from .common import set_json_dir
@@ -92,7 +125,10 @@ def main(argv=None) -> int:
         set_json_dir(args.json_dir)
 
     benches = registry()
+    # completeness check runs on the UNFILTERED registry: filtering is for
+    # this invocation, wiring is forever
     _check_registry(benches)
+    benches = select(benches, only=args.only, skip=args.skip)
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches:

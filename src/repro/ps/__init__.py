@@ -79,9 +79,21 @@ with any τ, or any latency with τ=0), ``AsyncPSEngine`` executes
 reproduced **bit-exactly** by shared code (identity compression/no faults;
 pinned by ``tests/test_ps_async.py``). Schedules, compressors (per-payload
 uplinks with error feedback), fault policies and checkpoint/resume all
-compose: a killed simulation restores mid-event-queue bit-exactly, with the
-event heap rebuilt from per-worker state and every policy re-derived from
+compose: a killed simulation restores mid-event-queue bit-exactly — the
+per-worker event machine (status/time/round arrays) *is* the queue, so
+loading the arrays restores it wholesale, with every policy re-derived from
 its seed.
+
+Third axis — **fleet scale** (partial client participation):
+``ClientSampler`` (``ps.sampler``) makes ``num_workers`` a *fleet* size N
+while each round materializes only ``sample`` = M drawn workers: the sync
+engine gathers the M sampled lanes out of the compact (N, …) fleet store,
+runs the round chunk at width M, and scatters the updated lanes back;
+the async engine skips un-drawn rounds at zero simulated cost. Draws are
+seed-deterministic (uniform or weighted, without replacement), checkpoints
+carry a sampler fingerprint so resumes can't silently replay a different
+participation table, and ``sampler=None`` preserves the full-participation
+trajectories bit-exactly (``benchmarks/bench_fleet.py`` sweeps the axis).
 """
 from ..core.worker import AdaSEGWorker, LocalWorker
 from ..models.worker import ModelWorker
@@ -97,6 +109,7 @@ from .compress import (
 )
 from .engine import PSConfig, PSEngine
 from .faults import BernoulliFaults, FaultPolicy, NoFaults, OutageFaults
+from .sampler import ClientSampler
 from .latency import (
     ConstantLatency,
     LatencyModel,
@@ -125,6 +138,7 @@ __all__ = [
     "AsyncPSConfig",
     "AsyncPSEngine",
     "BernoulliFaults",
+    "ClientSampler",
     "ConstantLatency",
     "ElasticSchedule",
     "FaultPolicy",

@@ -67,7 +67,6 @@ consistent either way.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
 from typing import Any, Callable
 
@@ -86,6 +85,7 @@ from .engine import (
     _per_worker,
     _resolve_schedule,
     _resolve_worker,
+    cached_chunk,
     make_serial_chunk,
 )
 from ..obs import MetricsRegistry, SpanTracer, modeled_sync_cost
@@ -96,14 +96,24 @@ from .trace import RoundRecord, TraceRecorder
 PyTree = Any
 
 # Worker event-machine status codes (serialized in checkpoints).
-_UPLINK = 0    # uplink in flight — an ARRIVE event is scheduled
-_COMPUTE = 1   # computing/rebooting — a START event is scheduled
+#
+# The per-worker arrays (_status, _ev_time, _ev_round, ...) ARE the event
+# queue: each worker has at most one pending event, so "pop the next
+# event" is an argmin over _ev_time of the workers in an event-bearing
+# status — a vectorized numpy scan rather than a heap, which lets the
+# driver process *every* event at one timestamp in a single sweep.
+#
+# Deterministic tie-break (pinned by tests/test_ps_async.py): at one
+# simulated instant, START events (compute/reboot completions) are
+# processed before ARRIVE events (uplink landings) — a START may spawn a
+# same-instant ARRIVE under zero network delay, never the reverse — and
+# the admission batch formed afterwards is ordered by ascending worker
+# id. The order is a pure function of the deterministic latency/schedule
+# tables, so it is identical across reruns and across checkpoint/resume.
+_UPLINK = 0    # uplink in flight — an ARRIVE event is pending
+_COMPUTE = 1   # computing/rebooting — a START event is pending
 _HELD = 2      # arrived, held at the server by the staleness bound
 _DONE = 3      # all rounds finished
-
-# Heap event kinds (tie-break: STARTs before ARRIVEs at equal times).
-_EV_START = 0
-_EV_ARRIVE = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +210,16 @@ class AsyncPSEngine:
                 f"engine needs ({r}, {m})"
             )
         self._lat = lat
+        # Sampled-client rounds: a (R, M) participation mask — rounds a
+        # worker isn't drawn for are skipped at zero simulated cost (no
+        # send, no receive, no steps, no reboot), with progress advanced
+        # through the skip so the staleness gate never waits on a round
+        # that will never uplink.
+        self.sampler = config.sampler
+        self._sampled = (
+            None if self.sampler is None
+            else self.sampler.participation(m, r)
+        )
 
         # RNG derivation: identical to PSEngine so the lockstep trajectory
         # (and each worker family's historical stream) is reproduced.
@@ -267,11 +287,14 @@ class AsyncPSEngine:
             "backend": getattr(self.worker, "backend", None),
             "codec_backend": self.codec_backend,
             "execution": "event-driven",
+            **({"sampler": self.sampler.name,
+                "sample": self.sampler.sample}
+               if self.sampler is not None else {}),
             **(trace_meta or {}),
         })
 
-        self._heap: list[tuple[float, int, int]] = []
         self._rng_cache: dict[int, jax.Array] = {}
+        self._np_rng_cache: dict[int, np.ndarray] = {}
         self._c_rng_cache: dict[int, jax.Array] = {}
         # Whenever an admission batch is the whole fleet in the same round
         # (lockstep), the engine runs the synchronous engine's own round
@@ -282,7 +305,9 @@ class AsyncPSEngine:
         # the masked sync branch, and async compression has per-payload
         # semantics — see _admit_batch).
         self._lockstep_ok = (
-            isinstance(self.faults, NoFaults) and self.compressor.is_identity
+            isinstance(self.faults, NoFaults)
+            and self.compressor.is_identity
+            and self.sampler is None
         )
         self._build_jit()
         for w in range(m):
@@ -396,12 +421,21 @@ class AsyncPSEngine:
         self._store_c_fn = jax.jit(store_compressed)
         self._admit_fn = jax.jit(admit)
         self._veta = jax.jit(jax.vmap(worker.eta))
+        # Shared with PSEngine through the process-wide chunk cache: a
+        # lockstep-eligible async engine literally reuses the synchronous
+        # engine's *compiled* round chunk (same cache key ⇒ same jitted
+        # callable), donation included.
         self._lockstep_chunk = (
-            jax.jit(make_serial_chunk(
-                self.problem, worker, comp, self.config.num_workers,
-                k_pad, self.eval_fn, no_faults=True,
-                codec_backend=self.codec_backend,
-            ))
+            cached_chunk(
+                ("serial", self.problem, worker, comp,
+                 self.config.num_workers, k_pad, self.eval_fn, True,
+                 self.codec_backend),
+                lambda: make_serial_chunk(
+                    self.problem, worker, comp, self.config.num_workers,
+                    k_pad, self.eval_fn, no_faults=True,
+                    codec_backend=self.codec_backend,
+                ),
+            )
             if self._lockstep_ok else None
         )
 
@@ -415,6 +449,13 @@ class AsyncPSEngine:
                 self._round_rngs[r], self._k_pad * m
             ).reshape(self._k_pad, m, 2)
         return self._rng_cache[r]
+
+    def _np_step_rngs(self, r: int) -> np.ndarray:
+        """Host copy of :meth:`_step_rngs` — mixed-round phase batches
+        splice per-worker key columns out of these."""
+        if r not in self._np_rng_cache:
+            self._np_rng_cache[r] = np.asarray(self._step_rngs(r))
+        return self._np_rng_cache[r]
 
     def _c_rngs(self, r: int) -> jax.Array:
         if r not in self._c_rng_cache:
@@ -430,7 +471,15 @@ class AsyncPSEngine:
 
     def _enter_round(self, m: int, r: int, t: float) -> None:
         """Worker ``m`` enters round ``r`` at simulated time ``t``: send the
-        uplink (alive), burn a reboot (dead), or finish (r == rounds)."""
+        uplink (alive), burn a reboot (dead), skip (not sampled), or finish
+        (r == rounds)."""
+        if self._sampled is not None:
+            # rounds the worker isn't drawn for cost nothing; progress
+            # advances through the skip as if the round had trivially
+            # arrived, so the staleness gate never deadlocks on it
+            while r < self.config.rounds and not self._sampled[r, m]:
+                self._progress[m] = max(int(self._progress[m]), r)
+                r += 1
         if r >= self.config.rounds:
             self._status[m] = _DONE
             self._done_at[m] = t
@@ -440,7 +489,6 @@ class AsyncPSEngine:
             self._status[m] = _UPLINK
             self._ev_round[m] = r
             self._ev_time[m] = t + self._lat.up_s[r, m]
-            heapq.heappush(self._heap, (self._ev_time[m], _EV_ARRIVE, m))
         else:
             # Dead round: no send, no receive, no steps — the worker keeps
             # its stale anchor and the server keeps its stale entry (the
@@ -452,37 +500,81 @@ class AsyncPSEngine:
             self._ev_time[m] = t + reboot
             self._ev_busy[m] = reboot
             self._ev_is_phase[m] = False
-            heapq.heappush(self._heap, (self._ev_time[m], _EV_START, m))
             self.tracer.add_span(
                 f"reboot r{r}", cat="reboot", track=f"worker/{m}",
                 sim_t0=t, sim_t1=t + reboot, round=int(r), worker=int(m),
             )
 
-    def _run_phase(self, m: int, r: int) -> None:
-        """Execute worker ``m``'s round-``r`` local steps on the stacked
-        state (one-hot masked; a zero-step round is a structural no-op)."""
-        k = int(self._ks[r, m])
-        if k == 0:
-            return
+    def _run_phases(self, ms: list[int]) -> None:
+        """Execute the pending local phases of workers ``ms`` (their rounds
+        may differ) in ONE compiled masked scan. vmap lanes are independent
+        — lane ``m``'s result depends only on its own (state column, key
+        column, K) — so a multi-hot ``ks_vec`` is bit-identical to running
+        the same phases one-hot sequentially, in any order; batching just
+        collapses the per-event dispatch overhead."""
+        live = []
         ks_vec = np.zeros((self.config.num_workers,), np.int32)
-        ks_vec[m] = k
-        # wall-clock view: the host executes phases back-to-back; the sim
-        # interval of this phase was spanned at admission time
-        with self.tracer.span(f"phase r{r} w{m}", cat="local-compute",
-                              track=f"worker/{m}", round=int(r), steps=k):
+        for m in ms:
+            r = int(self._ev_round[m]) - 1
+            k = int(self._ks[r, m])
+            if k:
+                ks_vec[m] = k
+                live.append((m, r, k))
+        if not live:
+            return
+        rounds = {r for _, r, _ in live}
+        if len(rounds) == 1:
+            # single-round batch: feed the round's key table untouched so
+            # the call hits the same jit-cache entry (and the same key
+            # buffers) a one-hot phase would
+            rngs = self._step_rngs(live[0][1])
+        else:
+            # mixed rounds at one instant: splice each worker's key column
+            # out of its own round's table — lane m consumes exactly the
+            # keys the synchronous chunk would feed its lane in round r
+            cols = self._np_step_rngs(live[0][1]).copy()
+            for m, r, _ in live[1:]:
+                cols[:, m] = self._np_step_rngs(r)[:, m]
+            rngs = jnp.asarray(cols)
+        # wall-clock view: the host executes phases back-to-back; each
+        # phase's sim interval was spanned at admission time
+        label = (f"phase r{live[0][1]} w{live[0][0]}" if len(live) == 1
+                 else f"phase-batch ×{len(live)}")
+        with self.tracer.span(label, cat="local-compute",
+                              workers=[m for m, _, _ in live],
+                              steps=int(sum(k for _, _, k in live))):
             self._state = self._phase_fn(
-                self._state, self._step_rngs(r), jnp.asarray(ks_vec)
+                self._state, rngs, jnp.asarray(ks_vec)
             )
-        self._steps_cum[m] += k
+        for m, _, k in live:
+            self._steps_cum[m] += k
 
-    def _handle_start(self, m: int, t: float) -> None:
-        r = int(self._ev_round[m])
-        if self._ev_is_phase[m]:
-            self._run_phase(m, r - 1)
-            self._ev_is_phase[m] = False
-        self._busy_s[m] += self._ev_busy[m]
-        self._ev_busy[m] = 0.0
-        self._enter_round(m, r, t)
+    def _handle_starts(self, idx: np.ndarray, t: float) -> None:
+        """Complete every compute/reboot ending at instant ``t``: run the
+        pending phases as one batch, then enter each worker's next round."""
+        phase_ms = [int(m) for m in idx if self._ev_is_phase[m]]
+        if phase_ms:
+            self._run_phases(phase_ms)
+            self._ev_is_phase[phase_ms] = False
+        self._busy_s[idx] += self._ev_busy[idx]
+        self._ev_busy[idx] = 0.0
+        for m in idx:
+            self._enter_round(int(m), int(self._ev_round[m]), t)
+
+    def _handle_arrivals(self, idx: np.ndarray, t: float) -> None:
+        """Land every uplink arriving at instant ``t`` at the server."""
+        self._status[idx] = _HELD
+        self._progress[idx] = self._ev_round[idx]
+        self._arrive_t[idx] = t
+        if self.tracer.enabled:
+            for m in idx:
+                r = int(self._ev_round[m])
+                self.tracer.add_span(
+                    f"uplink r{r}", cat="uplink", track=f"worker/{int(m)}",
+                    sim_t0=t - float(self._lat.up_s[r, m]), sim_t1=t,
+                    round=r, worker=int(m),
+                    bytes=float(self._msg_bytes),
+                )
 
     def _min_progress(self) -> int:
         active = self._status != _DONE
@@ -491,9 +583,12 @@ class AsyncPSEngine:
         return int(self._progress[active].min())
 
     def _admissible(self) -> list[int]:
+        # ascending worker id — the documented admission order within a
+        # batch (np.nonzero enumerates in index order)
         floor = self._min_progress() + self.tau
-        return [int(m) for m in np.nonzero(self._status == _HELD)[0]
-                if self._ev_round[m] <= floor]
+        return [int(m) for m in np.nonzero(
+            (self._status == _HELD) & (self._ev_round <= floor)
+        )[0]]
 
     def _admit_batch(self, adm: list[int], t: float) -> None:
         """One server update: fold the admitted uplinks into the last-heard
@@ -579,42 +674,51 @@ class AsyncPSEngine:
                     )
                 jax.block_until_ready(jax.tree.leaves(self._state)[0])
 
-            for m in adm:
-                r = rounds_of[m]
-                compute = float(self._ks[r, m]) * self._lat.step_s[r, m]
-                down = float(self._lat.down_s[r, m])
-                self._status[m] = _COMPUTE
-                self._ev_round[m] = r + 1
-                self._ev_time[m] = t + down + compute
-                self._ev_busy[m] = compute
-                self._ev_is_phase[m] = not lockstep
-                if lockstep:
-                    self._steps_cum[m] += int(self._ks[r, m])
-                heapq.heappush(self._heap, (self._ev_time[m], _EV_START, m))
+            # Schedule every admitted worker's next compute in one sweep:
+            # status/time/round updates are plain array writes (the arrays
+            # are the event queue), so a 10k-worker admission costs numpy
+            # vector ops, not 10k heap pushes.
+            adm_idx = np.asarray(adm, dtype=np.intp)
+            rs = self._ev_round[adm_idx]
+            compute = (self._ks[rs, adm_idx].astype(np.float64)
+                       * self._lat.step_s[rs, adm_idx])
+            down = self._lat.down_s[rs, adm_idx]
+            self._status[adm_idx] = _COMPUTE
+            self._ev_round[adm_idx] = rs + 1
+            self._ev_time[adm_idx] = t + down + compute
+            self._ev_busy[adm_idx] = compute
+            self._ev_is_phase[adm_idx] = not lockstep
+            if lockstep:
+                self._steps_cum[adm_idx] += self._ks[rs, adm_idx]
+            if self.tracer.enabled:
                 # Per-worker simulated-clock story of this admission: the
                 # staleness hold, the broadcast flight, and the local phase
                 # the worker now starts (its sim interval is known exactly).
-                track = f"worker/{m}"
-                if t > self._arrive_t[m]:
-                    self.tracer.add_span(
-                        f"held r{r}", cat="held", track=track,
-                        sim_t0=float(self._arrive_t[m]), sim_t1=t,
-                        round=r, worker=int(m),
-                    )
-                if down > 0.0:
-                    self.tracer.add_span(
-                        f"broadcast r{r}", cat="broadcast", track=track,
-                        sim_t0=t, sim_t1=t + down, round=r, worker=int(m),
-                        bytes=float(self._dense_bytes),
-                    )
-                if compute > 0.0:
-                    self.tracer.add_span(
-                        f"local-compute r{r}", cat="local-compute",
-                        track=track, sim_t0=t + down,
-                        sim_t1=t + down + compute, round=r, worker=int(m),
-                        steps=int(self._ks[r, m]),
-                        staleness=int(stale[m]),
-                    )
+                for i, m in enumerate(adm):
+                    r = int(rs[i])
+                    track = f"worker/{m}"
+                    if t > self._arrive_t[m]:
+                        self.tracer.add_span(
+                            f"held r{r}", cat="held", track=track,
+                            sim_t0=float(self._arrive_t[m]), sim_t1=t,
+                            round=r, worker=int(m),
+                        )
+                    if down[i] > 0.0:
+                        self.tracer.add_span(
+                            f"broadcast r{r}", cat="broadcast", track=track,
+                            sim_t0=t, sim_t1=t + float(down[i]),
+                            round=r, worker=int(m),
+                            bytes=float(self._dense_bytes),
+                        )
+                    if compute[i] > 0.0:
+                        self.tracer.add_span(
+                            f"local-compute r{r}", cat="local-compute",
+                            track=track, sim_t0=t + float(down[i]),
+                            sim_t1=t + float(down[i]) + float(compute[i]),
+                            round=r, worker=int(m),
+                            steps=int(self._ks[r, m]),
+                            staleness=int(stale[m]),
+                        )
             self.n_admissions += 1
 
         # Wall timing stays in the span layer (the recorded trace must be
@@ -652,12 +756,17 @@ class AsyncPSEngine:
 
     def _record_admission(self, adm, t, etas, stale) -> None:
         m_tot = self.config.num_workers
+        # Steps newly completed since the worker's previous record: exactly
+        # one phase lies between its consecutive admissions (or none, when
+        # the intervening round was a dead reboot or an unsampled skip), so
+        # the delta is that phase's K — and the ledger stays conserved
+        # (Σ local_steps over all records ≡ steps_cum) under faults and
+        # client sampling alike.
         steps = [0] * m_tot
         for m in adm:
-            r = int(self._ev_round[m])
-            if r > 0 and self._alive[r - 1, m]:
-                steps[m] = int(self._ks[r - 1, m])
-                self._steps_recorded[m] += steps[m]
+            d = int(self._steps_cum[m] - self._steps_recorded[m])
+            steps[m] = d
+            self._steps_recorded[m] += d
         adm_etas = etas[list(adm)]
         res = None
         if self.eval_fn is not None:
@@ -761,39 +870,50 @@ class AsyncPSEngine:
             run_sp.sim_t1 = self.sim_time
         return self.z_bar()
 
+    def _next_time(self) -> float | None:
+        """Earliest pending event instant — min over the per-worker event
+        machine's COMPUTE (phase end) and UPLINK (arrival) times. ``None``
+        when no worker has a pending event (fleet done, or deadlocked)."""
+        pending = (self._status == _COMPUTE) | (self._status == _UPLINK)
+        if not pending.any():
+            return None
+        return float(self._ev_time[pending].min())
+
     def _drive(self, until_time, until_admissions, checkpoint_path,
                checkpoint_every, last_ckpt) -> None:
-        while self._heap:
-            if until_time is not None and self._heap[0][0] > until_time:
+        while True:
+            t = self._next_time()
+            if t is None:
+                if not self.done:
+                    raise RuntimeError(
+                        "event queue drained with workers still blocked — "
+                        "staleness deadlock (this is a bug)"
+                    )
+                break
+            if until_time is not None and t > until_time:
                 break
             if (until_admissions is not None
                     and self.n_admissions >= until_admissions):
                 break
-            t = self._heap[0][0]
-            while self._heap and self._heap[0][0] == t:
-                _, kind, m = heapq.heappop(self._heap)
-                if kind == _EV_START:
-                    self._handle_start(m, t)
-                else:
-                    self._status[m] = _HELD
-                    self._progress[m] = int(self._ev_round[m])
-                    self._arrive_t[m] = t
-                    r = int(self._ev_round[m])
-                    self.tracer.add_span(
-                        f"uplink r{r}", cat="uplink", track=f"worker/{m}",
-                        sim_t0=t - float(self._lat.up_s[r, m]), sim_t1=t,
-                        round=r, worker=int(m),
-                        bytes=float(self._msg_bytes),
-                    )
+            # Drain every event at instant t: phase ends (STARTs) first —
+            # they may spawn same-instant arrivals under zero uplink delay —
+            # then arrivals, looping until the instant is quiet. This is
+            # the documented tie-break (see the event-machine note up top).
+            while True:
+                at_t = self._ev_time == t
+                s_idx = np.nonzero((self._status == _COMPUTE) & at_t)[0]
+                if s_idx.size:
+                    self._handle_starts(s_idx, t)
+                    continue
+                a_idx = np.nonzero((self._status == _UPLINK) & at_t)[0]
+                if a_idx.size:
+                    self._handle_arrivals(a_idx, t)
+                    continue
+                break
             self.now = t
             adm = self._admissible()
             if adm:
                 self._admit_batch(adm, t)
-            elif not self._heap and not self.done:
-                raise RuntimeError(
-                    "event queue drained with workers still blocked — "
-                    "staleness deadlock (this is a bug)"
-                )
             if (checkpoint_path is not None and checkpoint_every
                     and self.n_admissions - last_ckpt >= checkpoint_every):
                 self.save(checkpoint_path)
@@ -858,10 +978,11 @@ class AsyncPSEngine:
                              engine="async")
 
     def restore(self, path: str) -> "AsyncPSEngine":
-        """Resume mid-event-queue: the heap is rebuilt from the per-worker
-        event machine; schedules, faults, latency tables and rng streams
-        are re-derived from the config. Refuses checkpoints from a
-        different seed or optimizer, like the synchronous engine."""
+        """Resume mid-event-queue: the per-worker event machine (status,
+        times, rounds) IS the queue, so loading the arrays restores it
+        wholesale; schedules, faults, latency tables and rng streams are
+        re-derived from the config. Refuses checkpoints from a different
+        seed or optimizer, like the synchronous engine."""
         try:
             loaded = load_pytree(path, self._ckpt_tree())
         except ValueError as e:
@@ -900,16 +1021,6 @@ class AsyncPSEngine:
         self.now = float(_f64_unbytes(loaded["now"], 1)[0])
         self.n_admissions = int(np.asarray(loaded["n_admissions"]))
         self._final_recorded = bool(np.asarray(loaded["final_recorded"]))
-        self._heap = []
-        for w in range(m):
-            if self._status[w] == _COMPUTE:
-                heapq.heappush(
-                    self._heap, (float(self._ev_time[w]), _EV_START, w)
-                )
-            elif self._status[w] == _UPLINK:
-                heapq.heappush(
-                    self._heap, (float(self._ev_time[w]), _EV_ARRIVE, w)
-                )
         # drop telemetry from admissions past the restore point so a
         # rewound engine doesn't accumulate duplicate records
         self.trace.rounds = [

@@ -41,6 +41,7 @@ different seed *or a different optimizer* are rejected.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -61,10 +62,20 @@ from .compress import (
     dense_bytes,
 )
 from .faults import FaultPolicy, NoFaults
+from .sampler import ClientSampler
 from .schedule import UniformSchedule, WorkerSchedule
 from .trace import RoundRecord, TraceRecorder
 
 PyTree = Any
+
+# The chunk jits donate the stacked state/EF buffers (the engine never
+# reads them after the call), so a 10k-worker fleet updates in place
+# instead of round-tripping host<->device copies every chunk. CPU ignores
+# donation (it has no aliasing support in this jax build) and would warn
+# once per compile; the semantics are identical either way.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable"
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +108,9 @@ class PSConfig:
     faults: FaultPolicy | None = None        # default: no faults
     backend: str = "reference"               # AdaSEG step backend
     codec_backend: str = "reference"         # sync codec: reference | fused
+    # Sampled-client rounds: draw sampler.sample of num_workers fleet
+    # members per round (None = full participation, the historical path).
+    sampler: ClientSampler | None = None
 
 
 def _resolve_worker(config: PSConfig) -> LocalWorker:
@@ -133,6 +147,60 @@ def _resolve_schedule(config: PSConfig) -> WorkerSchedule:
 def _per_worker(mask, leaf):
     """Broadcast a (M,) mask over a worker-stacked leaf."""
     return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# Compiled-chunk cache. One jitted chunk per (problem, worker, compressor,
+# fleet, k_pad, eval, faults, codec, sampler) configuration, shared across
+# every engine instance in the process — so building a second engine with
+# the same config (benchmark loops, checkpoint-restore drills, the async
+# engine's lockstep path) reuses the compiled program instead of retracing.
+# jax.jit's own cache then keys on argument shapes, so a remainder chunk
+# (checkpoint_every leaving rounds % every != 0) costs exactly one extra
+# trace per distinct scan length, ever.
+# ---------------------------------------------------------------------------
+
+_CHUNK_CACHE: dict = {}
+_TRACE_COUNT = 0
+
+
+def _count_trace() -> None:
+    # Called from inside the traced chunk body: jax executes the Python
+    # body exactly once per trace (i.e. per compilation), so this global
+    # counts compilations — the same signal jax.monitoring's
+    # '/jax/core/compile' events carry, without requiring a listener hook.
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+
+def serial_chunk_traces() -> int:
+    """Process-wide count of serial round-chunk tracings (≈ compilations).
+    Regression tests read deltas of this to pin that remainder chunks and
+    same-config engines do not retrigger compilation."""
+    return _TRACE_COUNT
+
+
+def _hashable(x):
+    try:
+        hash(x)
+        return x
+    except TypeError:
+        return id(x)
+
+
+def cached_chunk(key: tuple, builder, *, donate: bool = True):
+    """Memoize ``jax.jit(builder(), donate_argnums=(0, 1))`` on ``key``.
+
+    Unhashable key components fall back to ``id()``; the cache entry keeps
+    a strong reference to the raw key objects so an id is never recycled
+    while its entry is alive."""
+    k = tuple(_hashable(x) for x in key) + (donate,)
+    hit = _CHUNK_CACHE.get(k)
+    if hit is not None:
+        return hit[0]
+    fn = jax.jit(builder(), donate_argnums=(0, 1) if donate else ())
+    _CHUNK_CACHE[k] = (fn, key)
+    return fn
 
 
 def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
@@ -279,7 +347,12 @@ def make_serial_chunk(
     it one-round slices whenever an admission batch is full-fleet lockstep,
     which is what makes the synchronous engine a *bit-exact special case*
     of the event-driven one (the chunking-invariance test pins that a
-    1-round slice equals the full scan)."""
+    1-round slice equals the full scan).
+
+    Returns ``(state, ef, eta_stats, ress)`` where ``eta_stats`` is
+    ``(C, 3)`` per-round ``[min, max, mean]`` over the fleet — the
+    telemetry reduction happens on device so the per-chunk device→host
+    transfer is O(rounds), not O(rounds × fleet)."""
     m = num_workers
     sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend)
 
@@ -316,6 +389,9 @@ def make_serial_chunk(
             )
 
         eta_end = veta(state)                             # (M,)
+        eta_stats = jnp.stack([
+            jnp.min(eta_end), jnp.max(eta_end), jnp.mean(eta_end)
+        ])
         with jax.named_scope("eval"):
             if eval_fn is None:
                 res = jnp.float32(jnp.nan)
@@ -330,13 +406,117 @@ def make_serial_chunk(
                     )),
                     dtype=jnp.float32,
                 )
-        return (state, ef), (eta_end, res)
+        return (state, ef), (eta_stats, res)
 
     def chunk(state, ef, round_rngs, ks, alive, counts_cum):
-        (state, ef), (etas, ress) = lax.scan(
+        _count_trace()
+        (state, ef), (eta_stats, ress) = lax.scan(
             round_body, (state, ef), (round_rngs, ks, alive, counts_cum)
         )
-        return state, ef, etas, ress
+        return state, ef, eta_stats, ress
+
+    return chunk
+
+
+def make_sampled_chunk(
+    problem: MinimaxProblem,
+    worker: LocalWorker,
+    compressor: SyncCompressor,
+    fleet: int,
+    sample: int,
+    k_pad: int,
+    eval_fn,
+    no_faults: bool,
+    codec_backend: str = "reference",
+):
+    """Sampled-client round chunk (partial participation). The fleet store
+    stays ``(N, ...)`` in the scan carry; each round gathers the
+    M = ``sample`` drawn workers' rows — optimizer state *and* persistent
+    error-feedback residuals — runs the usual sync + K masked local steps
+    on the compact ``(M, ...)`` stack, then scatters the rows back. Workers
+    not drawn this round keep their η accumulators and EF memory frozen in
+    the store, exactly as if the round never reached them. The sampled
+    lanes compose with schedules/faults/compression unchanged: ``ks_r`` /
+    ``alive_r`` inputs are the fleet tables gathered onto the drawn lanes.
+
+    Same return convention as :func:`make_serial_chunk`; ``eta_stats`` is
+    reduced over the *sampled* lanes, and ``counts_cum`` rows are fleet-
+    shaped ``(N,)`` so the in-chunk residual evaluates the true Line-14
+    z̄ over everyone who has ever participated."""
+    del fleet  # shapes are carried by the arrays; kept for cache keying
+    m = sample
+    sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend)
+    vstep = jax.vmap(
+        lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
+    )
+    veta = jax.vmap(worker.eta)
+    has_ef = compressor.error_feedback
+
+    def round_body(carry, inputs):
+        state, ef = carry
+        idx_r, rng_round, ks_r, alive_r, counts_r = inputs
+
+        with jax.named_scope("gather-sampled"):
+            sub = jax.tree.map(lambda v: v[idx_r], state)
+            sub_ef = jax.tree.map(lambda v: v[idx_r], ef) if has_ef else ef
+
+        sub, sub_ef = sync_stacked(
+            sub, sub_ef, None if no_faults else alive_r,
+            jax.random.fold_in(rng_round, 7),
+        )
+
+        step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
+            k_pad, m, 2
+        )
+
+        def body(st, inp):
+            rngs, i = inp
+            enabled = i < ks_r
+            if not no_faults:
+                enabled = jnp.logical_and(enabled, alive_r)
+            return vstep(st, rngs, enabled), None
+
+        with jax.named_scope("local-compute"):
+            sub, _ = lax.scan(body, sub, (step_rngs, jnp.arange(k_pad)))
+
+        with jax.named_scope("scatter-sampled"):
+            # draws are without replacement, so idx_r rows are unique and
+            # the scatter is well-defined
+            state = jax.tree.map(
+                lambda v, s: v.at[idx_r].set(s), state, sub
+            )
+            if has_ef:
+                ef = jax.tree.map(
+                    lambda v, s: v.at[idx_r].set(s), ef, sub_ef
+                )
+
+        eta_end = veta(sub)                               # (M,) lanes
+        eta_stats = jnp.stack([
+            jnp.min(eta_end), jnp.max(eta_end), jnp.mean(eta_end)
+        ])
+        with jax.named_scope("eval"):
+            if eval_fn is None:
+                res = jnp.float32(jnp.nan)
+            else:
+                counts = jnp.where(
+                    jnp.sum(counts_r) > 0.0, counts_r,
+                    jnp.ones_like(counts_r),
+                )
+                res = jnp.asarray(
+                    eval_fn(weighted_worker_average(
+                        worker.output(state), counts
+                    )),
+                    dtype=jnp.float32,
+                )
+        return (state, ef), (eta_stats, res)
+
+    def chunk(state, ef, idx, round_rngs, ks, alive, counts_cum):
+        _count_trace()
+        (state, ef), (eta_stats, ress) = lax.scan(
+            round_body, (state, ef),
+            (idx, round_rngs, ks, alive, counts_cum),
+        )
+        return state, ef, eta_stats, ress
 
     return chunk
 
@@ -423,6 +603,37 @@ class PSEngine:
             self._eff_steps, axis=0
         ).astype(np.float32)
 
+        # Sampled-client rounds: gather the fleet policy tables onto the
+        # M drawn lanes per round; effective step counts scatter back to
+        # fleet shape so z̄ / counts_cum stay Line-14 over the whole fleet.
+        self.sampler = config.sampler
+        if self.sampler is not None:
+            if mesh is not None:
+                raise ValueError(
+                    "sampled-client rounds run on the serial path only "
+                    "(mesh=None)"
+                )
+            self._draws = self.sampler.draws(m, r)            # (R, S)
+            self._ks_lane = np.take_along_axis(
+                self._ks, self._draws, axis=1
+            )
+            self._alive_lane = np.take_along_axis(
+                self._alive, self._draws, axis=1
+            )
+            self._eff_lane = np.where(
+                self._alive_lane, self._ks_lane, 0
+            )                                                 # (R, S)
+            eff_fleet = np.zeros((r, m), dtype=self._eff_lane.dtype)
+            np.put_along_axis(
+                eff_fleet, self._draws, self._eff_lane, axis=1
+            )
+            self._eff_steps = eff_fleet                       # (R, N)
+            self._counts_cum = np.cumsum(
+                eff_fleet, axis=0
+            ).astype(np.float32)
+        else:
+            self._draws = None
+
         # RNG derivation — each worker family keeps its historical stream
         # (AdaSEG: run_local_adaseg's; the zoo: run_local's), so the engine
         # reproduces the pre-engine drivers bit-exactly.
@@ -455,6 +666,9 @@ class PSEngine:
             "backend": getattr(self.worker, "backend", None),
             "codec_backend": self.codec_backend,
             "execution": "sharded" if mesh is not None else "serial",
+            **({"sampler": self.sampler.name,
+                "sample": self.sampler.sample}
+               if self.sampler is not None else {}),
             **(trace_meta or {}),
         })
 
@@ -464,7 +678,24 @@ class PSEngine:
         self._no_faults = isinstance(self.faults, NoFaults)
 
         if mesh is None:
-            self._chunk_fn = jax.jit(self._make_serial_chunk())
+            # Process-wide compiled-chunk cache + buffer donation: the
+            # stacked state/EF inputs are dead after each call (the engine
+            # rebinds them to the outputs), so XLA may update in place.
+            if self.sampler is not None:
+                key = ("sampled", self.problem, self.worker,
+                       self.compressor, m, self.sampler.sample,
+                       self._k_pad, self.eval_fn, self._no_faults,
+                       self.codec_backend)
+                self._chunk_fn = cached_chunk(
+                    key, self._make_sampled_chunk
+                )
+            else:
+                key = ("serial", self.problem, self.worker,
+                       self.compressor, m, self._k_pad, self.eval_fn,
+                       self._no_faults, self.codec_backend)
+                self._chunk_fn = cached_chunk(
+                    key, self._make_serial_chunk
+                )
         else:
             # NOT jit-wrapped here: the sharded chunk derives its rng tables
             # eagerly and jits only the shard_map body — with the default
@@ -483,6 +714,13 @@ class PSEngine:
             self.problem, self.worker, self.compressor,
             self.config.num_workers, self._k_pad, self.eval_fn,
             self._no_faults, self.codec_backend,
+        )
+
+    def _make_sampled_chunk(self):
+        return make_sampled_chunk(
+            self.problem, self.worker, self.compressor,
+            self.config.num_workers, self.sampler.sample, self._k_pad,
+            self.eval_fn, self._no_faults, self.codec_backend,
         )
 
     def _make_sharded_chunk(self):
@@ -611,8 +849,12 @@ class PSEngine:
                 state, ef, step_rngs, c_rngs,
                 jnp.asarray(ks).T, jnp.asarray(alive).T,
             )
+            eta_stats = jnp.stack(
+                [etas.min(axis=1), etas.max(axis=1), etas.mean(axis=1)],
+                axis=1,
+            )                                                 # (C, 3)
             ress = jnp.full((round_rngs.shape[0],), jnp.nan, jnp.float32)
-            return state, ef, etas, ress
+            return state, ef, eta_stats, ress
 
         return chunk
 
@@ -624,13 +866,23 @@ class PSEngine:
         sl = slice(r0, r1)
         with self.tracer.span(f"chunk [{r0},{r1})", cat="chunk",
                               rounds=r1 - r0) as chunk_sp:
-            state, ef, etas, ress = self._chunk_fn(
-                self._state, self._ef,
-                self._round_rngs[sl],
-                jnp.asarray(self._ks[sl]),
-                jnp.asarray(self._alive[sl]),
-                jnp.asarray(self._counts_cum[sl]),
-            )
+            if self._draws is not None:
+                state, ef, etas, ress = self._chunk_fn(
+                    self._state, self._ef,
+                    jnp.asarray(self._draws[sl]),
+                    self._round_rngs[sl],
+                    jnp.asarray(self._ks_lane[sl]),
+                    jnp.asarray(self._alive_lane[sl]),
+                    jnp.asarray(self._counts_cum[sl]),
+                )
+            else:
+                state, ef, etas, ress = self._chunk_fn(
+                    self._state, self._ef,
+                    self._round_rngs[sl],
+                    jnp.asarray(self._ks[sl]),
+                    jnp.asarray(self._alive[sl]),
+                    jnp.asarray(self._counts_cum[sl]),
+                )
             jax.block_until_ready(state)
         self._state, self._ef = state, ef
         self.round = r1
@@ -646,12 +898,23 @@ class PSEngine:
             self._dense_bytes, workers=self.config.num_workers,
             backend=self.codec_backend,
         )
-        etas = np.asarray(etas)
+        # Bulk telemetry: the chunk already reduced η to per-round
+        # [min, max, mean] on device, so this is one O(rounds) transfer —
+        # never O(rounds × fleet) — regardless of fleet size.
+        stats = np.asarray(etas)                              # (C, 3)
         ress = np.asarray(ress)
+        sampled = self._draws is not None
         for i, r in enumerate(range(r0, r1)):
-            alive = self._alive[r]
+            if sampled:
+                alive = self._alive_lane[r]
+                steps_row = self._eff_lane[r]
+                sampled_workers = self._draws[r].tolist()
+            else:
+                alive = self._alive[r]
+                steps_row = self._eff_steps[r]
+                sampled_workers = None
             n_alive = int(alive.sum())
-            eff = int(self._eff_steps[r].sum())
+            eff = int(steps_row.sum())
             res = float(ress[i])
             if np.isnan(res):
                 res = None
@@ -661,17 +924,18 @@ class PSEngine:
                     res = float(self.eval_fn(self.z_bar()))
             rec = RoundRecord(
                 round=r,
-                local_steps=self._eff_steps[r].tolist(),
+                local_steps=steps_row.tolist(),
                 alive=alive.tolist(),
                 bytes_up=n_alive * self._msg_bytes,
                 bytes_down=n_alive * self._dense_bytes,
-                eta_min=float(etas[i].min()),
-                eta_max=float(etas[i].max()),
-                eta_mean=float(etas[i].mean()),
+                eta_min=float(stats[i, 0]),
+                eta_max=float(stats[i, 1]),
+                eta_mean=float(stats[i, 2]),
                 residual=res,
                 wall_time_s=per_round_wall,
                 steps_per_sec=eff / per_round_wall if per_round_wall > 0
                 else None,
+                sampled_workers=sampled_workers,
             )
             self.trace.record(rec)
             # Round span: the chunk's wall uniformly attributed, carrying
@@ -747,13 +1011,19 @@ class PSEngine:
     # ------------------------------------------------------------------
 
     def _ckpt_tree(self) -> dict:
-        return {
+        tree = {
             "worker_state": self._state,
             "ef": self._ef,
             "round": jnp.int32(self.round),
             "rng0": jnp.asarray(self._rng0),
             "worker_fp": jnp.uint32(self.worker.fingerprint),
         }
+        if self.sampler is not None:
+            # present only for sampled runs: a sampled checkpoint can never
+            # be restored into a full-participation engine (or vice versa)
+            # because the leaf structure itself differs
+            tree["sampler_fp"] = jnp.uint32(self.sampler.fingerprint)
+        return tree
 
     def save(self, path: str) -> None:
         """Serialize engine state via checkpoint.serialize (msgpack)."""
@@ -786,6 +1056,13 @@ class PSEngine:
         ):
             raise ValueError(
                 "checkpoint was written by a run with a different seed"
+            )
+        if self.sampler is not None and int(
+            np.asarray(loaded["sampler_fp"])
+        ) != self.sampler.fingerprint:
+            raise ValueError(
+                "checkpoint was written by a run with a different client "
+                "sampler (the participation tables would diverge)"
             )
         self._state = loaded["worker_state"]
         self._ef = loaded["ef"]

@@ -33,8 +33,9 @@ from typing import Any
 #: of ``docs/formats.md`` (1–4 were implicit). 5 is the first revision to
 #: stamp the file with an explicit ``version`` key; loaders treat a missing
 #: key as 1, the oldest vintage — safe, since every post-v1 field is
-#: optional anyway.
-TRACE_VERSION = 5
+#: optional anyway. 6 adds sampled-client participation: a per-record
+#: ``sampled_workers`` id list plus ``sampler``/``sample`` meta keys.
+TRACE_VERSION = 6
 
 
 @dataclasses.dataclass
@@ -68,6 +69,11 @@ class RoundRecord:
     sim_time_s: float | None = None    # simulated clock at server admission
     staleness: list | None = None      # per worker: rounds behind freshest
     idle_frac: float | None = None     # fleet idle fraction up to sim_time_s
+    # --- sampled-client rounds (v6); None = full participation ------------
+    # fleet ids drawn this round, ascending; when set, the per-worker lists
+    # above (local_steps/alive/staleness) are per *sampled lane*, length
+    # meta["sample"], aligned with these ids
+    sampled_workers: list | None = None
 
     @property
     def eta_spread(self) -> float:

@@ -30,6 +30,7 @@ from repro.ps import (
     TraceRecorder,
 )
 from repro.core import AdaSEGConfig
+from repro.ps.trace import TRACE_VERSION
 
 M, R, K = 4, 5, 4
 N = 10
@@ -266,9 +267,9 @@ def test_trace_version_roundtrip_and_legacy_load(game, tmp_path):
     path = tmp_path / "trace.json"
     engine.trace.save(str(path))
     payload = json.loads(path.read_text())
-    assert payload["version"] == 5
+    assert payload["version"] == TRACE_VERSION
     back = TraceRecorder.load(str(path))
-    assert back.version == 5 and len(back.rounds) == 2
+    assert back.version == TRACE_VERSION and len(back.rounds) == 2
     # a versionless (pre-observability) trace still loads, as version 1
     del payload["version"]
     path.write_text(json.dumps(payload))

@@ -12,6 +12,7 @@ from hypothesis.extra import numpy as hnp
 from repro.core import AdaSEGConfig, sync_weighted_stacked
 from repro.core.adaseg import eta_of
 from repro.ps import (
+    ClientSampler,
     ElasticSchedule,
     FixedSchedule,
     StragglerSchedule,
@@ -106,6 +107,72 @@ def test_schedule_reproducible_and_bounded(case):
     assert np.issubdtype(a.dtype, np.integer)
     assert (a >= 0).all()
     assert (a <= sched.max_steps(m)).all()
+
+
+# --- ClientSampler properties ------------------------------------------------
+#
+# Like schedules, the sampling tables must be reproducible from the config
+# alone (the engines re-derive them on resume; the checkpoint only carries a
+# fingerprint) and exact: every round draws exactly M distinct workers of N,
+# rows sorted ascending — the documented participation order.
+
+@st.composite
+def _samplers(draw):
+    n = draw(st.integers(1, 12))
+    sample = draw(st.integers(1, n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    weights = None
+    if draw(st.booleans()):
+        weights = tuple(draw(st.lists(
+            st.floats(0.1, 10.0, allow_nan=False),
+            min_size=n, max_size=n)))
+    return ClientSampler(sample=sample, seed=seed, weights=weights), n, \
+        draw(st.integers(1, 20))
+
+
+@given(_samplers())
+@settings(max_examples=80, deadline=None)
+def test_sampler_reproducible_and_exactly_m_of_n(case):
+    sampler, n, rounds = case
+    a = sampler.draws(n, rounds)
+    b = sampler.draws(n, rounds)        # re-derived, as resume does
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (rounds, sampler.sample)
+    assert a.dtype == np.int32
+    for row in a:
+        ids = row.tolist()
+        assert len(set(ids)) == sampler.sample      # without replacement
+        assert ids == sorted(ids)                   # ascending
+        assert 0 <= min(ids) and max(ids) < n
+    mask = sampler.participation(n, rounds)
+    assert mask.shape == (rounds, n)
+    assert (mask.sum(axis=1) == sampler.sample).all()
+
+
+@given(_samplers())
+@settings(max_examples=30, deadline=None)
+def test_sampler_fingerprint_separates_laws(case):
+    sampler, _, _ = case
+    bumped = ClientSampler(sample=sampler.sample, seed=sampler.seed + 1,
+                           weights=sampler.weights)
+    assert sampler.fingerprint == ClientSampler(
+        sample=sampler.sample, seed=sampler.seed,
+        weights=sampler.weights).fingerprint
+    assert sampler.fingerprint != bumped.fingerprint
+
+
+def test_sampler_weighted_marginals():
+    """Weighted draws match the requested marginals: with sample=1 the
+    inclusion probability is exactly w/Σw, so empirical frequencies over
+    many rounds converge to it. (Deterministic — one fixed seed, enough
+    rounds that a law change trips the tolerance.)"""
+    w = (1.0, 2.0, 4.0, 8.0)
+    sampler = ClientSampler(sample=1, seed=0, weights=w)
+    rounds = 6000
+    hits = np.bincount(sampler.draws(4, rounds).ravel(), minlength=4)
+    freq = hits / rounds
+    expect = np.asarray(w) / sum(w)
+    np.testing.assert_allclose(freq, expect, atol=0.02)
 
 
 # --- HLO parser properties ---------------------------------------------------

@@ -124,6 +124,24 @@ def test_registry_check_catches_missing():
     assert "bench_roofline" in EXEMPT          # env-gated separate entry
 
 
+def test_select_filters_by_substring():
+    """--only keeps matching labels, --skip drops them, and a filter that
+    matches nothing is an error (a typo must not silently run everything)."""
+    from benchmarks.run import select
+
+    benches = registry()
+    only = select(benches, only=["fleet"])
+    assert [lbl for lbl, _ in only] == ["extra:fleet"]
+    skipped = select(benches, skip=["fleet"])
+    assert len(skipped) == len(benches) - 1
+    assert all("fleet" not in lbl for lbl, _ in skipped)
+    assert select(benches) == benches          # no filters: identity
+    with pytest.raises(SystemExit, match="matches no bench label"):
+        select(benches, only=["nope"])
+    with pytest.raises(SystemExit, match="matches no bench label"):
+        select(benches, skip=["nope"])
+
+
 def test_committed_trajectories_are_gateable():
     """The repo ships ≥3 trajectories the CI perf-gate runs against, each
     loadable and carrying ≥1 complete entry."""
