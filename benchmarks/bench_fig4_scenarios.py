@@ -18,6 +18,15 @@ effective local steps, local-steps/sec and η spread, all from the engine's
 per-round trace. Expected shape of the result: the adaptive methods
 (LocalAdaSEG, local'ized UMP/ASMP) degrade more gracefully under the
 hostile config than the fixed-lr baselines.
+
+PR 9 grows the harness into an **adversarial matrix** over the
+hostile-fleet subsystem: {iid, hetero+stragglers} × {dense, q8-EF} ×
+Byzantine sign-flip fraction {0, 0.2} × server aggregator {weighted mean,
+coordinate-median, trimmed-mean(0.2)}, LocalAdaSEG throughout. Headline
+residuals persist to ``BENCH_fig4.json`` (gated by
+``benchmarks/regress.py``), including the PR's acceptance ratios: under
+20% sign-flip on the bilinear game the robust merges stay within 2× of
+the clean fleet's final residual while the plain mean stalls.
 """
 from __future__ import annotations
 
@@ -29,15 +38,18 @@ from repro.optim import MinimaxWorker, adam_minimax, asmp, segda, sgda, ump
 from repro.problems import make_bilinear_game
 from repro.ps import (
     BernoulliFaults,
+    CoordinateMedian,
     ElasticSchedule,
     PSConfig,
     PSEngine,
+    SignFlipAttack,
     StochasticQuantizeCompressor,
     StragglerSchedule,
+    TrimmedMean,
     heterogeneous_bilinear,
 )
 
-from .common import emit
+from .common import emit, persist_trajectory
 
 M, K, R = 4, 20, 30
 N = 10
@@ -106,7 +118,96 @@ def run(seed: int = 0) -> dict:
     return results
 
 
+# -- PR 9: the adversarial matrix -------------------------------------------
+
+BM, BR, BK = 10, 12, 4          # matrix fleet: 20% sign-flip = 2 attackers
+
+
+def _aggregators():
+    return {
+        "mean": None,
+        "median": CoordinateMedian(),
+        "trimmed": TrimmedMean(beta=0.2),
+    }
+
+
+def run_adversarial(seed: int = 0) -> dict:
+    """The hostile-fleet matrix: every cell is one LocalAdaSEG run through
+    the PS engine; rows are ``scenario.codec.attack.aggregator``."""
+    game = make_bilinear_game(jax.random.PRNGKey(seed), n=N, sigma=0.1)
+    datas = {
+        "iid": (game.problem, {}),
+        "hetero": (
+            heterogeneous_bilinear(game, BM, jax.random.PRNGKey(seed + 7),
+                                   alpha=0.4),
+            {"schedule": StragglerSchedule(k=BK, min_frac=0.5,
+                                           seed=seed + 5,
+                                           slow_workers=(BM - 1,))},
+        ),
+    }
+    codecs = {
+        "dense": None,
+        "q8ef": StochasticQuantizeCompressor(bits=8, error_feedback=True),
+    }
+    byz = SignFlipAttack(fraction=0.2, scale=8.0, seed=seed + 11)
+    out: dict = {}
+    for dname, (problem, policies) in datas.items():
+        for cname, comp in codecs.items():
+            cells = {}
+            for aname, agg in _aggregators().items():
+                # the mean runs clean AND attacked (the clean cell is the
+                # matrix's reference — zero-budget robust cells would be
+                # bit-identical to it); robust cells always face the attack
+                for attack in ([None, byz] if aname == "mean" else [byz]):
+                    cfg = PSConfig(
+                        adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0,
+                                            k=BK),
+                        num_workers=BM, rounds=BR, byzantine=attack,
+                        aggregator=agg, compressor=comp, **policies,
+                    )
+                    eng = PSEngine(problem, cfg,
+                                   rng=jax.random.PRNGKey(seed + 1),
+                                   trace_meta={"scenario": dname})
+                    res = float(game.residual(eng.run()))
+                    frac = 0.0 if attack is None else attack.fraction
+                    key = f"{aname}_f{frac:g}"
+                    cells[key] = {"residual": res,
+                                  "bytes_up": eng.trace.total_bytes_up}
+                    emit(f"fig4[{dname},{cname},{key}]",
+                         eng.trace.total_wall_time_s * 1e6,
+                         f"residual={res:.4f};"
+                         f"bytes_up={eng.trace.total_bytes_up:.0f}")
+            out[f"{dname}.{cname}"] = cells
+    return out
+
+
+def check_adversarial(matrix: dict) -> dict:
+    """The PR's acceptance bar, computed from the iid/dense face of the
+    matrix: robust merges within 2× of the clean fleet under 20%
+    sign-flip; the plain mean is not."""
+    face = matrix["iid.dense"]
+    clean = face["mean_f0"]["residual"]
+    checks = {
+        "clean_residual": clean,
+        "median_within_2x": face["median_f0.2"]["residual"] <= 2 * clean,
+        "trimmed_within_2x": face["trimmed_f0.2"]["residual"] <= 2 * clean,
+        "mean_stalls": face["mean_f0.2"]["residual"] > 2 * clean,
+    }
+    emit("fig4[check]", 0.0,
+         ";".join(f"{k}={v}" for k, v in checks.items()))
+    return checks
+
+
 def main() -> None:
+    matrix = run_adversarial()
+    checks = check_adversarial(matrix)
+    assert checks["median_within_2x"] and checks["trimmed_within_2x"], checks
+    assert checks["mean_stalls"], checks
+    persist_trajectory("fig4", {
+        "matrix": matrix,
+        "workers": BM,
+        "byzantine_fraction": 0.2,
+    })
     results = run()
     clean, hostile = results["clean"], results["hostile"]
     finite = all(np.isfinite(v) for r in results.values() for v in r.values())

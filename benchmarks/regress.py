@@ -37,7 +37,7 @@ HIGHER_BETTER = ("per_sec", "speedup")
 LOWER_BETTER = ("_us", "us_", "residual", "time", "idle_frac", "wall")
 
 #: Benches whose trajectories the gate knows how to read.
-BENCHES = ("ps", "ps_models", "async", "kernels", "fleet")
+BENCHES = ("ps", "ps_models", "async", "kernels", "fleet", "fig4")
 
 
 def _classify(name: str) -> str | None:

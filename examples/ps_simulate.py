@@ -13,10 +13,18 @@ The runtime is optimizer-generic: the same hostile fleet then runs a zoo
 baseline (LocalSEGDA via ``MinimaxWorker``) for comparison — the paper's
 Fig. 4 match-up, but under production conditions.
 
-The final act drops the barrier entirely: the *event-driven* engine
+The third act drops the barrier entirely: the *event-driven* engine
 (``AsyncPSEngine``) runs the same algorithm over simulated time with one
 Markov-slow worker and a τ=2 staleness bound, crashes mid-event-queue, and
 resumes bit-exactly — admissions, simulated clock and all.
+
+The final act makes the fleet *hostile* (``repro.ps.robust``): 20% of the
+workers sign-flip their uplinks every round, the server swaps its weighted
+mean for a trimmed-mean merge, and the run is killed and resumed
+mid-attack — the resumed trajectory is bit-exact because the attack table,
+like every other policy, is a deterministic function of its seed. The same
+attacked fleet under the plain mean shows why the robust merge earns its
+keep.
 
 Both engines record ``repro.obs`` spans as they go; the script exports two
 Perfetto/Chrome timelines next to itself (open them at
@@ -46,8 +54,10 @@ from repro.ps import (
     MarkovLatency,
     PSConfig,
     PSEngine,
+    SignFlipAttack,
     StochasticQuantizeCompressor,
     StragglerSchedule,
+    TrimmedMean,
     heterogeneous_bilinear,
 )
 
@@ -115,6 +125,63 @@ def main():
           f"({len(engine.tracer.spans)} spans; open at ui.perfetto.dev)")
 
     async_demo(game, problem)
+    hostile_demo(game)
+
+
+def hostile_demo(game):
+    """The fleet turns adversarial: 20% sign-flip uplinks vs a trimmed-mean
+    server, with a crash and a bit-exact resume *mid-attack* — the attack
+    table re-derives from its seed like every other policy."""
+    m, rounds, k = 10, 12, 4
+    byz = SignFlipAttack(fraction=0.2, scale=8.0, seed=11)
+    robust_cfg = PSConfig(
+        adaseg=AdaSEGConfig(g0=1.0, diameter=float(np.sqrt(2 * N)),
+                            alpha=1.0, k=k),
+        num_workers=m, rounds=rounds,
+        byzantine=byz, aggregator=TrimmedMean(beta=0.2),
+    )
+
+    def fresh(cfg):
+        return PSEngine(game.problem, cfg, rng=jax.random.PRNGKey(4),
+                        eval_fn=game.residual)
+
+    reference = fresh(robust_cfg)
+    z_ref = reference.run()               # the uninterrupted hostile run
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt = os.path.join(tmp, "hostile_engine.msgpack")
+        engine = fresh(robust_cfg)
+        engine.run(until_round=rounds // 2)
+        engine.save(ckpt)
+        attacked_so_far = sum(
+            len(r.byzantine_workers) for r in engine.trace.rounds)
+        print(f"\n-- hostile: 'crashed' at round {engine.round} with "
+              f"{attacked_so_far} corrupted uplinks already admitted "
+              f"({byz.name})")
+        engine = fresh(robust_cfg).restore(ckpt)
+        zbar = engine.run()
+
+    exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(z_ref), jax.tree.leaves(zbar))
+    )
+    res_robust = float(game.residual(zbar))
+    print(f"-- hostile: resumed mid-attack, bit-exact with the "
+          f"uninterrupted run: {exact}")
+
+    clean = fresh(dataclasses.replace(robust_cfg, byzantine=None,
+                                      aggregator=None))
+    res_clean = float(game.residual(clean.run()))
+    mean = fresh(dataclasses.replace(robust_cfg, aggregator=None))
+    res_mean = float(game.residual(mean.run()))
+    print(f"   residuals: clean fleet {res_clean:.4f} | attacked, "
+          f"trimmed-mean {res_robust:.4f} ({res_robust / res_clean:.2f}x) | "
+          f"attacked, plain mean {res_mean:.4f} "
+          f"({res_mean / res_clean:.2f}x — the mean never recovers)")
+    last = engine.trace.rounds[-1]
+    print(f"   final round corrupted workers: {last.byzantine_workers}, "
+          f"server rejecting "
+          f"{engine.aggregator.reject_frac(m):.0%} of lanes per coordinate")
 
 
 def async_demo(game, problem):

@@ -175,6 +175,45 @@ def _mask_kernel(*refs, has_ef, has_alive):
         ef_out_ref[...] = ef_new.astype(ef_out_ref.dtype)
 
 
+def _trimmed_kernel(*refs, m, trim, has_recv):
+    """Robust server merge: per-coordinate β-trimmed weighted mean via
+    sort-free streaming rank selection — same expressions as
+    :func:`.ref.trimmed_merge_ref`, on the full-fleet (M, block) tile.
+
+    The rank accumulation is an unrolled Python loop over the static worker
+    count: each pass broadcasts one row against the whole tile, so the
+    selection stays in-register (no sort network, no gather)."""
+    it = iter(refs)
+    w_ref = next(it)
+    incl_ref = next(it)
+    recv_ref = next(it) if has_recv else None
+    z_ref = next(it)
+    old_ref = next(it) if has_recv else None
+    out_ref = next(it)
+
+    z = z_ref[...].astype(jnp.float32)                  # (M, block)
+    incl = incl_ref[0, :]                               # (M,) 0/1
+    n_incl = jnp.sum(incl)
+    b = jnp.minimum(jnp.float32(trim), jnp.floor((n_incl - 1.0) * 0.5))
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, z.shape, 0)
+    rank = jnp.zeros_like(z)
+    for k in range(m):                        # streaming: one row per pass
+        zk = z[k:k + 1, :]
+        less = (zk < z) | ((zk == z) & (k < row_ids))
+        rank = rank + incl[k] * less.astype(jnp.float32)
+    keep = ((rank >= b) & (rank <= n_incl - 1.0 - b)
+            & (incl.reshape(m, 1) > 0.0))
+    wk = w_ref[0, :].reshape(m, 1) * keep.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(wk, axis=0, keepdims=True), 1e-30)
+    mean = jnp.sum(wk * z, axis=0, keepdims=True) / denom
+    merged = jnp.broadcast_to(mean, z_ref.shape)
+    if has_recv:
+        keep_rows = recv_ref[0, :].reshape(m, 1) > 0.0
+        merged = jnp.where(keep_rows, merged,
+                           old_ref[...].astype(jnp.float32))
+    out_ref[...] = merged.astype(out_ref.dtype)
+
+
 def _merge_kernel(*refs, m, normalize, has_w, has_recv):
     it = iter(refs)
     w_ref = next(it) if has_w else None
@@ -343,6 +382,48 @@ def merge_stacked(z, w=None, recv=None, old=None, *, normalize: bool = False,
         _merge_kernel, m=m, normalize=normalize, has_w=w is not None,
         has_recv=recv is not None,
     )
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=full_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nb * block), z.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:, :n]
+
+
+def trimmed_merge_stacked(z, w, incl, recv=None, old=None, *, trim: int,
+                          block: int = 4096, interpret: bool = False):
+    """Fused *robust* server merge on a stacked (M, n) leaf: per-coordinate
+    ``trim``-per-side trimmed weighted mean over the included rows
+    (``incl`` — 0/1, dead/unselected lanes never enter the order
+    statistics), renormalized over the survivors' weight mass and broadcast
+    back. ``trim = ⌊(M−1)/2⌋`` is the coordinate median. Same (nb,)-grid
+    full-fleet tile layout as :func:`merge_stacked`; ``recv``/``old`` gate
+    delivery identically.
+    """
+    m, n = z.shape
+    nb = (n + (-n) % block) // block
+    in_specs, args = [], []
+
+    def vec_smem(v):
+        in_specs.append(pl.BlockSpec((1, m), lambda j: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        args.append(jnp.asarray(v, jnp.float32).reshape(1, m))
+
+    vec_smem(w)
+    vec_smem(incl)
+    if recv is not None:
+        vec_smem(recv)
+    full_spec = pl.BlockSpec((m, block), lambda j: (0, j))
+    in_specs.append(full_spec)
+    args.append(_tile_rows(z, block))
+    if recv is not None:
+        in_specs.append(full_spec)
+        args.append(_tile_rows(z if old is None else old, block))
+    kernel = functools.partial(_trimmed_kernel, m=m, trim=trim,
+                               has_recv=recv is not None)
     out = pl.pallas_call(
         kernel,
         grid=(nb,),

@@ -60,6 +60,7 @@ from .kernel import (
     mask_uplink,
     merge_stacked,
     quantize_uplink,
+    trimmed_merge_stacked,
     uplink_stats,
 )
 
@@ -225,16 +226,54 @@ def codec_uplink(payload, rng, w=None, ef=None, alive=None, *, codec,
     return sent, ef_new
 
 
+def _krum_select(z2s, w, *, f, m_sel):
+    """(Multi-)Krum selection on flat (M, n) leaves: score each included
+    worker by the sum of its ``nb = max(1, M − f − 2)`` smallest squared
+    distances to *other* included workers, keep the ``m_sel`` lowest-scoring
+    (ties to lowest worker index — ``lax.top_k`` order), and return a (M,)
+    0/1 selection mask. Zero-weight lanes (dead / unselected) never enter
+    the distance pool and are never selected."""
+    m = z2s[0].shape[0]
+    zc = jnp.concatenate([zz.astype(jnp.float32) for zz in z2s], axis=1)
+    sq = jnp.sum(zc * zc, axis=1)
+    d = sq[:, None] + sq[None, :] - 2.0 * (zc @ zc.T)
+    incl = (jnp.ones((m,), jnp.float32) if w is None
+            else jnp.asarray(w, jnp.float32)) > 0
+    pair = incl[None, :] & incl[:, None] & ~jnp.eye(m, dtype=bool)
+    inf = jnp.float32(jnp.inf)
+    d = jnp.where(pair, d, inf)
+    nb = max(1, m - f - 2)
+    score = jnp.sum(jnp.sort(d, axis=1)[:, :nb], axis=1)
+    score = jnp.where(incl, score, inf)
+    _, idx = jax.lax.top_k(-score, min(m_sel, m))
+    sel = jnp.zeros((m,), jnp.float32).at[idx].set(1.0)
+    return sel * incl.astype(jnp.float32)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("normalize", "use_kernel", "block"))
+                   static_argnames=("normalize", "agg", "use_kernel",
+                                    "block"))
 def sync_merge_stacked(z, w=None, recv=None, old=None, *, normalize=False,
-                       use_kernel=True, block=4096):
+                       agg=None, use_kernel=True, block=4096):
     """The fused Line-7 server side on a worker-stacked pytree: weighted sum
     over the worker axis (``w`` raw weights, normalized in-register when
     ``normalize``) broadcast back to every worker — one read + one write of
     the fleet payload per leaf instead of the scale/sum/broadcast tree
     passes. ``recv`` (M,) gates delivery: non-receiving workers keep their
     ``old`` (default: ``z``) row, the engines' fault semantics.
+
+    ``agg`` selects a *robust* merge instead of the plain weighted mean (the
+    static specs produced by ``repro.ps.robust`` aggregators; ``None`` is
+    the historical mean — robust aggregators at zero budget resolve to
+    ``None``, so clean-fleet degradation is the same compiled function):
+
+    * ``("trimmed", b)``     — per-coordinate b-per-side trimmed weighted
+      mean over the positive-weight lanes (``b = ⌊(M−1)/2⌋`` is the
+      coordinate median), survivor-renormalized; fused via the sort-free
+      streaming-rank kernel, reference via :func:`.ref.trimmed_merge_ref`.
+    * ``("krum", f, m_sel)`` — multi-Krum: keep the ``m_sel`` workers with
+      the smallest sum of ``max(1, M−f−2)`` nearest squared distances, then
+      the survivor-renormalized weighted mean of the keepers.
     """
     leaves, treedef = jax.tree.flatten(z)
     old_leaves = (treedef.flatten_up_to(old) if old is not None
@@ -242,6 +281,36 @@ def sync_merge_stacked(z, w=None, recv=None, old=None, *, normalize=False,
     interp = not _on_tpu()
     w = None if w is None else jnp.asarray(w, jnp.float32)
     recv = None if recv is None else jnp.asarray(recv, jnp.float32)
+    m = leaves[0].shape[0]
+
+    if agg is not None and agg[0] == "krum":
+        sel = _krum_select([_flat2(l) for l in leaves], w,
+                           f=int(agg[1]), m_sel=int(agg[2]))
+        w = sel if w is None else w * sel
+        agg, normalize = None, True     # mean over the Krum survivors
+
+    if agg is not None:                 # ("trimmed", b)
+        trim = int(agg[1])
+        wt = jnp.ones((m,), jnp.float32) if w is None else w
+        incl = (wt > 0).astype(jnp.float32)
+        outs = []
+        for zl, ol in zip(leaves, old_leaves):
+            shape = zl.shape
+            z2 = _flat2(zl)
+            o2 = None if ol is None else _flat2(ol)
+            n = z2.shape[1]
+            if use_kernel:
+                out2 = trimmed_merge_stacked(
+                    z2, wt, incl, recv, o2, trim=trim,
+                    block=_leaf_block(block, n, interp), interpret=interp,
+                )
+            else:
+                out2 = _ref.trimmed_merge_ref(
+                    z2, wt, incl, trim=trim,
+                    recv=None if recv is None else recv > 0, old=o2,
+                )
+            outs.append(out2.reshape(shape))
+        return treedef.unflatten(outs)
 
     outs = []
     for zl, ol in zip(leaves, old_leaves):

@@ -153,6 +153,51 @@ def mask_uplink_ref(eff, mask, *, alive=None, ef=None):
     return sent, ef_new
 
 
+def trimmed_merge_ref(z, w, incl, *, trim, recv=None, old=None):
+    """Reference for the fused *robust* server merge on one worker-stacked
+    leaf ``(M, n)``: the per-coordinate β-trimmed weighted mean, computed
+    with the same sort-free streaming rank expressions the Pallas kernel
+    emits (so fused and reference select the identical survivor set).
+
+    Per coordinate ``j``, worker ``i`` gets the stable rank
+
+        rank_i = Σ_k incl_k · [z_kj < z_ij  or  (z_kj = z_ij and k < i)]
+
+    among the included rows (``incl`` — zero-weight/dead lanes are excluded
+    from the order statistics entirely); the effective per-side trim is
+    ``b = min(trim, ⌊(n_incl − 1)/2⌋)`` so a depleted fleet degrades toward
+    the median rather than trimming itself empty, and the output is the
+    ``w``-weighted mean of the surviving window ``b ≤ rank ≤ n_incl−1−b``,
+    renormalized per coordinate over the survivors' weight mass. ``trim``
+    at its maximum ``⌊(M−1)/2⌋`` IS the coordinate median (weighted mean of
+    the middle one/two order statistics). ``recv``/``old`` gate delivery
+    exactly like :func:`merge_ref`.
+    """
+    m = z.shape[0]
+    zf = z.astype(jnp.float32)
+    wf = jnp.asarray(w, jnp.float32)
+    inclf = jnp.asarray(incl, jnp.float32)
+    n_incl = jnp.sum(inclf)
+    b = jnp.minimum(jnp.float32(trim), jnp.floor((n_incl - 1.0) * 0.5))
+    row_ids = jnp.arange(m).reshape((m,) + (1,) * (z.ndim - 1))
+    rank = jnp.zeros_like(zf)
+    for k in range(m):                        # streaming: one row per pass
+        zk = zf[k:k + 1]
+        less = (zk < zf) | ((zk == zf) & (k < row_ids))
+        rank = rank + inclf[k] * less.astype(jnp.float32)
+    keep = ((rank >= b) & (rank <= n_incl - 1.0 - b)
+            & (inclf.reshape((m,) + (1,) * (z.ndim - 1)) > 0.0))
+    wk = (wf.reshape((m,) + (1,) * (z.ndim - 1))
+          * keep.astype(jnp.float32))
+    denom = jnp.maximum(jnp.sum(wk, axis=0, keepdims=True), 1e-30)
+    mean = jnp.sum(wk * zf, axis=0, keepdims=True) / denom
+    merged = jnp.broadcast_to(mean, z.shape).astype(z.dtype)
+    if recv is None:
+        return merged
+    keep_rows = recv.reshape((-1,) + (1,) * (z.ndim - 1))
+    return jnp.where(keep_rows, merged, z if old is None else old)
+
+
 def merge_ref(z, w=None, *, normalize=False, recv=None, old=None):
     """Reference for the fused server merge on one worker-stacked leaf
     ``(M, n)``: weighted sum over workers, broadcast back — with the weight

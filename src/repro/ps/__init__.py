@@ -94,6 +94,20 @@ seed-deterministic (uniform or weighted, without replacement), checkpoints
 carry a sampler fingerprint so resumes can't silently replay a different
 participation table, and ``sampler=None`` preserves the full-participation
 trajectories bit-exactly (``benchmarks/bench_fleet.py`` sweeps the axis).
+
+Fourth axis — **hostility** (``ps.robust``): the fleet stops being honest.
+``PSConfig(byzantine=…)`` corrupts a seed-deterministic per-(round, worker)
+subset of uplinks *after* local compute and *before* compression (sign-flip,
+scaled noise, zeros, collusion); ``aggregator=…`` swaps the Line-7 weighted
+mean for a robust order-statistic merge (trimmed-mean(β), coordinate-median,
+multi-Krum) with fused-Pallas and reference twins; ``dp=…`` adds per-worker
+l2 clipping + Gaussian noise against an honest-but-curious server. All three
+compose with codecs/EF, faults, client sampling, and both engines (the async
+machine attacks at store time and robust-merges at admission — τ=0 lockstep
+still runs the *same compiled chunk* as the sync engine). At zero
+robustness budget the historical bit-exact paths are compiled unchanged;
+checkpoints gain an ``aggregator_fp`` so a resume can't silently switch
+merge semantics (``tests/test_robust_agg.py``).
 """
 from ..core.worker import AdaSEGWorker, LocalWorker
 from ..models.worker import ModelWorker
@@ -118,6 +132,19 @@ from .latency import (
     MarkovLatency,
     TraceLatency,
 )
+from .robust import (
+    ByzantinePolicy,
+    CollusionAttack,
+    CoordinateMedian,
+    DPUplink,
+    MultiKrum,
+    RobustAggregator,
+    ScaledNoiseAttack,
+    SignFlipAttack,
+    TrimmedMean,
+    WeightedMean,
+    ZeroAttack,
+)
 from .partition import (
     heterogeneous_bilinear,
     heterogeneous_robust,
@@ -138,8 +165,12 @@ __all__ = [
     "AsyncPSConfig",
     "AsyncPSEngine",
     "BernoulliFaults",
+    "ByzantinePolicy",
     "ClientSampler",
+    "CollusionAttack",
     "ConstantLatency",
+    "CoordinateMedian",
+    "DPUplink",
     "ElasticSchedule",
     "FaultPolicy",
     "FixedSchedule",
@@ -150,19 +181,26 @@ __all__ = [
     "LognormalLatency",
     "MarkovLatency",
     "ModelWorker",
+    "MultiKrum",
     "NoFaults",
     "OutageFaults",
     "PSConfig",
     "PSEngine",
+    "RobustAggregator",
     "RoundRecord",
+    "ScaledNoiseAttack",
+    "SignFlipAttack",
     "TraceLatency",
     "StochasticQuantizeCompressor",
     "StragglerSchedule",
     "SyncCompressor",
     "TopKCompressor",
     "TraceRecorder",
+    "TrimmedMean",
     "UniformSchedule",
+    "WeightedMean",
     "WorkerSchedule",
+    "ZeroAttack",
     "check_codec_backend",
     "dense_bytes",
     "heterogeneous_bilinear",

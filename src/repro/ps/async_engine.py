@@ -87,10 +87,12 @@ from .engine import (
     _resolve_worker,
     cached_chunk,
     make_serial_chunk,
+    resolve_robust,
 )
 from ..obs import MetricsRegistry, SpanTracer, modeled_sync_cost
 from .faults import NoFaults
 from .latency import ConstantLatency, LatencyModel
+from .robust import WeightedMean
 from .trace import RoundRecord, TraceRecorder
 
 PyTree = Any
@@ -220,6 +222,22 @@ class AsyncPSEngine:
             None if self.sampler is None
             else self.sampler.participation(m, r)
         )
+        # Hostile-fleet subsystem: attacks corrupt uplinks at *store* time
+        # (per the sender's own round), the robust merge runs at admission
+        # over the last-heard table. Resolved at full fleet width — the
+        # async table always spans every worker.
+        self.aggregator = config.aggregator or WeightedMean()
+        self.byzantine = config.byzantine
+        self.dp = config.dp
+        self._robust = resolve_robust(config, m)
+        if self.byzantine is not None:
+            self._byz = np.asarray(
+                self.byzantine.attacked(m, r), dtype=bool
+            )
+            if self._byz.shape != (r, m):
+                raise ValueError("byzantine table shape mismatch")
+        else:
+            self._byz = np.zeros((r, m), dtype=bool)
 
         # RNG derivation: identical to PSEngine so the lockstep trajectory
         # (and each worker family's historical stream) is reproduced.
@@ -290,6 +308,11 @@ class AsyncPSEngine:
             **({"sampler": self.sampler.name,
                 "sample": self.sampler.sample}
                if self.sampler is not None else {}),
+            **({"byzantine": self.byzantine.name}
+               if self.byzantine is not None else {}),
+            **({"aggregator": self.aggregator.name,
+                "dp": None if self.dp is None else self.dp.name}
+               if self._robust is not None else {}),
             **(trace_meta or {}),
         })
 
@@ -390,6 +413,64 @@ class AsyncPSEngine:
             sw_now = jax.vmap(worker.sync_weight)(state)
             return new_table, jnp.where(mask, sw_now, sw), ef_new
 
+        robust = self._robust
+
+        def store_robust(state, table, sw, ef, mask, byz_mask, c_rngs):
+            # Robust store: corrupt (attack) then privatize (DP) the raw
+            # payload, codec the result *unweighted* — the same pipeline the
+            # synchronous robust sync runs, so τ=0 stays a shared-semantics
+            # special case. ``byz_mask`` selects the admitted lanes whose
+            # sender is adversarial in its own round.
+            payload = worker.sync_payload(state)
+            uplink = payload
+            if robust.byzantine is not None:
+                a_rngs = jax.vmap(
+                    lambda k: jax.random.fold_in(k, 13)
+                )(c_rngs)
+                uplink = robust.byzantine.apply(uplink, byz_mask, a_rngs)
+            if robust.dp is not None:
+                d_rngs = jax.vmap(
+                    lambda k: jax.random.fold_in(k, 11)
+                )(c_rngs)
+                uplink = robust.dp.apply(uplink, d_rngs)
+            if comp.is_identity:
+                sent, ef_new = uplink, ef
+            else:
+                from ..kernels.sync_compress.ops import codec_uplink_stacked
+
+                sent, ef_new = codec_uplink_stacked(
+                    uplink, c_rngs, w=None,
+                    ef=ef if comp.error_feedback else None,
+                    alive=mask, codec=comp.codec_spec,
+                    use_kernel=self.codec_backend == "fused",
+                )
+                if not comp.error_feedback:
+                    ef_new = ef
+            new_table = jax.tree.map(
+                lambda s, old: jnp.where(_per_worker(mask, s), s, old),
+                sent, table,
+            )
+            sw_now = jax.vmap(worker.sync_weight)(state)
+            return new_table, jnp.where(mask, sw_now, sw), ef_new
+
+        def admit_robust(state, table, sw, discount, heard, recv):
+            # Robust Line 5–8 per arrival: the table rows are unweighted
+            # z̃ uplinks, so the robust merge (and its weight
+            # renormalization over heard lanes) runs server-side — the
+            # same sync_merge_stacked(agg=...) call the synchronous robust
+            # path compiles.
+            from ..kernels.sync_compress.ops import sync_merge_stacked
+
+            sw_eff = sw * discount
+            w_raw = jnp.where(heard, sw_eff, jnp.zeros_like(sw_eff))
+            payload = worker.sync_payload(state)
+            synced = sync_merge_stacked(
+                table, w=w_raw, recv=recv, old=payload,
+                normalize=True, agg=robust.agg,
+                use_kernel=self.codec_backend == "fused",
+            )
+            return worker.merge_synced(state, synced)
+
         def admit(state, table, sw, discount, heard, recv):
             # Line 5–8 per arrival: weighted average of the whole last-heard
             # table, broadcast to the admitted workers only. Mirrors
@@ -419,21 +500,23 @@ class AsyncPSEngine:
         self._phase_fn = jax.jit(phase)
         self._store_fn = jax.jit(store)
         self._store_c_fn = jax.jit(store_compressed)
-        self._admit_fn = jax.jit(admit)
+        self._store_r_fn = jax.jit(store_robust) if robust else None
+        self._admit_fn = jax.jit(admit_robust if robust else admit)
         self._veta = jax.jit(jax.vmap(worker.eta))
         # Shared with PSEngine through the process-wide chunk cache: a
         # lockstep-eligible async engine literally reuses the synchronous
         # engine's *compiled* round chunk (same cache key ⇒ same jitted
-        # callable), donation included.
+        # callable), donation included. A robust pipeline keys (and
+        # builds) the robust variant of the same chunk.
         self._lockstep_chunk = (
             cached_chunk(
                 ("serial", self.problem, worker, comp,
                  self.config.num_workers, k_pad, self.eval_fn, True,
-                 self.codec_backend),
+                 self.codec_backend, robust),
                 lambda: make_serial_chunk(
                     self.problem, worker, comp, self.config.num_workers,
                     k_pad, self.eval_fn, no_faults=True,
-                    codec_backend=self.codec_backend,
+                    codec_backend=self.codec_backend, robust=robust,
                 ),
             )
             if self._lockstep_ok else None
@@ -598,6 +681,10 @@ class AsyncPSEngine:
         mask = np.zeros((m_tot,), bool)
         mask[adm] = True
         rounds_of = {m: int(self._ev_round[m]) for m in adm}
+        byz_mask = np.zeros((m_tot,), bool)
+        if self.byzantine is not None:
+            for m in adm:
+                byz_mask[m] = self._byz[rounds_of[m], m]
 
         with self.tracer.span(
             f"admission {self.n_admissions}", cat="admission",
@@ -605,7 +692,19 @@ class AsyncPSEngine:
         ) as adm_sp:
             with self.tracer.span("uplink-decode", cat="uplink-encode",
                                   sim_t0=t, sim_t1=t):
-                if self.compressor.is_identity:
+                if self._robust is not None:
+                    # attack/DP keys derive from the sender's own round, so
+                    # even the identity codec needs the spliced key table
+                    c_rngs = np.asarray(self._c_rngs(0)).copy()
+                    for m in adm:
+                        c_rngs[m] = np.asarray(self._c_rngs(rounds_of[m]))[m]
+                    self._srv_payload, srv_sw, self._ef = self._store_r_fn(
+                        self._state, self._srv_payload,
+                        jnp.asarray(self._srv_sw), self._ef,
+                        jnp.asarray(mask), jnp.asarray(byz_mask),
+                        jnp.asarray(c_rngs),
+                    )
+                elif self.compressor.is_identity:
                     self._srv_payload, srv_sw = self._store_fn(
                         self._state, self._srv_payload,
                         jnp.asarray(self._srv_sw), jnp.asarray(mask),
@@ -638,7 +737,7 @@ class AsyncPSEngine:
             # (post-previous-phase, pre-merge — merge_synced never touches
             # the output iterate, so the residual is the same either side).
             self._record_admission(
-                adm, t, np.asarray(self._veta(self._state)), stale
+                adm, t, np.asarray(self._veta(self._state)), stale, byz_mask
             )
             rec = self.trace.rounds[-1]
 
@@ -655,12 +754,17 @@ class AsyncPSEngine:
                     counts = (
                         self._steps_cum + self._ks[r0] * self._alive[r0]
                     ).astype(np.float32)
-                    self._state, self._ef, _, _ = self._lockstep_chunk(
+                    chunk_args = [
                         self._state, self._ef,
                         self._round_rngs[r0:r0 + 1],
                         jnp.asarray(self._ks[r0:r0 + 1]),
                         jnp.asarray(self._alive[r0:r0 + 1]),
-                        jnp.asarray(counts[None]),
+                    ]
+                    if self._robust is not None:
+                        chunk_args.append(jnp.asarray(self._byz[r0:r0 + 1]))
+                    chunk_args.append(jnp.asarray(counts[None]))
+                    self._state, self._ef, _, _ = self._lockstep_chunk(
+                        *chunk_args
                     )
                 else:
                     discount = np.asarray(
@@ -730,6 +834,14 @@ class AsyncPSEngine:
         self.metrics.inc("bytes_down", rec.bytes_down, engine="async")
         self.metrics.inc("admissions", 1, engine="async")
         self.metrics.set_gauge("eta_spread", rec.eta_spread, engine="async")
+        if self._robust is not None:
+            self.metrics.inc("byzantine_workers",
+                             len(rec.byzantine_workers or []),
+                             engine="async")
+            self.metrics.set_gauge(
+                "agg_reject_frac", self.aggregator.reject_frac(len(adm)),
+                engine="async", aggregator=self.aggregator.name,
+            )
         if rec.idle_frac is not None:
             self.metrics.set_gauge("idle_frac", rec.idle_frac,
                                    engine="async", t_sim=t)
@@ -754,7 +866,7 @@ class AsyncPSEngine:
         busy = float(self._busy_s.sum())
         return max(0.0, 1.0 - busy / (self.config.num_workers * t))
 
-    def _record_admission(self, adm, t, etas, stale) -> None:
+    def _record_admission(self, adm, t, etas, stale, byz_mask) -> None:
         m_tot = self.config.num_workers
         # Steps newly completed since the worker's previous record: exactly
         # one phase lies between its consecutive admissions (or none, when
@@ -785,6 +897,10 @@ class AsyncPSEngine:
             staleness=[int(s) if h else None
                        for s, h in zip(stale, self._heard)],
             idle_frac=self._idle_frac(t),
+            byzantine_workers=(
+                [int(m) for m in adm if byz_mask[m]]
+                if self.byzantine is not None else None
+            ),
         ))
 
     def _record_final(self) -> None:
@@ -943,7 +1059,7 @@ class AsyncPSEngine:
     # ------------------------------------------------------------------
 
     def _ckpt_tree(self) -> dict:
-        return {
+        tree = {
             "worker_state": self._state,
             "ef": self._ef,
             "srv_payload": self._srv_payload,
@@ -968,6 +1084,11 @@ class AsyncPSEngine:
             "rng0": jnp.asarray(self._rng0),
             "worker_fp": jnp.uint32(self.worker.fingerprint),
         }
+        if self._robust is not None:
+            # only when the robust subsystem changes the merge semantics —
+            # plain runs keep the historical checkpoint layout byte-for-byte
+            tree["aggregator_fp"] = jnp.uint32(self.aggregator.fingerprint)
+        return tree
 
     def save(self, path: str) -> None:
         with self.tracer.span("checkpoint-save", cat="checkpoint",
@@ -1000,6 +1121,14 @@ class AsyncPSEngine:
         ):
             raise ValueError(
                 "checkpoint was written by a run with a different seed"
+            )
+        if self._robust is not None and (
+            int(np.asarray(loaded["aggregator_fp"]))
+            != self.aggregator.fingerprint
+        ):
+            raise ValueError(
+                "checkpoint was written by a run with a different robust "
+                "aggregator (the merge semantics would diverge)"
             )
         m = self.config.num_workers
         self._state = loaded["worker_state"]

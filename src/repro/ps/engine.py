@@ -62,6 +62,7 @@ from .compress import (
     dense_bytes,
 )
 from .faults import FaultPolicy, NoFaults
+from .robust import ByzantinePolicy, DPUplink, RobustAggregator, WeightedMean
 from .sampler import ClientSampler
 from .schedule import UniformSchedule, WorkerSchedule
 from .trace import RoundRecord, TraceRecorder
@@ -111,6 +112,38 @@ class PSConfig:
     # Sampled-client rounds: draw sampler.sample of num_workers fleet
     # members per round (None = full participation, the historical path).
     sampler: ClientSampler | None = None
+    # Hostile-fleet subsystem (repro.ps.robust). Any of these switches the
+    # uplink to the unweighted wire format with Line-7 weights applied
+    # server-side; all None (or a zero-budget aggregator) compiles the
+    # identical historical path.
+    byzantine: ByzantinePolicy | None = None  # adversarial uplinks
+    aggregator: RobustAggregator | None = None  # robust server merge
+    dp: DPUplink | None = None               # l2 clip + Gaussian noise
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustPipeline:
+    """The *resolved* hostile-fleet configuration threaded into the chunk
+    builders (and their process-wide cache keys): the attack policy, the
+    static merge spec at the compiled lane width, and the DP transform.
+    ``None`` anywhere means that layer is off; the engines only build a
+    pipeline at all when at least one layer is active."""
+
+    byzantine: ByzantinePolicy | None
+    agg: tuple | None
+    dp: DPUplink | None
+
+
+def resolve_robust(config: PSConfig, lanes: int) -> RobustPipeline | None:
+    """Resolve a config's hostile-fleet fields at compiled lane width
+    ``lanes`` (the sampled width under a ``ClientSampler``, else the
+    fleet). Returns ``None`` — the exact historical path — when no attack,
+    no DP, and the aggregator degrades (``spec(lanes) is None``)."""
+    agg = config.aggregator or WeightedMean()
+    spec = agg.spec(lanes)
+    if config.byzantine is None and spec is None and config.dp is None:
+        return None
+    return RobustPipeline(config.byzantine, spec, config.dp)
 
 
 def _resolve_worker(config: PSConfig) -> LocalWorker:
@@ -204,7 +237,8 @@ def cached_chunk(key: tuple, builder, *, donate: bool = True):
 
 
 def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
-                      num_workers: int, codec_backend: str = "reference"):
+                      num_workers: int, codec_backend: str = "reference",
+                      robust: RobustPipeline | None = None):
     """Line 5–8 on the stacked worker axis: compress(w·payload) per worker,
     server sum, broadcast to survivors. The returned function takes
     ``(state, ef, alive_r, c_rng)``; ``alive_r is None`` means the fault
@@ -222,9 +256,71 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
     Module-level so the event-driven engine can build the *identical*
     program: bit-parity between the engines is shared code, not a
     maintained coincidence.
+
+    ``robust`` (a resolved :class:`RobustPipeline`) swaps in the hostile-
+    fleet round and changes the signature to ``(state, ef, alive_r, c_rng,
+    byz_r)`` — ``byz_r`` the (M,) attacked-lane mask. The wire format
+    becomes *unweighted* (the async engine's native one): attacks and the
+    DP transform corrupt/privatize the raw z̃ payload after local compute,
+    the codec compresses that, and Line-7 weights + the robust aggregation
+    happen server-side in ``sync_merge_stacked(agg=...)`` — order
+    statistics must rank workers' iterates, not their weighted messages.
+    Attack/DP keys fold constants 13/11 off the per-worker codec keys, so
+    both engines (and resumes) corrupt identically.
     """
     comp = compressor
     m = num_workers
+    if robust is not None:
+        from ..kernels.sync_compress.ops import (
+            codec_uplink_stacked,
+            sync_merge_stacked,
+        )
+
+        use_kernel = codec_backend == "fused"
+
+        @jax.named_scope("sync-robust")
+        def sync_stacked_robust(state, ef, alive_r, c_rng, byz_r):
+            sw = jax.vmap(worker.sync_weight)(state)          # (M,)
+            if alive_r is None:
+                w_raw = sw
+                recv = None
+            else:
+                w_raw = jnp.where(alive_r, sw, jnp.zeros_like(sw))
+                any_alive = jnp.sum(w_raw) > 0.0
+                recv = jnp.logical_and(alive_r, any_alive)
+            payload = worker.sync_payload(state)
+            c_rngs = jax.random.split(c_rng, m)
+            uplink = payload
+            if robust.byzantine is not None:
+                a_rngs = jax.vmap(
+                    lambda k: jax.random.fold_in(k, 13)
+                )(c_rngs)
+                uplink = robust.byzantine.apply(uplink, byz_r, a_rngs)
+            if robust.dp is not None:
+                d_rngs = jax.vmap(
+                    lambda k: jax.random.fold_in(k, 11)
+                )(c_rngs)
+                uplink = robust.dp.apply(uplink, d_rngs)
+            if comp.is_identity:
+                sent, ef_new = uplink, ef
+            else:
+                sent, ef_new = codec_uplink_stacked(
+                    uplink, c_rngs, w=None,
+                    ef=ef if comp.error_feedback else None,
+                    alive=alive_r, codec=comp.codec_spec,
+                    use_kernel=use_kernel,
+                )
+                if not comp.error_feedback:
+                    ef_new = ef
+            synced = sync_merge_stacked(
+                sent, w=w_raw, recv=recv,
+                old=None if recv is None else payload,
+                normalize=True, agg=robust.agg, use_kernel=use_kernel,
+            )
+            return worker.merge_synced(state, synced), ef_new
+
+        return sync_stacked_robust
+
     if codec_backend == "fused":
         from ..kernels.sync_compress.ops import (
             codec_uplink_stacked,
@@ -340,6 +436,7 @@ def make_serial_chunk(
     eval_fn,
     no_faults: bool,
     codec_backend: str = "reference",
+    robust: RobustPipeline | None = None,
 ):
     """Build the serial-path round chunk: scan of (sync → K_m^r masked local
     steps) over a leading rounds axis. ``PSEngine`` jits this as its whole
@@ -349,12 +446,16 @@ def make_serial_chunk(
     of the event-driven one (the chunking-invariance test pins that a
     1-round slice equals the full scan).
 
+    With a :class:`RobustPipeline` the chunk signature gains a ``byz``
+    ``(C, M)`` attacked-lane table between ``alive`` and ``counts_cum``.
+
     Returns ``(state, ef, eta_stats, ress)`` where ``eta_stats`` is
     ``(C, 3)`` per-round ``[min, max, mean]`` over the fleet — the
     telemetry reduction happens on device so the per-chunk device→host
     transfer is O(rounds), not O(rounds × fleet)."""
     m = num_workers
-    sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend)
+    sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend,
+                                     robust)
 
     vstep = jax.vmap(
         lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
@@ -363,12 +464,18 @@ def make_serial_chunk(
 
     def round_body(carry, inputs):
         state, ef = carry
-        rng_round, ks_r, alive_r, counts_r = inputs
-
-        state, ef = sync_stacked(
-            state, ef, None if no_faults else alive_r,
-            jax.random.fold_in(rng_round, 7),
-        )
+        if robust is not None:
+            rng_round, ks_r, alive_r, byz_r, counts_r = inputs
+            state, ef = sync_stacked(
+                state, ef, None if no_faults else alive_r,
+                jax.random.fold_in(rng_round, 7), byz_r,
+            )
+        else:
+            rng_round, ks_r, alive_r, counts_r = inputs
+            state, ef = sync_stacked(
+                state, ef, None if no_faults else alive_r,
+                jax.random.fold_in(rng_round, 7),
+            )
 
         # Line 3–4: K_m^r masked local steps.
         step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
@@ -408,12 +515,21 @@ def make_serial_chunk(
                 )
         return (state, ef), (eta_stats, res)
 
-    def chunk(state, ef, round_rngs, ks, alive, counts_cum):
-        _count_trace()
-        (state, ef), (eta_stats, ress) = lax.scan(
-            round_body, (state, ef), (round_rngs, ks, alive, counts_cum)
-        )
-        return state, ef, eta_stats, ress
+    if robust is not None:
+        def chunk(state, ef, round_rngs, ks, alive, byz, counts_cum):
+            _count_trace()
+            (state, ef), (eta_stats, ress) = lax.scan(
+                round_body, (state, ef),
+                (round_rngs, ks, alive, byz, counts_cum),
+            )
+            return state, ef, eta_stats, ress
+    else:
+        def chunk(state, ef, round_rngs, ks, alive, counts_cum):
+            _count_trace()
+            (state, ef), (eta_stats, ress) = lax.scan(
+                round_body, (state, ef), (round_rngs, ks, alive, counts_cum)
+            )
+            return state, ef, eta_stats, ress
 
     return chunk
 
@@ -428,6 +544,7 @@ def make_sampled_chunk(
     eval_fn,
     no_faults: bool,
     codec_backend: str = "reference",
+    robust: RobustPipeline | None = None,
 ):
     """Sampled-client round chunk (partial participation). The fleet store
     stays ``(N, ...)`` in the scan carry; each round gathers the
@@ -442,10 +559,13 @@ def make_sampled_chunk(
     Same return convention as :func:`make_serial_chunk`; ``eta_stats`` is
     reduced over the *sampled* lanes, and ``counts_cum`` rows are fleet-
     shaped ``(N,)`` so the in-chunk residual evaluates the true Line-14
-    z̄ over everyone who has ever participated."""
+    z̄ over everyone who has ever participated. A :class:`RobustPipeline`
+    adds a ``byz`` ``(C, S)`` lane table (gathered onto the drawn lanes)
+    between ``alive`` and ``counts_cum``, like the serial chunk."""
     del fleet  # shapes are carried by the arrays; kept for cache keying
     m = sample
-    sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend)
+    sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend,
+                                     robust)
     vstep = jax.vmap(
         lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
     )
@@ -454,16 +574,25 @@ def make_sampled_chunk(
 
     def round_body(carry, inputs):
         state, ef = carry
-        idx_r, rng_round, ks_r, alive_r, counts_r = inputs
+        if robust is not None:
+            idx_r, rng_round, ks_r, alive_r, byz_r, counts_r = inputs
+        else:
+            idx_r, rng_round, ks_r, alive_r, counts_r = inputs
 
         with jax.named_scope("gather-sampled"):
             sub = jax.tree.map(lambda v: v[idx_r], state)
             sub_ef = jax.tree.map(lambda v: v[idx_r], ef) if has_ef else ef
 
-        sub, sub_ef = sync_stacked(
-            sub, sub_ef, None if no_faults else alive_r,
-            jax.random.fold_in(rng_round, 7),
-        )
+        if robust is not None:
+            sub, sub_ef = sync_stacked(
+                sub, sub_ef, None if no_faults else alive_r,
+                jax.random.fold_in(rng_round, 7), byz_r,
+            )
+        else:
+            sub, sub_ef = sync_stacked(
+                sub, sub_ef, None if no_faults else alive_r,
+                jax.random.fold_in(rng_round, 7),
+            )
 
         step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
             k_pad, m, 2
@@ -510,13 +639,22 @@ def make_sampled_chunk(
                 )
         return (state, ef), (eta_stats, res)
 
-    def chunk(state, ef, idx, round_rngs, ks, alive, counts_cum):
-        _count_trace()
-        (state, ef), (eta_stats, ress) = lax.scan(
-            round_body, (state, ef),
-            (idx, round_rngs, ks, alive, counts_cum),
-        )
-        return state, ef, eta_stats, ress
+    if robust is not None:
+        def chunk(state, ef, idx, round_rngs, ks, alive, byz, counts_cum):
+            _count_trace()
+            (state, ef), (eta_stats, ress) = lax.scan(
+                round_body, (state, ef),
+                (idx, round_rngs, ks, alive, byz, counts_cum),
+            )
+            return state, ef, eta_stats, ress
+    else:
+        def chunk(state, ef, idx, round_rngs, ks, alive, counts_cum):
+            _count_trace()
+            (state, ef), (eta_stats, ress) = lax.scan(
+                round_body, (state, ef),
+                (idx, round_rngs, ks, alive, counts_cum),
+            )
+            return state, ef, eta_stats, ress
 
     return chunk
 
@@ -609,7 +747,7 @@ class PSEngine:
         self.sampler = config.sampler
         if self.sampler is not None:
             if mesh is not None:
-                raise ValueError(
+                raise NotImplementedError(
                     "sampled-client rounds run on the serial path only "
                     "(mesh=None)"
                 )
@@ -633,6 +771,32 @@ class PSEngine:
             ).astype(np.float32)
         else:
             self._draws = None
+
+        # Hostile-fleet subsystem: resolve the attack/aggregator/DP config
+        # at the compiled lane width (the sampled width under a sampler).
+        lanes = self.sampler.sample if self.sampler is not None else m
+        self.aggregator = config.aggregator or WeightedMean()
+        self.byzantine = config.byzantine
+        self.dp = config.dp
+        self._robust = resolve_robust(config, lanes)
+        if self._robust is not None and mesh is not None:
+            raise NotImplementedError(
+                "the hostile-fleet subsystem (byzantine/aggregator/dp) "
+                "runs on the serial path only — robust aggregation needs "
+                "full cross-worker order statistics, not a psum (mesh=None)"
+            )
+        if self.byzantine is not None:
+            self._byz = np.asarray(
+                self.byzantine.attacked(m, r), dtype=bool
+            )
+            if self._byz.shape != (r, m):
+                raise ValueError("byzantine table shape mismatch")
+        else:
+            self._byz = np.zeros((r, m), dtype=bool)
+        self._byz_lane = (
+            np.take_along_axis(self._byz, self._draws, axis=1)
+            if self._draws is not None else None
+        )
 
         # RNG derivation — each worker family keeps its historical stream
         # (AdaSEG: run_local_adaseg's; the zoo: run_local's), so the engine
@@ -669,6 +833,11 @@ class PSEngine:
             **({"sampler": self.sampler.name,
                 "sample": self.sampler.sample}
                if self.sampler is not None else {}),
+            **({"byzantine": self.byzantine.name}
+               if self.byzantine is not None else {}),
+            **({"aggregator": self.aggregator.name,
+                "dp": None if self.dp is None else self.dp.name}
+               if self._robust is not None else {}),
             **(trace_meta or {}),
         })
 
@@ -685,14 +854,14 @@ class PSEngine:
                 key = ("sampled", self.problem, self.worker,
                        self.compressor, m, self.sampler.sample,
                        self._k_pad, self.eval_fn, self._no_faults,
-                       self.codec_backend)
+                       self.codec_backend, self._robust)
                 self._chunk_fn = cached_chunk(
                     key, self._make_sampled_chunk
                 )
             else:
                 key = ("serial", self.problem, self.worker,
                        self.compressor, m, self._k_pad, self.eval_fn,
-                       self._no_faults, self.codec_backend)
+                       self._no_faults, self.codec_backend, self._robust)
                 self._chunk_fn = cached_chunk(
                     key, self._make_serial_chunk
                 )
@@ -713,7 +882,7 @@ class PSEngine:
         return make_serial_chunk(
             self.problem, self.worker, self.compressor,
             self.config.num_workers, self._k_pad, self.eval_fn,
-            self._no_faults, self.codec_backend,
+            self._no_faults, self.codec_backend, self._robust,
         )
 
     def _make_sampled_chunk(self):
@@ -721,6 +890,7 @@ class PSEngine:
             self.problem, self.worker, self.compressor,
             self.config.num_workers, self.sampler.sample, self._k_pad,
             self.eval_fn, self._no_faults, self.codec_backend,
+            self._robust,
         )
 
     def _make_sharded_chunk(self):
@@ -867,22 +1037,26 @@ class PSEngine:
         with self.tracer.span(f"chunk [{r0},{r1})", cat="chunk",
                               rounds=r1 - r0) as chunk_sp:
             if self._draws is not None:
-                state, ef, etas, ress = self._chunk_fn(
+                args = [
                     self._state, self._ef,
                     jnp.asarray(self._draws[sl]),
                     self._round_rngs[sl],
                     jnp.asarray(self._ks_lane[sl]),
                     jnp.asarray(self._alive_lane[sl]),
-                    jnp.asarray(self._counts_cum[sl]),
-                )
+                ]
+                if self._robust is not None:
+                    args.append(jnp.asarray(self._byz_lane[sl]))
             else:
-                state, ef, etas, ress = self._chunk_fn(
+                args = [
                     self._state, self._ef,
                     self._round_rngs[sl],
                     jnp.asarray(self._ks[sl]),
                     jnp.asarray(self._alive[sl]),
-                    jnp.asarray(self._counts_cum[sl]),
-                )
+                ]
+                if self._robust is not None:
+                    args.append(jnp.asarray(self._byz[sl]))
+            args.append(jnp.asarray(self._counts_cum[sl]))
+            state, ef, etas, ress = self._chunk_fn(*args)
             jax.block_until_ready(state)
         self._state, self._ef = state, ef
         self.round = r1
@@ -909,10 +1083,14 @@ class PSEngine:
                 alive = self._alive_lane[r]
                 steps_row = self._eff_lane[r]
                 sampled_workers = self._draws[r].tolist()
+                byz_ids = (self._draws[r][self._byz_lane[r]].tolist()
+                           if self.byzantine is not None else None)
             else:
                 alive = self._alive[r]
                 steps_row = self._eff_steps[r]
                 sampled_workers = None
+                byz_ids = (np.nonzero(self._byz[r])[0].tolist()
+                           if self.byzantine is not None else None)
             n_alive = int(alive.sum())
             eff = int(steps_row.sum())
             res = float(ress[i])
@@ -936,6 +1114,7 @@ class PSEngine:
                 steps_per_sec=eff / per_round_wall if per_round_wall > 0
                 else None,
                 sampled_workers=sampled_workers,
+                byzantine_workers=byz_ids,
             )
             self.trace.record(rec)
             # Round span: the chunk's wall uniformly attributed, carrying
@@ -955,6 +1134,15 @@ class PSEngine:
             self.metrics.inc("local_steps", eff, engine="sync")
             self.metrics.set_gauge("eta_spread", rec.eta_spread,
                                    engine="sync")
+            if self._robust is not None:
+                self.metrics.inc("byzantine_workers",
+                                 len(byz_ids or []), engine="sync")
+                self.metrics.set_gauge(
+                    "agg_reject_frac",
+                    self.aggregator.reject_frac(
+                        len(alive)), engine="sync",
+                    aggregator=self.aggregator.name,
+                )
             # measured round wall next to the traffic model's prediction
             self.metrics.observe(
                 "round_wall_s", per_round_wall, engine="sync",
@@ -1023,6 +1211,10 @@ class PSEngine:
             # be restored into a full-participation engine (or vice versa)
             # because the leaf structure itself differs
             tree["sampler_fp"] = jnp.uint32(self.sampler.fingerprint)
+        if self._robust is not None:
+            # present only for robust runs — the merge semantics (and the
+            # threat model the EF memory accumulated under) must match
+            tree["aggregator_fp"] = jnp.uint32(self.aggregator.fingerprint)
         return tree
 
     def save(self, path: str) -> None:
@@ -1063,6 +1255,13 @@ class PSEngine:
             raise ValueError(
                 "checkpoint was written by a run with a different client "
                 "sampler (the participation tables would diverge)"
+            )
+        if self._robust is not None and int(
+            np.asarray(loaded["aggregator_fp"])
+        ) != self.aggregator.fingerprint:
+            raise ValueError(
+                "checkpoint was written by a run with a different robust "
+                "aggregator (the merge semantics would diverge)"
             )
         self._state = loaded["worker_state"]
         self._ef = loaded["ef"]

@@ -1,0 +1,55 @@
+"""Hostile-fleet subsystem: Byzantine attacks, robust aggregation, DP.
+
+Three composable layers around the honest Parameter-Server round, in wire
+order::
+
+    local steps → [attack] → [DP clip+noise] → codec/EF → robust merge
+
+* :mod:`.byzantine` — ``ByzantinePolicy`` attack models (sign-flip,
+  scaled-noise, zero, collusion), seed-deterministic per-(round, worker)
+  membership tables like the fault/schedule layers.
+* :mod:`.aggregators` — ``RobustAggregator`` server merges (trimmed-mean,
+  coordinate-median, multi-Krum, and the explicit ``WeightedMean``
+  default), resolving to static specs for the fused/reference merge
+  kernels, with checkpointed fingerprints.
+* :mod:`.dp` — ``DPUplink`` per-worker l2 clipping + Gaussian noise,
+  sharing the threefry key machinery with the quantizer.
+
+Selected via ``PSConfig(byzantine=…, aggregator=…, dp=…)`` on both engines
+(the async event machine applies attacks at store time and robust merges at
+admission). One structural consequence is worth knowing: with any robust
+layer active the engines switch the uplink to the *unweighted* wire format
+(the async engine's native one) and apply Line-7 weights server-side, so
+order statistics rank workers' iterates rather than their weighted
+messages; at zero robustness budget (no attack, ``spec(m) is None``, no
+DP) configs compile the identical historical path, bit-exactly.
+"""
+from .aggregators import (
+    CoordinateMedian,
+    MultiKrum,
+    RobustAggregator,
+    TrimmedMean,
+    WeightedMean,
+)
+from .byzantine import (
+    ByzantinePolicy,
+    CollusionAttack,
+    ScaledNoiseAttack,
+    SignFlipAttack,
+    ZeroAttack,
+)
+from .dp import DPUplink
+
+__all__ = [
+    "ByzantinePolicy",
+    "SignFlipAttack",
+    "ScaledNoiseAttack",
+    "ZeroAttack",
+    "CollusionAttack",
+    "RobustAggregator",
+    "WeightedMean",
+    "TrimmedMean",
+    "CoordinateMedian",
+    "MultiKrum",
+    "DPUplink",
+]

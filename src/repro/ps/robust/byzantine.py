@@ -1,0 +1,252 @@
+"""Byzantine worker models: seed-deterministic adversarial uplinks.
+
+``FaultPolicy`` (:mod:`repro.ps.faults`) models workers that *disappear*;
+a ``ByzantinePolicy`` models workers that stay in the round and **lie** —
+they run their local steps honestly but corrupt the z̃ uplink before it
+leaves the worker. The engines apply the attack after local compute and
+*before* compression, so it composes with quantize/top-k codecs and error
+feedback exactly like an honest message would (the server cannot tell the
+difference from the wire format — that is the point).
+
+Like the schedule/fault/latency tables, membership is a pure function of
+``(seed, num_workers, rounds)``: :meth:`ByzantinePolicy.attacked` returns a
+``(rounds, num_workers)`` bool table that engines precompute once and
+re-derive identically on checkpoint resume. The *values* an attacker sends
+are seed-deterministic too: stochastic attacks draw from per-(round, worker)
+keys folded off the same round rng chain as the codec keys, so sync, async,
+and the τ=0 lockstep path corrupt identically.
+
+Attack zoo (the standard Byzantine-robustness menagerie):
+
+* :class:`SignFlipAttack`   — send ``−scale · z̃`` (scale > 1 also inflates).
+* :class:`ScaledNoiseAttack`— send ``z̃ + scale · 𝒩(0, I)``.
+* :class:`ZeroAttack`       — send exact zeros (a silent dropout that,
+  unlike a crash, still counts toward the weighted mean).
+* :class:`CollusionAttack`  — all attackers send the *same* vector,
+  ``−eps ×`` the honest lanes' mean: the colluding inner-product attack
+  that single-outlier defenses (Krum with small f) struggle with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bcast(v, leaf):
+    """(M,) per-worker scalar → broadcastable against a stacked leaf."""
+    return v.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+class ByzantinePolicy:
+    """Protocol for Byzantine attack models (the adversarial sibling of
+    ``FaultPolicy``).
+
+    Subclasses are frozen dataclasses carrying ``fraction`` (of the fleet
+    that is adversarial), ``seed`` (membership draw), and ``per_round``
+    (False = a fixed adversarial subset for the whole run — the classic
+    static adversary; True = re-drawn each round). They implement
+    :meth:`apply`; membership tables come from :meth:`attacked` here.
+
+    Examples
+    --------
+    Membership is a deterministic ``(rounds, workers)`` bool table:
+
+    >>> import numpy as np
+    >>> from repro.ps.robust import SignFlipAttack
+    >>> pol = SignFlipAttack(fraction=0.4, seed=3)
+    >>> t = pol.attacked(num_workers=5, rounds=3)
+    >>> t.shape, t.dtype == np.bool_, int(t[0].sum())
+    ((3, 5), True, 2)
+    >>> bool(np.array_equal(t, pol.attacked(5, 3)))
+    True
+    """
+
+    fraction: float = 0.0
+    seed: int = 0
+    per_round: bool = False
+
+    def count(self, num_workers: int) -> int:
+        """Adversarial lanes per round: ``round(fraction · M)``, capped."""
+        return min(num_workers, int(round(float(self.fraction)
+                                          * num_workers)))
+
+    def attacked(self, num_workers: int, rounds: int) -> np.ndarray:
+        """Deterministic ``(rounds, num_workers)`` bool membership table."""
+        out = np.zeros((rounds, num_workers), dtype=bool)
+        n = self.count(num_workers)
+        if n == 0:
+            return out
+        rng = np.random.default_rng(self.seed)
+        if self.per_round:
+            for r in range(rounds):
+                out[r, rng.choice(num_workers, size=n, replace=False)] = True
+        else:
+            out[:, rng.choice(num_workers, size=n, replace=False)] = True
+        return out
+
+    def apply(self, payload, mask, rngs):
+        """Corrupt the stacked uplink: ``payload`` is a worker-stacked
+        pytree (leading axis M), ``mask`` (M,) bool selects the attackers
+        this round, ``rngs`` (M, 2) per-worker keys for stochastic
+        attacks. Honest lanes pass through bit-unchanged."""
+        raise NotImplementedError
+
+    @property
+    def name(self) -> str:
+        raise NotImplementedError
+
+    @property
+    def fingerprint(self) -> int:
+        """crc32 of the canonical description — checkpointed like the
+        worker/sampler fingerprints so a resume cannot silently swap the
+        threat model."""
+        return zlib.crc32(self.name.encode()) & 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class SignFlipAttack(ByzantinePolicy):
+    """Attackers send ``−scale · z̃``. ``scale=1`` is the pure sign flip;
+    ``scale>1`` additionally inflates the magnitude (the variant that makes
+    an unprotected weighted mean diverge rather than merely stall).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.ps.robust import SignFlipAttack
+    >>> pol = SignFlipAttack(fraction=0.5, scale=2.0)
+    >>> z = {"p": jnp.array([[1.0, -2.0], [3.0, 4.0]])}
+    >>> mask = jnp.array([True, False])
+    >>> out = pol.apply(z, mask, None)
+    >>> out["p"].tolist()
+    [[-2.0, 4.0], [3.0, 4.0]]
+    """
+
+    fraction: float
+    scale: float = 1.0
+    seed: int = 0
+    per_round: bool = False
+
+    @property
+    def name(self) -> str:
+        return (f"sign_flip(fraction={self.fraction},scale={self.scale},"
+                f"seed={self.seed},per_round={self.per_round})")
+
+    def apply(self, payload, mask, rngs):
+        m = jnp.asarray(mask)
+        return jax.tree.map(
+            lambda z: jnp.where(_bcast(m, z), -jnp.float32(self.scale) * z,
+                                z).astype(z.dtype),
+            payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledNoiseAttack(ByzantinePolicy):
+    """Attackers send ``z̃ + scale · 𝒩(0, I)`` — large isotropic noise
+    drawn from the per-(round, worker) keys, so reruns and resumes corrupt
+    identically.
+
+    >>> import jax, jax.numpy as jnp, numpy as np
+    >>> from repro.ps.robust import ScaledNoiseAttack
+    >>> pol = ScaledNoiseAttack(fraction=0.5, scale=10.0)
+    >>> z = {"p": jnp.zeros((2, 3))}
+    >>> rngs = jax.random.split(jax.random.PRNGKey(0), 2)
+    >>> out = pol.apply(z, jnp.array([True, False]), rngs)
+    >>> bool(np.all(out["p"][1] == 0)), bool(np.any(out["p"][0] != 0))
+    (True, True)
+    """
+
+    fraction: float
+    scale: float = 10.0
+    seed: int = 0
+    per_round: bool = False
+
+    @property
+    def name(self) -> str:
+        return (f"scaled_noise(fraction={self.fraction},scale={self.scale},"
+                f"seed={self.seed},per_round={self.per_round})")
+
+    def apply(self, payload, mask, rngs):
+        leaves, treedef = jax.tree.flatten(payload)
+        keys = jax.vmap(lambda k: jax.random.split(k, len(leaves)))(
+            jnp.asarray(rngs))                            # (M, L, 2)
+        mv = jnp.asarray(mask)
+        outs = []
+        for li, z in enumerate(leaves):
+            noise = jax.vmap(
+                lambda k, zz: jax.random.normal(k, zz.shape, jnp.float32)
+            )(keys[:, li], z)
+            bad = z + jnp.float32(self.scale) * noise.astype(z.dtype)
+            outs.append(jnp.where(_bcast(mv, z), bad, z).astype(z.dtype))
+        return treedef.unflatten(outs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZeroAttack(ByzantinePolicy):
+    """Attackers send exact zeros — unlike a crash fault their weight stays
+    in the merge, silently dragging the weighted mean toward the origin.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.ps.robust import ZeroAttack
+    >>> out = ZeroAttack(fraction=0.5).apply(
+    ...     {"p": jnp.ones((2, 2))}, jnp.array([False, True]), None)
+    >>> out["p"].tolist()
+    [[1.0, 1.0], [0.0, 0.0]]
+    """
+
+    fraction: float
+    seed: int = 0
+    per_round: bool = False
+
+    @property
+    def name(self) -> str:
+        return (f"zero(fraction={self.fraction},seed={self.seed},"
+                f"per_round={self.per_round})")
+
+    def apply(self, payload, mask, rngs):
+        m = jnp.asarray(mask)
+        return jax.tree.map(
+            lambda z: jnp.where(_bcast(m, z), jnp.zeros_like(z), z),
+            payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollusionAttack(ByzantinePolicy):
+    """Colluding inner-product attack: every attacker sends the *same*
+    vector, ``−eps ×`` the mean of the honest lanes' messages. The
+    attackers sit in a tight cluster (mutually distance 0), the shape that
+    defeats per-lane outlier tests and stresses Krum's neighbor count.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.ps.robust import CollusionAttack
+    >>> z = {"p": jnp.array([[2.0, 0.0], [0.0, 2.0], [9.0, 9.0]])}
+    >>> out = CollusionAttack(fraction=1 / 3, eps=1.0).apply(
+    ...     z, jnp.array([False, False, True]), None)
+    >>> out["p"].tolist()   # attacker sends −mean of the two honest rows
+    [[2.0, 0.0], [0.0, 2.0], [-1.0, -1.0]]
+    """
+
+    fraction: float
+    eps: float = 1.0
+    seed: int = 0
+    per_round: bool = False
+
+    @property
+    def name(self) -> str:
+        return (f"collusion(fraction={self.fraction},eps={self.eps},"
+                f"seed={self.seed},per_round={self.per_round})")
+
+    def apply(self, payload, mask, rngs):
+        mv = jnp.asarray(mask)
+        honest = (~mv).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(honest), 1.0)
+
+        def one(z):
+            hm = jnp.sum(_bcast(honest, z).astype(z.dtype) * z, axis=0,
+                         keepdims=True) / denom.astype(z.dtype)
+            bad = jnp.broadcast_to(-jnp.float32(self.eps).astype(z.dtype)
+                                   * hm, z.shape)
+            return jnp.where(_bcast(mv, z), bad, z).astype(z.dtype)
+
+        return jax.tree.map(one, payload)

@@ -34,8 +34,11 @@ from typing import Any
 #: stamp the file with an explicit ``version`` key; loaders treat a missing
 #: key as 1, the oldest vintage — safe, since every post-v1 field is
 #: optional anyway. 6 adds sampled-client participation: a per-record
-#: ``sampled_workers`` id list plus ``sampler``/``sample`` meta keys.
-TRACE_VERSION = 6
+#: ``sampled_workers`` id list plus ``sampler``/``sample`` meta keys. 7 adds
+#: the hostile-fleet story: a per-record ``byzantine_workers`` id list plus
+#: ``byzantine``/``aggregator``/``dp`` meta keys (v6 traces still load —
+#: every new field is optional).
+TRACE_VERSION = 7
 
 
 @dataclasses.dataclass
@@ -74,6 +77,10 @@ class RoundRecord:
     # above (local_steps/alive/staleness) are per *sampled lane*, length
     # meta["sample"], aligned with these ids
     sampled_workers: list | None = None
+    # --- hostile-fleet rounds (v7); None = no Byzantine policy configured --
+    # fleet ids of the workers whose uplink was adversarially corrupted this
+    # round (empty list = policy active but nobody attacked this round)
+    byzantine_workers: list | None = None
 
     @property
     def eta_spread(self) -> float:

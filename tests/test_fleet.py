@@ -307,7 +307,7 @@ def test_trace_v6_roundtrip_and_v5_compat(game, tmp_path):
     path = str(tmp_path / "v6.json")
     eng.trace.save(path)
     back = TraceRecorder.load(path)
-    assert back.version == TRACE_VERSION == 6
+    assert back.version == TRACE_VERSION == 7
     assert back.meta["sampler"] == "sample4-uniform-seed1"
     assert back.rounds[0].sampled_workers == eng.trace.rounds[0].sampled_workers
 

@@ -175,6 +175,62 @@ def test_sampler_weighted_marginals():
     np.testing.assert_allclose(freq, expect, atol=0.02)
 
 
+# --- Byzantine attack-table properties ---------------------------------------
+
+@st.composite
+def _attacks(draw):
+    from repro.ps import (
+        CollusionAttack,
+        ScaledNoiseAttack,
+        SignFlipAttack,
+        ZeroAttack,
+    )
+
+    cls = draw(st.sampled_from([SignFlipAttack, ScaledNoiseAttack,
+                                ZeroAttack, CollusionAttack]))
+    policy = cls(
+        fraction=draw(st.floats(0.0, 1.0, allow_nan=False)),
+        seed=draw(st.integers(0, 2**31 - 1)),
+        per_round=draw(st.booleans()),
+    )
+    return policy, draw(st.integers(1, 16)), draw(st.integers(1, 20))
+
+
+@given(_attacks())
+@settings(max_examples=80, deadline=None)
+def test_byzantine_table_reproducible_shaped_and_bounded(case):
+    """The attack-membership law the engines (and checkpoint resume)
+    rely on: ``attacked`` is a pure function of (seed, fraction,
+    per_round) with shape (rounds, workers), and every round corrupts
+    exactly ``count(m) = min(m, round(fraction·m))`` workers — the
+    configured attack fraction is a hard bound, not an expectation."""
+    policy, workers, rounds = case
+    a = np.asarray(policy.attacked(workers, rounds))
+    b = np.asarray(policy.attacked(workers, rounds))   # re-derived on resume
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (rounds, workers)
+    assert a.dtype == bool
+    want = policy.count(workers)
+    assert want <= workers
+    assert (a.sum(axis=1) == want).all()
+    if not policy.per_round:
+        # fixed conspiracy: the same subset every round
+        assert (a == a[0]).all()
+
+
+@given(_attacks())
+@settings(max_examples=30, deadline=None)
+def test_byzantine_fingerprint_separates_laws(case):
+    policy, _, _ = case
+    import dataclasses as dc
+
+    same = dc.replace(policy)
+    bumped = dc.replace(policy, seed=policy.seed + 1)
+    assert policy.fingerprint == same.fingerprint
+    assert policy.fingerprint != bumped.fingerprint
+    assert policy.name == same.name
+
+
 # --- HLO parser properties ---------------------------------------------------
 
 def test_iota_replica_groups_decode():
