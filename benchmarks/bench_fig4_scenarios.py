@@ -37,11 +37,15 @@ from repro.core import AdaSEGConfig
 from repro.optim import MinimaxWorker, adam_minimax, asmp, segda, sgda, ump
 from repro.problems import make_bilinear_game
 from repro.ps import (
+    AsyncPSConfig,
+    AsyncPSEngine,
     BernoulliFaults,
+    ConstantLatency,
     CoordinateMedian,
     ElasticSchedule,
     PSConfig,
     PSEngine,
+    ServerNesterov,
     SignFlipAttack,
     StochasticQuantizeCompressor,
     StragglerSchedule,
@@ -198,13 +202,75 @@ def check_adversarial(matrix: dict) -> dict:
     return checks
 
 
+# -- PR 10: two-level optimization under hostility ---------------------------
+
+def run_outer(seed: int = 0) -> dict:
+    """Outer Nesterov vs plain 1/η merging — the ROADMAP item-2 question —
+    under the full hostile stack: Dirichlet-heterogeneous data (α=0.4), a
+    3× straggler on the async engine with bounded staleness τ=2, and a
+    Byzantine sign-flip fraction ∈ {0, 0.2} behind a trimmed-mean(0.2)
+    merge. Each cell is one LocalAdaSEG run; rows are
+    ``f{fraction}.{plain|nesterov}`` with the final residual and the
+    simulated time-to-target (first admission at or under the *plain*
+    merge's final residual under the same attack — plain's own cell is
+    its total simulated time by construction)."""
+    game = make_bilinear_game(jax.random.PRNGKey(seed), n=N, sigma=0.1)
+    problem = heterogeneous_bilinear(game, BM, jax.random.PRNGKey(seed + 7),
+                                     alpha=0.4)
+    latency = ConstantLatency(step_s=(1.0,) * (BM - 1) + (3.0,),
+                              up_s=0.2, down_s=0.1)
+    attacks = {
+        "f0": None,
+        "f0.2": SignFlipAttack(fraction=0.2, scale=8.0, seed=seed + 11),
+    }
+    # gentle momentum: heavy DiLoCo-style β=0.9 overshoots on the bilinear
+    # saddle at this horizon; β=0.3 filters staleness noise without it
+    servers = {
+        "plain": None,
+        "nesterov": ServerNesterov(lr=1.0, beta=0.3),
+    }
+    out: dict = {}
+    for fname, attack in attacks.items():
+        traces = {}
+        for sname, server in servers.items():
+            cfg = AsyncPSConfig(
+                adaseg=AdaSEGConfig(g0=1.0, diameter=D, alpha=1.0, k=BK),
+                num_workers=BM, rounds=BR,
+                latency=latency, staleness_bound=2,
+                byzantine=attack,
+                aggregator=TrimmedMean(beta=0.2) if attack else None,
+                server_opt=server,
+            )
+            eng = AsyncPSEngine(problem, cfg,
+                                rng=jax.random.PRNGKey(seed + 1),
+                                eval_fn=game.residual)
+            res = float(game.residual(eng.run()))
+            traces[sname] = (res, eng.trace)
+        target = traces["plain"][0]
+        for sname, (res, tr) in traces.items():
+            ttt = tr.time_to_residual(target)
+            out[f"{fname}.{sname}"] = {
+                "residual": res,
+                "sim_time_s": tr.sim_time_s,
+                "time_to_plain_residual_s": ttt,
+            }
+            emit(f"fig4o[{fname},{sname}]",
+                 tr.total_wall_time_s * 1e6,
+                 f"residual={res:.4f};sim_time={tr.sim_time_s:.1f};"
+                 f"ttt={ttt if ttt is None else round(ttt, 1)}")
+    return out
+
+
 def main() -> None:
     matrix = run_adversarial()
     checks = check_adversarial(matrix)
     assert checks["median_within_2x"] and checks["trimmed_within_2x"], checks
     assert checks["mean_stalls"], checks
+    outer = run_outer()
+    assert all(np.isfinite(c["residual"]) for c in outer.values()), outer
     persist_trajectory("fig4", {
         "matrix": matrix,
+        "outer": outer,
         "workers": BM,
         "byzantine_fraction": 0.2,
     })

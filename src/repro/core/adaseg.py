@@ -208,7 +208,8 @@ def local_step(
 # ---------------------------------------------------------------------------
 
 def sync_weighted_stacked(z_tilde: PyTree, inv_eta: jax.Array, *,
-                          backend: str = "reference") -> PyTree:
+                          backend: str = "reference",
+                          server=None, srv=None):
     """Weighted average over a leading worker axis; returns the average
     broadcast back to every worker (axis preserved).
 
@@ -217,7 +218,36 @@ def sync_weighted_stacked(z_tilde: PyTree, inv_eta: jax.Array, *,
     normalization, the weighted sum over workers and the broadcast back run
     as one read + one write of the stacked fleet payload per leaf, instead
     of the scale/sum/broadcast tree passes here.
+
+    ``server``/``srv`` compose the server-side outer optimizer
+    (:mod:`repro.ps.server_opt`) downstream of the merge: the Line-7
+    weighted mean becomes the pseudo-gradient Δ against the server anchor
+    ``srv = (z, moments, t)``, the outer update runs (fused under
+    ``backend="fused"``), and the *post-step* anchor is broadcast instead
+    of the raw mean. The return value then grows to
+    ``(synced, srv_new, telem)`` with ``telem = [eff_lr, ‖Δ‖]``; both
+    ``None`` (the default) keeps the historical single-pytree return.
     """
+    if server is not None:
+        from ..kernels.sync_compress.ops import (
+            server_outer_apply,
+            sync_merge_stacked,
+        )
+
+        merged = sync_merge_stacked(
+            z_tilde, inv_eta, normalize=True,
+            use_kernel=backend == "fused",
+        )
+        z, mom, t = srv
+        merged_row = jax.tree.map(lambda v: v[:1], merged)
+        z_new, mom_new, t_new, eff_lr, dn = server_outer_apply(
+            merged_row, z, mom, t, spec=server.spec,
+            use_kernel=backend == "fused",
+        )
+        synced = jax.tree.map(
+            lambda v, old: jnp.broadcast_to(v, old.shape), z_new, z_tilde
+        )
+        return synced, (z_new, mom_new, t_new), jnp.stack([eff_lr, dn])
     if backend == "fused":
         from ..kernels.sync_compress.ops import sync_merge_stacked
 

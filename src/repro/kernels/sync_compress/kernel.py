@@ -237,6 +237,56 @@ def _merge_kernel(*refs, m, normalize, has_w, has_recv):
     out_ref[...] = merged.astype(out_ref.dtype)
 
 
+def _outer_kernel(*refs, spec, slots):
+    """Server outer-optimizer pass: form Δ = merged − z and apply one
+    moment update + step of the static ``spec`` policy in-register — one
+    read of (merged, z, moments), one write of (z′, moments′) per tile,
+    the single extra HBM pass the two-level scheme costs. The per-tile
+    ``Σ Δ²`` lands in an SMEM accumulator for the ‖Δ‖ telemetry. Exact
+    expression sequence of :func:`.ref.outer_apply_ref`."""
+    it = iter(refs)
+    t_ref = next(it)
+    g_ref = next(it)
+    z_ref = next(it)
+    mom_refs = [next(it) for _ in range(slots)]
+    z_out_ref = next(it)
+    mom_out_refs = [next(it) for _ in range(slots)]
+    acc_ref = next(it)
+
+    kind = spec[0]
+    g = g_ref[...].astype(jnp.float32)
+    zz = z_ref[...].astype(jnp.float32)
+    d = g - zz
+    if kind == "momentum":
+        _, lr, beta = spec
+        m_new = (jnp.float32(beta) * mom_refs[0][...].astype(jnp.float32)
+                 + d)
+        z_new = zz + jnp.float32(lr) * m_new
+        mom_new = (m_new,)
+    elif kind == "nesterov":
+        _, lr, beta = spec
+        m_new = (jnp.float32(beta) * mom_refs[0][...].astype(jnp.float32)
+                 + d)
+        z_new = zz + jnp.float32(lr) * (d + jnp.float32(beta) * m_new)
+        mom_new = (m_new,)
+    else:                                               # adam
+        _, lr, b1, b2, eps = spec
+        t_new = t_ref[0, 0] + 1.0
+        m_new = (jnp.float32(b1) * mom_refs[0][...].astype(jnp.float32)
+                 + jnp.float32(1.0 - b1) * d)
+        v_new = (jnp.float32(b2) * mom_refs[1][...].astype(jnp.float32)
+                 + jnp.float32(1.0 - b2) * d * d)
+        m_hat = m_new / (1.0 - jnp.float32(b1) ** t_new)
+        v_hat = v_new / (1.0 - jnp.float32(b2) ** t_new)
+        z_new = zz + jnp.float32(lr) * m_hat / (jnp.sqrt(v_hat)
+                                                + jnp.float32(eps))
+        mom_new = (m_new, v_new)
+    z_out_ref[...] = z_new.astype(z_out_ref.dtype)
+    for out_ref, mn in zip(mom_out_refs, mom_new):
+        out_ref[...] = mn.astype(out_ref.dtype)
+    acc_ref[0, 0] = jnp.sum(d * d)
+
+
 # ---------------------------------------------------------------------------
 # Per-leaf entry points: worker-stacked flat (M, n) leaves; pytree
 # composition and the reference/fused switch live in ops.py.
@@ -433,3 +483,46 @@ def trimmed_merge_stacked(z, w, incl, recv=None, old=None, *, trim: int,
         interpret=interpret,
     )(*args)
     return out[:, :n]
+
+
+def outer_apply(merged, z, mom, t, *, spec, block: int = 4096,
+                interpret: bool = False):
+    """Fused server outer-optimizer step on one server leaf ``(1, n)``:
+    Δ = merged − z, one moment update + apply of the static ``spec``
+    policy (``repro.ps.server_opt`` tuples), all in-register on the same
+    ``(nb,)``-grid full-row tiles as :func:`merge_stacked`.
+
+    ``mom`` is the tuple of moment leaves (matched to the policy's slot
+    count), ``t`` the f32 round count before this step (SMEM scalar —
+    only adam's bias correction reads it). Returns
+    ``(z_new, mom_new, delta_sq)`` with ``delta_sq = Σ Δ²`` reduced from
+    the per-tile SMEM accumulator. Padding is zero-filled on every input,
+    so pad lanes contribute exact zeros to moments, step and Δ² alike.
+    """
+    m, n = z.shape
+    nb = (n + (-n) % block) // block
+    slots = len(mom)
+    full_spec = pl.BlockSpec((m, block), lambda j: (0, j))
+    t_spec = pl.BlockSpec((1, 1), lambda j: (0, 0),
+                          memory_space=pltpu.SMEM)
+    acc_spec = pl.BlockSpec((1, 1), lambda j: (0, j),
+                            memory_space=pltpu.SMEM)
+    args = [jnp.asarray(t, jnp.float32).reshape(1, 1),
+            _tile_rows(merged, block), _tile_rows(z, block)]
+    args += [_tile_rows(mm, block) for mm in mom]
+    out_shape = [jax.ShapeDtypeStruct((m, nb * block), z.dtype)]
+    out_shape += [jax.ShapeDtypeStruct((m, nb * block), mm.dtype)
+                  for mm in mom]
+    out_shape.append(jax.ShapeDtypeStruct((1, nb), jnp.float32))
+    kernel = functools.partial(_outer_kernel, spec=spec, slots=slots)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[t_spec] + [full_spec] * (2 + slots),
+        out_specs=[full_spec] * (1 + slots) + [acc_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+    z_new = outs[0][:, :n]
+    mom_new = tuple(o[:, :n] for o in outs[1:1 + slots])
+    return z_new, mom_new, jnp.sum(outs[-1])

@@ -59,6 +59,7 @@ from .kernel import (
     eff_uplink,
     mask_uplink,
     merge_stacked,
+    outer_apply,
     quantize_uplink,
     trimmed_merge_stacked,
     uplink_stats,
@@ -329,6 +330,80 @@ def sync_merge_stacked(z, w=None, recv=None, old=None, *, normalize=False,
                                   old=o2)
         outs.append(out2.reshape(shape))
     return treedef.unflatten(outs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "use_kernel", "block"))
+def server_outer_apply(merged, z, mom, t, *, spec, use_kernel=True,
+                       block=4096):
+    """The server's outer-optimizer step on pytrees: per leaf, form the
+    round delta Δ = merged − z and apply one fused moment update + step of
+    the static ``spec`` policy (``repro.ps.server_opt`` tuples) — one
+    extra HBM pass over the merged server anchor, downstream of whatever
+    (robust) merge produced it.
+
+    ``merged``/``z`` are server-space pytrees (leading axis 1), ``mom`` a
+    tuple of z-shaped moment trees (1 for momentum/nesterov, 2 for adam),
+    ``t`` the int32 count of outer steps taken so far. Returns
+    ``(z_new, mom_new, t_new, eff_lr, delta_norm)`` where ``eff_lr`` is
+    the policy's effective step size this round (adam: bias-correction
+    folded in) and ``delta_norm = ‖Δ‖₂`` over all leaves — the trace
+    telemetry pair.
+
+    Examples
+    --------
+    Nesterov's first step moves by lr·(1+β)·Δ off a zero moment:
+
+    >>> import jax.numpy as jnp, numpy as np
+    >>> from repro.kernels.sync_compress.ops import server_outer_apply
+    >>> z = {"p": jnp.zeros((1, 3))}
+    >>> merged = {"p": jnp.array([[1.0, -2.0, 0.5]])}
+    >>> mom = ({"p": jnp.zeros((1, 3))},)
+    >>> zn, mn, tn, lr, dn = server_outer_apply(
+    ...     merged, z, mom, jnp.int32(0), spec=("nesterov", 0.5, 0.8))
+    >>> bool(np.allclose(zn["p"], 0.5 * 1.8 * merged["p"], rtol=1e-6))
+    True
+    >>> float(lr), int(tn)
+    (0.5, 1)
+    >>> bool(np.allclose(dn, jnp.sqrt(jnp.sum(merged["p"] ** 2))))
+    True
+    """
+    interp = not _on_tpu()
+    z_leaves, treedef = jax.tree.flatten(z)
+    g_leaves = treedef.flatten_up_to(merged)
+    mom_leaves = [treedef.flatten_up_to(mm) for mm in mom]
+    t_f = jnp.asarray(t, jnp.float32)
+    z_new_l = []
+    mom_new_l = [[] for _ in mom]
+    dsq = jnp.float32(0.0)
+    for i, (g, zl) in enumerate(zip(g_leaves, z_leaves)):
+        shape = zl.shape
+        g2, z2 = _flat2(g), _flat2(zl)
+        m2 = tuple(_flat2(ml[i]) for ml in mom_leaves)
+        n = z2.shape[1]
+        if use_kernel:
+            zn2, mn2, ds = outer_apply(
+                g2, z2, m2, t_f, spec=spec,
+                block=_leaf_block(block, n, interp), interpret=interp,
+            )
+        else:
+            zn2, mn2, ds = _ref.outer_apply_ref(g2, z2, m2, t_f, spec=spec)
+        z_new_l.append(zn2.reshape(shape))
+        for s, mn in enumerate(mn2):
+            mom_new_l[s].append(mn.reshape(shape))
+        dsq = dsq + ds
+    t_new = jnp.asarray(t, jnp.int32) + 1
+    if spec[0] == "adam":
+        _, lr, b1, b2, _ = spec
+        tf = t_new.astype(jnp.float32)
+        eff_lr = (jnp.float32(lr)
+                  * jnp.sqrt(1.0 - jnp.float32(b2) ** tf)
+                  / (1.0 - jnp.float32(b1) ** tf))
+    else:
+        eff_lr = jnp.float32(spec[1])
+    return (treedef.unflatten(z_new_l),
+            tuple(treedef.unflatten(l) for l in mom_new_l),
+            t_new, eff_lr, jnp.sqrt(dsq))
 
 
 # ---------------------------------------------------------------------------

@@ -198,6 +198,49 @@ def trimmed_merge_ref(z, w, incl, *, trim, recv=None, old=None):
     return jnp.where(keep_rows, merged, z if old is None else old)
 
 
+def outer_apply_ref(merged, z, mom, t, *, spec):
+    """Reference for the fused server *outer-optimizer* pass on one server
+    leaf ``(1, n)``: form the round delta ``Δ = merged − z`` and apply one
+    moment update + step of the policy in ``spec`` (the static tuples of
+    ``repro.ps.server_opt``) — exact expression sequence of the Pallas
+    kernel (f32 math, same order of operations).
+
+    ``mom`` is the tuple of moment leaves (1 for momentum/nesterov, 2 for
+    adam), ``t`` the f32 round count *before* this step (adam bias
+    correction uses ``t + 1``). Returns ``(z_new, mom_new, delta_sq)``
+    where ``delta_sq = Σ Δ²`` is this leaf's contribution to ‖Δ‖².
+    """
+    kind = spec[0]
+    g = merged.astype(jnp.float32)
+    zz = z.astype(jnp.float32)
+    d = g - zz
+    if kind == "momentum":
+        _, lr, beta = spec
+        m_new = jnp.float32(beta) * mom[0].astype(jnp.float32) + d
+        z_new = zz + jnp.float32(lr) * m_new
+        mom_new = (m_new.astype(mom[0].dtype),)
+    elif kind == "nesterov":
+        _, lr, beta = spec
+        m_new = jnp.float32(beta) * mom[0].astype(jnp.float32) + d
+        z_new = zz + jnp.float32(lr) * (d + jnp.float32(beta) * m_new)
+        mom_new = (m_new.astype(mom[0].dtype),)
+    elif kind == "adam":
+        _, lr, b1, b2, eps = spec
+        t_new = t + 1.0
+        m_new = (jnp.float32(b1) * mom[0].astype(jnp.float32)
+                 + jnp.float32(1.0 - b1) * d)
+        v_new = (jnp.float32(b2) * mom[1].astype(jnp.float32)
+                 + jnp.float32(1.0 - b2) * d * d)
+        m_hat = m_new / (1.0 - jnp.float32(b1) ** t_new)
+        v_hat = v_new / (1.0 - jnp.float32(b2) ** t_new)
+        z_new = zz + jnp.float32(lr) * m_hat / (jnp.sqrt(v_hat)
+                                                + jnp.float32(eps))
+        mom_new = (m_new.astype(mom[0].dtype), v_new.astype(mom[1].dtype))
+    else:
+        raise ValueError(f"unknown server-opt spec {spec!r}")
+    return z_new.astype(z.dtype), mom_new, jnp.sum(d * d)
+
+
 def merge_ref(z, w=None, *, normalize=False, recv=None, old=None):
     """Reference for the fused server merge on one worker-stacked leaf
     ``(M, n)``: weighted sum over workers, broadcast back — with the weight

@@ -108,6 +108,27 @@ still runs the *same compiled chunk* as the sync engine). At zero
 robustness budget the historical bit-exact paths are compiled unchanged;
 checkpoints gain an ``aggregator_fp`` so a resume can't silently switch
 merge semantics (``tests/test_robust_agg.py``).
+
+Fifth axis — **two-level optimization** (``ps.server_opt``): the server
+stops being a passive averager. ``PSConfig(server_opt=…)`` treats each
+round's merged delta Δ = merge(z̃) − z_server as a pseudo-gradient and
+runs an outer optimizer over it — :class:`ServerMomentum`,
+:class:`ServerNesterov` (DiLoCo's choice), or :class:`ServerAdam`
+(FedOpt's FedAdam) — broadcasting the *post-step* server anchor instead
+of the raw mean. The outer step runs **downstream** of the robust
+aggregators and the fused merge kernel, with a fused Pallas variant that
+keeps the moment update + apply in-register (one extra HBM pass over the
+merged leaf) and a bit-exact reference twin; the async engine applies it
+per admission (τ=0 lockstep shares the sync engine's compiled chunk).
+Checkpoints serialize the outer moments plus a ``server_opt_fp``
+fingerprint; ``server_opt=None`` / :class:`NoServerOpt` compiles the
+historical Line-7 broadcast byte-identically (``tests/test_server_opt.py``).
+
+    >>> from repro.ps import NoServerOpt, ServerNesterov
+    >>> NoServerOpt().spec is None
+    True
+    >>> ServerNesterov(lr=0.5).spec
+    ('nesterov', 0.5, 0.9)
 """
 from ..core.worker import AdaSEGWorker, LocalWorker
 from ..models.worker import ModelWorker
@@ -151,6 +172,14 @@ from .partition import (
     heterogeneous_wgan,
     heterogenize,
 )
+from .server_opt import (
+    NoServerOpt,
+    ServerAdam,
+    ServerMomentum,
+    ServerNesterov,
+    ServerOptimizer,
+    resolve_server_opt,
+)
 from .schedule import (
     ElasticSchedule,
     FixedSchedule,
@@ -183,12 +212,17 @@ __all__ = [
     "ModelWorker",
     "MultiKrum",
     "NoFaults",
+    "NoServerOpt",
     "OutageFaults",
     "PSConfig",
     "PSEngine",
     "RobustAggregator",
     "RoundRecord",
     "ScaledNoiseAttack",
+    "ServerAdam",
+    "ServerMomentum",
+    "ServerNesterov",
+    "ServerOptimizer",
     "SignFlipAttack",
     "TraceLatency",
     "StochasticQuantizeCompressor",
@@ -208,4 +242,5 @@ __all__ = [
     "heterogeneous_wgan",
     "heterogenize",
     "make_compressed_psum_sync",
+    "resolve_server_opt",
 ]

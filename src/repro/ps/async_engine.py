@@ -93,6 +93,7 @@ from ..obs import MetricsRegistry, SpanTracer, modeled_sync_cost
 from .faults import NoFaults
 from .latency import ConstantLatency, LatencyModel
 from .robust import WeightedMean
+from .server_opt import NoServerOpt, resolve_server_opt
 from .trace import RoundRecord, TraceRecorder
 
 PyTree = Any
@@ -230,6 +231,14 @@ class AsyncPSEngine:
         self.byzantine = config.byzantine
         self.dp = config.dp
         self._robust = resolve_robust(config, m)
+        # Server-side outer optimizer (DiLoCo/FedOpt): in the event-driven
+        # engine the outer step runs once per *admission* — Δ is the change
+        # of the staleness-weighted table average between consecutive
+        # admissions, so partial batches take smaller, more frequent outer
+        # steps while a τ=0 lockstep fleet reproduces the synchronous
+        # engine's per-round cadence through the shared chunk.
+        self.server_opt = config.server_opt or NoServerOpt()
+        self._server = resolve_server_opt(config)
         if self.byzantine is not None:
             self._byz = np.asarray(
                 self.byzantine.attacked(m, r), dtype=bool
@@ -259,6 +268,17 @@ class AsyncPSEngine:
         self._srv_sw = np.zeros((m,), np.float32)
         self._srv_version = np.full((m,), -1, np.int32)
         self._heard = np.zeros((m,), bool)
+        # Outer-optimizer state (z_server, moment trees, admission count) —
+        # the same fleet-mean anchor derivation as PSEngine, so a τ=0
+        # lockstep run feeds the shared chunk an identical srv carry.
+        if self._server is not None:
+            z0 = jax.tree.map(
+                lambda v: jnp.mean(v, axis=0, keepdims=True),
+                self.worker.sync_payload(self._state),
+            )
+            self._srv = (z0, self._server.init_moments(z0), jnp.int32(0))
+        else:
+            self._srv = None
 
         # Per-worker event machine (one outstanding event per worker).
         self._status = np.full((m,), _COMPUTE, np.int32)
@@ -310,6 +330,8 @@ class AsyncPSEngine:
                if self.sampler is not None else {}),
             **({"byzantine": self.byzantine.name}
                if self.byzantine is not None else {}),
+            **({"server_opt": self.server_opt.name}
+               if self._server is not None else {}),
             **({"aggregator": self.aggregator.name,
                 "dp": None if self.dp is None else self.dp.name}
                if self._robust is not None else {}),
@@ -453,17 +475,48 @@ class AsyncPSEngine:
             sw_now = jax.vmap(worker.sync_weight)(state)
             return new_table, jnp.where(mask, sw_now, sw), ef_new
 
-        def admit_robust(state, table, sw, discount, heard, recv):
+        server = self._server
+
+        def outer_broadcast(state, merged, recv, payload, srv):
+            # Row-0 of the ungated merge → outer step → recv-gated delivery:
+            # the event-driven twin of engine.make_sync_stacked's helper.
+            from ..kernels.sync_compress.ops import server_outer_apply
+
+            z, mom, t = srv
+            merged_row = jax.tree.map(lambda v: v[:1], merged)
+            z_new, mom_new, t_new, eff_lr, dn = server_outer_apply(
+                merged_row, z, mom, t, spec=server.spec,
+                use_kernel=self.codec_backend == "fused",
+            )
+            synced = jax.tree.map(
+                lambda v, old: jnp.where(
+                    _per_worker(recv, old),
+                    jnp.broadcast_to(v, old.shape), old,
+                ),
+                z_new, payload,
+            )
+            return (worker.merge_synced(state, synced),
+                    (z_new, mom_new, t_new), jnp.stack([eff_lr, dn]))
+
+        def admit_robust(state, table, sw, discount, heard, recv, srv=None):
             # Robust Line 5–8 per arrival: the table rows are unweighted
             # z̃ uplinks, so the robust merge (and its weight
             # renormalization over heard lanes) runs server-side — the
             # same sync_merge_stacked(agg=...) call the synchronous robust
-            # path compiles.
+            # path compiles. An active outer optimizer takes the merge
+            # ungated (recv only ever gated delivery, never the mean) and
+            # runs the outer step downstream of the robust aggregation.
             from ..kernels.sync_compress.ops import sync_merge_stacked
 
             sw_eff = sw * discount
             w_raw = jnp.where(heard, sw_eff, jnp.zeros_like(sw_eff))
             payload = worker.sync_payload(state)
+            if server is not None:
+                merged = sync_merge_stacked(
+                    table, w=w_raw, normalize=True, agg=robust.agg,
+                    use_kernel=self.codec_backend == "fused",
+                )
+                return outer_broadcast(state, merged, recv, payload, srv)
             synced = sync_merge_stacked(
                 table, w=w_raw, recv=recv, old=payload,
                 normalize=True, agg=robust.agg,
@@ -471,7 +524,7 @@ class AsyncPSEngine:
             )
             return worker.merge_synced(state, synced)
 
-        def admit(state, table, sw, discount, heard, recv):
+        def admit(state, table, sw, discount, heard, recv, srv=None):
             # Line 5–8 per arrival: weighted average of the whole last-heard
             # table, broadcast to the admitted workers only. Mirrors
             # engine.make_sync_stacked's no-fault branch with the staleness
@@ -485,6 +538,11 @@ class AsyncPSEngine:
                 table,
             )
             payload = worker.sync_payload(state)
+            if server is not None:
+                merged = jax.tree.map(
+                    lambda s: jnp.sum(s, axis=0, keepdims=True), msg
+                )
+                return outer_broadcast(state, merged, recv, payload, srv)
             synced = jax.tree.map(
                 lambda s, old: jnp.where(
                     _per_worker(recv, old),
@@ -512,11 +570,12 @@ class AsyncPSEngine:
             cached_chunk(
                 ("serial", self.problem, worker, comp,
                  self.config.num_workers, k_pad, self.eval_fn, True,
-                 self.codec_backend, robust),
+                 self.codec_backend, robust, server),
                 lambda: make_serial_chunk(
                     self.problem, worker, comp, self.config.num_workers,
                     k_pad, self.eval_fn, no_faults=True,
                     codec_backend=self.codec_backend, robust=robust,
+                    server=server,
                 ),
             )
             if self._lockstep_ok else None
@@ -763,19 +822,38 @@ class AsyncPSEngine:
                     if self._robust is not None:
                         chunk_args.append(jnp.asarray(self._byz[r0:r0 + 1]))
                     chunk_args.append(jnp.asarray(counts[None]))
-                    self._state, self._ef, _, _ = self._lockstep_chunk(
-                        *chunk_args
-                    )
+                    if self._server is not None:
+                        chunk_args.append(self._srv)
+                        (self._state, self._ef, _, _, self._srv,
+                         outer) = self._lockstep_chunk(*chunk_args)
+                        outer = np.asarray(outer)[0]
+                    else:
+                        self._state, self._ef, _, _ = self._lockstep_chunk(
+                            *chunk_args
+                        )
+                        outer = None
                 else:
                     discount = np.asarray(
                         (1.0 + stale) ** (-self.gamma), np.float32
                     )
-                    self._state = self._admit_fn(
+                    admit_args = [
                         self._state, self._srv_payload,
                         jnp.asarray(self._srv_sw),
                         jnp.asarray(discount), jnp.asarray(self._heard),
                         jnp.asarray(mask),
-                    )
+                    ]
+                    if self._server is not None:
+                        admit_args.append(self._srv)
+                        self._state, self._srv, outer = self._admit_fn(
+                            *admit_args
+                        )
+                        outer = np.asarray(outer)
+                    else:
+                        self._state = self._admit_fn(*admit_args)
+                        outer = None
+                if outer is not None:
+                    rec.outer_lr = float(outer[0])
+                    rec.delta_norm = float(outer[1])
                 jax.block_until_ready(jax.tree.leaves(self._state)[0])
 
             # Schedule every admitted worker's next compute in one sweep:
@@ -841,6 +919,11 @@ class AsyncPSEngine:
             self.metrics.set_gauge(
                 "agg_reject_frac", self.aggregator.reject_frac(len(adm)),
                 engine="async", aggregator=self.aggregator.name,
+            )
+        if self._server is not None and rec.delta_norm is not None:
+            self.metrics.set_gauge(
+                "outer_delta_norm", rec.delta_norm, engine="async",
+                server_opt=self.server_opt.name,
             )
         if rec.idle_frac is not None:
             self.metrics.set_gauge("idle_frac", rec.idle_frac,
@@ -1088,6 +1171,12 @@ class AsyncPSEngine:
             # only when the robust subsystem changes the merge semantics —
             # plain runs keep the historical checkpoint layout byte-for-byte
             tree["aggregator_fp"] = jnp.uint32(self.aggregator.fingerprint)
+        if self._server is not None:
+            # present only under an active outer optimizer — `none` keeps
+            # the historical checkpoint layout byte-identical
+            z, mom, t = self._srv
+            tree["server_opt"] = {"z": z, "mom": mom, "t": t}
+            tree["server_opt_fp"] = jnp.uint32(self.server_opt.fingerprint)
         return tree
 
     def save(self, path: str) -> None:
@@ -1130,6 +1219,17 @@ class AsyncPSEngine:
                 "checkpoint was written by a run with a different robust "
                 "aggregator (the merge semantics would diverge)"
             )
+        if self._server is not None:
+            if int(
+                np.asarray(loaded["server_opt_fp"])
+            ) != self.server_opt.fingerprint:
+                raise ValueError(
+                    "checkpoint was written by a run with a different "
+                    "server-side outer optimizer (engine runs "
+                    f"{self.server_opt.name})"
+                )
+            so = loaded["server_opt"]
+            self._srv = (so["z"], tuple(so["mom"]), so["t"])
         m = self.config.num_workers
         self._state = loaded["worker_state"]
         self._ef = loaded["ef"]

@@ -65,6 +65,7 @@ from .faults import FaultPolicy, NoFaults
 from .robust import ByzantinePolicy, DPUplink, RobustAggregator, WeightedMean
 from .sampler import ClientSampler
 from .schedule import UniformSchedule, WorkerSchedule
+from .server_opt import NoServerOpt, ServerOptimizer, resolve_server_opt
 from .trace import RoundRecord, TraceRecorder
 
 PyTree = Any
@@ -119,6 +120,9 @@ class PSConfig:
     byzantine: ByzantinePolicy | None = None  # adversarial uplinks
     aggregator: RobustAggregator | None = None  # robust server merge
     dp: DPUplink | None = None               # l2 clip + Gaussian noise
+    # Server-side outer optimizer over round deltas (DiLoCo/FedOpt):
+    # None (or NoServerOpt) is the historical Line-7 broadcast, bit-exact.
+    server_opt: ServerOptimizer | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,7 +242,8 @@ def cached_chunk(key: tuple, builder, *, donate: bool = True):
 
 def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
                       num_workers: int, codec_backend: str = "reference",
-                      robust: RobustPipeline | None = None):
+                      robust: RobustPipeline | None = None,
+                      server: ServerOptimizer | None = None):
     """Line 5–8 on the stacked worker axis: compress(w·payload) per worker,
     server sum, broadcast to survivors. The returned function takes
     ``(state, ef, alive_r, c_rng)``; ``alive_r is None`` means the fault
@@ -267,9 +272,51 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
     statistics must rank workers' iterates, not their weighted messages.
     Attack/DP keys fold constants 13/11 off the per-worker codec keys, so
     both engines (and resumes) corrupt identically.
+
+    ``server`` (a *resolved* :class:`~repro.ps.server_opt.ServerOptimizer`,
+    i.e. never ``NoServerOpt``) inserts the outer-optimizer step between
+    the (robust) merge and delivery: the merge runs ungated, its row-0
+    mean becomes the pseudo-gradient Δ against the server anchor, and the
+    *post-step* anchor is what survivors receive — recv gating moves from
+    the merge to the broadcast, which is semantics-preserving because recv
+    only ever gated delivery, never the mean. The closures then take a
+    trailing ``srv = (z, moments, t)`` carry and return
+    ``(state, ef_new, srv_new, telem)`` with ``telem = [eff_lr, ‖Δ‖]``.
+    ``server=None`` compiles the byte-identical historical closures.
     """
     comp = compressor
     m = num_workers
+
+    if server is not None:
+        from ..kernels.sync_compress.ops import server_outer_apply
+
+        srv_spec = server.spec
+        srv_kernel = codec_backend == "fused"
+
+        def outer_broadcast(state, merged, recv, payload, srv):
+            """Row-0 of the ungated merge → outer step → gated delivery."""
+            z, mom, t = srv
+            merged_row = jax.tree.map(lambda v: v[:1], merged)
+            z_new, mom_new, t_new, eff_lr, dn = server_outer_apply(
+                merged_row, z, mom, t, spec=srv_spec,
+                use_kernel=srv_kernel,
+            )
+            if recv is None:
+                synced = jax.tree.map(
+                    lambda v, old: jnp.broadcast_to(v, old.shape),
+                    z_new, payload,
+                )
+            else:
+                synced = jax.tree.map(
+                    lambda v, old: jnp.where(
+                        _per_worker(recv, old),
+                        jnp.broadcast_to(v, old.shape), old,
+                    ),
+                    z_new, payload,
+                )
+            telem = jnp.stack([eff_lr, dn])
+            return (worker.merge_synced(state, synced),
+                    (z_new, mom_new, t_new), telem)
     if robust is not None:
         from ..kernels.sync_compress.ops import (
             codec_uplink_stacked,
@@ -279,7 +326,8 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
         use_kernel = codec_backend == "fused"
 
         @jax.named_scope("sync-robust")
-        def sync_stacked_robust(state, ef, alive_r, c_rng, byz_r):
+        def sync_stacked_robust(state, ef, alive_r, c_rng, byz_r,
+                                srv=None):
             sw = jax.vmap(worker.sync_weight)(state)          # (M,)
             if alive_r is None:
                 w_raw = sw
@@ -312,6 +360,16 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
                 )
                 if not comp.error_feedback:
                     ef_new = ef
+            if server is not None:
+                # ungated robust merge → outer step → gated delivery
+                merged = sync_merge_stacked(
+                    sent, w=w_raw, normalize=True, agg=robust.agg,
+                    use_kernel=use_kernel,
+                )
+                state, srv_new, telem = outer_broadcast(
+                    state, merged, recv, payload, srv
+                )
+                return state, ef_new, srv_new, telem
             synced = sync_merge_stacked(
                 sent, w=w_raw, recv=recv,
                 old=None if recv is None else payload,
@@ -328,7 +386,7 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
         )
 
         @jax.named_scope("sync")
-        def sync_stacked_fused(state, ef, alive_r, c_rng):
+        def sync_stacked_fused(state, ef, alive_r, c_rng, srv=None):
             sw = jax.vmap(worker.sync_weight)(state)          # (M,)
             if alive_r is None:
                 recv = None
@@ -341,6 +399,12 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
                 recv = jnp.logical_and(alive_r, any_alive)
             payload = worker.sync_payload(state)
             if comp.is_identity:
+                if server is not None:
+                    merged = sync_merge_stacked(payload, w)
+                    state, srv_new, telem = outer_broadcast(
+                        state, merged, recv, payload, srv
+                    )
+                    return state, ef, srv_new, telem
                 # one fused sweep: w-scale + server sum + broadcast
                 synced = sync_merge_stacked(payload, w, recv=recv,
                                             old=None if recv is None
@@ -354,6 +418,12 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
             )
             if not comp.error_feedback:
                 ef_new = ef
+            if server is not None:
+                merged = sync_merge_stacked(sent)
+                state, srv_new, telem = outer_broadcast(
+                    state, merged, recv, payload, srv
+                )
+                return state, ef_new, srv_new, telem
             synced = sync_merge_stacked(sent, recv=recv,
                                         old=None if recv is None
                                         else payload)
@@ -362,7 +432,7 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
         return sync_stacked_fused
 
     @jax.named_scope("sync")
-    def sync_stacked(state, ef, alive_r, c_rng):
+    def sync_stacked(state, ef, alive_r, c_rng, srv=None):
         sw = jax.vmap(worker.sync_weight)(state)              # (M,)
         if alive_r is None:
             any_alive = None
@@ -403,6 +473,16 @@ def make_sync_stacked(worker: LocalWorker, compressor: SyncCompressor,
             else:
                 ef_new = ef
 
+        if server is not None:
+            merged = jax.tree.map(
+                lambda s: jnp.sum(s, axis=0, keepdims=True), sent
+            )
+            recv = (None if alive_r is None
+                    else jnp.logical_and(alive_r, any_alive))
+            state, srv_new, telem = outer_broadcast(
+                state, merged, recv, payload, srv
+            )
+            return state, ef_new, srv_new, telem
         if alive_r is None:
             synced = jax.tree.map(
                 lambda s: jnp.broadcast_to(
@@ -437,6 +517,7 @@ def make_serial_chunk(
     no_faults: bool,
     codec_backend: str = "reference",
     robust: RobustPipeline | None = None,
+    server: ServerOptimizer | None = None,
 ):
     """Build the serial-path round chunk: scan of (sync → K_m^r masked local
     steps) over a leading rounds axis. ``PSEngine`` jits this as its whole
@@ -452,10 +533,18 @@ def make_serial_chunk(
     Returns ``(state, ef, eta_stats, ress)`` where ``eta_stats`` is
     ``(C, 3)`` per-round ``[min, max, mean]`` over the fleet — the
     telemetry reduction happens on device so the per-chunk device→host
-    transfer is O(rounds), not O(rounds × fleet)."""
+    transfer is O(rounds), not O(rounds × fleet).
+
+    A resolved ``server`` outer optimizer threads its ``(z, moments, t)``
+    state through the scan carry: the chunk takes it as a trailing ``srv``
+    argument (after ``counts_cum``, so the donated state/EF positions are
+    untouched) and the return grows to ``(state, ef, eta_stats, ress,
+    srv, outer)`` with ``outer`` the per-round ``(C, 2)``
+    ``[eff_lr, ‖Δ‖]`` telemetry. ``server=None`` builds the historical
+    chunk, signature and jaxpr unchanged."""
     m = num_workers
     sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend,
-                                     robust)
+                                     robust, server)
 
     vstep = jax.vmap(
         lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
@@ -463,19 +552,24 @@ def make_serial_chunk(
     veta = jax.vmap(worker.eta)
 
     def round_body(carry, inputs):
-        state, ef = carry
+        if server is not None:
+            state, ef, srv = carry
+        else:
+            state, ef = carry
+            srv = None
+        telem = None
         if robust is not None:
             rng_round, ks_r, alive_r, byz_r, counts_r = inputs
-            state, ef = sync_stacked(
-                state, ef, None if no_faults else alive_r,
-                jax.random.fold_in(rng_round, 7), byz_r,
-            )
+            sync_args = (state, ef, None if no_faults else alive_r,
+                         jax.random.fold_in(rng_round, 7), byz_r)
         else:
             rng_round, ks_r, alive_r, counts_r = inputs
-            state, ef = sync_stacked(
-                state, ef, None if no_faults else alive_r,
-                jax.random.fold_in(rng_round, 7),
-            )
+            sync_args = (state, ef, None if no_faults else alive_r,
+                         jax.random.fold_in(rng_round, 7))
+        if server is not None:
+            state, ef, srv, telem = sync_stacked(*sync_args, srv)
+        else:
+            state, ef = sync_stacked(*sync_args)
 
         # Line 3–4: K_m^r masked local steps.
         step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
@@ -513,9 +607,29 @@ def make_serial_chunk(
                     )),
                     dtype=jnp.float32,
                 )
+        if server is not None:
+            return (state, ef, srv), (eta_stats, res, telem)
         return (state, ef), (eta_stats, res)
 
-    if robust is not None:
+    if server is not None:
+        if robust is not None:
+            def chunk(state, ef, round_rngs, ks, alive, byz, counts_cum,
+                      srv):
+                _count_trace()
+                (state, ef, srv), (eta_stats, ress, outer) = lax.scan(
+                    round_body, (state, ef, srv),
+                    (round_rngs, ks, alive, byz, counts_cum),
+                )
+                return state, ef, eta_stats, ress, srv, outer
+        else:
+            def chunk(state, ef, round_rngs, ks, alive, counts_cum, srv):
+                _count_trace()
+                (state, ef, srv), (eta_stats, ress, outer) = lax.scan(
+                    round_body, (state, ef, srv),
+                    (round_rngs, ks, alive, counts_cum),
+                )
+                return state, ef, eta_stats, ress, srv, outer
+    elif robust is not None:
         def chunk(state, ef, round_rngs, ks, alive, byz, counts_cum):
             _count_trace()
             (state, ef), (eta_stats, ress) = lax.scan(
@@ -545,6 +659,7 @@ def make_sampled_chunk(
     no_faults: bool,
     codec_backend: str = "reference",
     robust: RobustPipeline | None = None,
+    server: ServerOptimizer | None = None,
 ):
     """Sampled-client round chunk (partial participation). The fleet store
     stays ``(N, ...)`` in the scan carry; each round gathers the
@@ -561,11 +676,17 @@ def make_sampled_chunk(
     shaped ``(N,)`` so the in-chunk residual evaluates the true Line-14
     z̄ over everyone who has ever participated. A :class:`RobustPipeline`
     adds a ``byz`` ``(C, S)`` lane table (gathered onto the drawn lanes)
-    between ``alive`` and ``counts_cum``, like the serial chunk."""
+    between ``alive`` and ``counts_cum``, like the serial chunk.
+
+    A resolved ``server`` outer optimizer carries ONE global ``srv``
+    through the scan (trailing chunk argument, like the serial chunk): the
+    outer step sees the merge of the drawn lanes, and only those lanes
+    receive the post-step anchor — undrawn workers keep their stale one,
+    exactly as the round never reached them."""
     del fleet  # shapes are carried by the arrays; kept for cache keying
     m = sample
     sync_stacked = make_sync_stacked(worker, compressor, m, codec_backend,
-                                     robust)
+                                     robust, server)
     vstep = jax.vmap(
         lambda st, rr, en: worker.step(problem, st, rr, enabled=en)
     )
@@ -573,7 +694,12 @@ def make_sampled_chunk(
     has_ef = compressor.error_feedback
 
     def round_body(carry, inputs):
-        state, ef = carry
+        if server is not None:
+            state, ef, srv = carry
+        else:
+            state, ef = carry
+            srv = None
+        telem = None
         if robust is not None:
             idx_r, rng_round, ks_r, alive_r, byz_r, counts_r = inputs
         else:
@@ -584,15 +710,15 @@ def make_sampled_chunk(
             sub_ef = jax.tree.map(lambda v: v[idx_r], ef) if has_ef else ef
 
         if robust is not None:
-            sub, sub_ef = sync_stacked(
-                sub, sub_ef, None if no_faults else alive_r,
-                jax.random.fold_in(rng_round, 7), byz_r,
-            )
+            sync_args = (sub, sub_ef, None if no_faults else alive_r,
+                         jax.random.fold_in(rng_round, 7), byz_r)
         else:
-            sub, sub_ef = sync_stacked(
-                sub, sub_ef, None if no_faults else alive_r,
-                jax.random.fold_in(rng_round, 7),
-            )
+            sync_args = (sub, sub_ef, None if no_faults else alive_r,
+                         jax.random.fold_in(rng_round, 7))
+        if server is not None:
+            sub, sub_ef, srv, telem = sync_stacked(*sync_args, srv)
+        else:
+            sub, sub_ef = sync_stacked(*sync_args)
 
         step_rngs = jax.random.split(rng_round, k_pad * m).reshape(
             k_pad, m, 2
@@ -637,9 +763,30 @@ def make_sampled_chunk(
                     )),
                     dtype=jnp.float32,
                 )
+        if server is not None:
+            return (state, ef, srv), (eta_stats, res, telem)
         return (state, ef), (eta_stats, res)
 
-    if robust is not None:
+    if server is not None:
+        if robust is not None:
+            def chunk(state, ef, idx, round_rngs, ks, alive, byz,
+                      counts_cum, srv):
+                _count_trace()
+                (state, ef, srv), (eta_stats, ress, outer) = lax.scan(
+                    round_body, (state, ef, srv),
+                    (idx, round_rngs, ks, alive, byz, counts_cum),
+                )
+                return state, ef, eta_stats, ress, srv, outer
+        else:
+            def chunk(state, ef, idx, round_rngs, ks, alive, counts_cum,
+                      srv):
+                _count_trace()
+                (state, ef, srv), (eta_stats, ress, outer) = lax.scan(
+                    round_body, (state, ef, srv),
+                    (idx, round_rngs, ks, alive, counts_cum),
+                )
+                return state, ef, eta_stats, ress, srv, outer
+    elif robust is not None:
         def chunk(state, ef, idx, round_rngs, ks, alive, byz, counts_cum):
             _count_trace()
             (state, ef), (eta_stats, ress) = lax.scan(
@@ -798,6 +945,17 @@ class PSEngine:
             if self._draws is not None else None
         )
 
+        # Server-side outer optimizer: resolve to None (the historical
+        # Line-7 broadcast, identical compiled chunk) for None/NoServerOpt.
+        self.server_opt = config.server_opt or NoServerOpt()
+        self._server = resolve_server_opt(config)
+        if self._server is not None and mesh is not None:
+            raise NotImplementedError(
+                "the server-side outer optimizer runs on the serial path "
+                "only — the outer step needs the gathered server merge, "
+                "not a per-shard psum (mesh=None)"
+            )
+
         # RNG derivation — each worker family keeps its historical stream
         # (AdaSEG: run_local_adaseg's; the zoo: run_local's), so the engine
         # reproduces the pre-engine drivers bit-exactly.
@@ -812,6 +970,19 @@ class PSEngine:
             if self.compressor.error_feedback else ()
         )
         self.round = 0
+
+        # Outer-optimizer state (z_server, moment trees, round count). The
+        # anchor starts at the fleet mean of the initial payloads, so the
+        # first round's pseudo-gradient measures the fleet's movement, not
+        # an arbitrary worker's init.
+        if self._server is not None:
+            z0 = jax.tree.map(
+                lambda v: jnp.mean(v, axis=0, keepdims=True),
+                self.worker.sync_payload(self._state),
+            )
+            self._srv = (z0, self._server.init_moments(z0), jnp.int32(0))
+        else:
+            self._srv = None
 
         z_like = jax.tree.map(
             lambda v: v[0], self.worker.sync_payload(self._state)
@@ -838,6 +1009,8 @@ class PSEngine:
             **({"aggregator": self.aggregator.name,
                 "dp": None if self.dp is None else self.dp.name}
                if self._robust is not None else {}),
+            **({"server_opt": self.server_opt.name}
+               if self._server is not None else {}),
             **(trace_meta or {}),
         })
 
@@ -854,14 +1027,15 @@ class PSEngine:
                 key = ("sampled", self.problem, self.worker,
                        self.compressor, m, self.sampler.sample,
                        self._k_pad, self.eval_fn, self._no_faults,
-                       self.codec_backend, self._robust)
+                       self.codec_backend, self._robust, self._server)
                 self._chunk_fn = cached_chunk(
                     key, self._make_sampled_chunk
                 )
             else:
                 key = ("serial", self.problem, self.worker,
                        self.compressor, m, self._k_pad, self.eval_fn,
-                       self._no_faults, self.codec_backend, self._robust)
+                       self._no_faults, self.codec_backend, self._robust,
+                       self._server)
                 self._chunk_fn = cached_chunk(
                     key, self._make_serial_chunk
                 )
@@ -883,6 +1057,7 @@ class PSEngine:
             self.problem, self.worker, self.compressor,
             self.config.num_workers, self._k_pad, self.eval_fn,
             self._no_faults, self.codec_backend, self._robust,
+            self._server,
         )
 
     def _make_sampled_chunk(self):
@@ -890,7 +1065,7 @@ class PSEngine:
             self.problem, self.worker, self.compressor,
             self.config.num_workers, self.sampler.sample, self._k_pad,
             self.eval_fn, self._no_faults, self.codec_backend,
-            self._robust,
+            self._robust, self._server,
         )
 
     def _make_sharded_chunk(self):
@@ -1056,7 +1231,13 @@ class PSEngine:
                 if self._robust is not None:
                     args.append(jnp.asarray(self._byz[sl]))
             args.append(jnp.asarray(self._counts_cum[sl]))
-            state, ef, etas, ress = self._chunk_fn(*args)
+            if self._server is not None:
+                args.append(self._srv)
+                (state, ef, etas, ress,
+                 self._srv, outer) = self._chunk_fn(*args)
+            else:
+                state, ef, etas, ress = self._chunk_fn(*args)
+                outer = None
             jax.block_until_ready(state)
         self._state, self._ef = state, ef
         self.round = r1
@@ -1077,6 +1258,7 @@ class PSEngine:
         # never O(rounds × fleet) — regardless of fleet size.
         stats = np.asarray(etas)                              # (C, 3)
         ress = np.asarray(ress)
+        outer = None if outer is None else np.asarray(outer)  # (C, 2)
         sampled = self._draws is not None
         for i, r in enumerate(range(r0, r1)):
             if sampled:
@@ -1115,6 +1297,8 @@ class PSEngine:
                 else None,
                 sampled_workers=sampled_workers,
                 byzantine_workers=byz_ids,
+                outer_lr=None if outer is None else float(outer[i, 0]),
+                delta_norm=None if outer is None else float(outer[i, 1]),
             )
             self.trace.record(rec)
             # Round span: the chunk's wall uniformly attributed, carrying
@@ -1134,6 +1318,11 @@ class PSEngine:
             self.metrics.inc("local_steps", eff, engine="sync")
             self.metrics.set_gauge("eta_spread", rec.eta_spread,
                                    engine="sync")
+            if self._server is not None:
+                self.metrics.set_gauge(
+                    "outer_delta_norm", rec.delta_norm, engine="sync",
+                    server_opt=self.server_opt.name,
+                )
             if self._robust is not None:
                 self.metrics.inc("byzantine_workers",
                                  len(byz_ids or []), engine="sync")
@@ -1215,6 +1404,12 @@ class PSEngine:
             # present only for robust runs — the merge semantics (and the
             # threat model the EF memory accumulated under) must match
             tree["aggregator_fp"] = jnp.uint32(self.aggregator.fingerprint)
+        if self._server is not None:
+            # present only under an active outer optimizer, so the
+            # historical (`none`) layout stays byte-identical
+            z, mom, t = self._srv
+            tree["server_opt"] = {"z": z, "mom": mom, "t": t}
+            tree["server_opt_fp"] = jnp.uint32(self.server_opt.fingerprint)
         return tree
 
     def save(self, path: str) -> None:
@@ -1263,6 +1458,17 @@ class PSEngine:
                 "checkpoint was written by a run with a different robust "
                 "aggregator (the merge semantics would diverge)"
             )
+        if self._server is not None:
+            if int(
+                np.asarray(loaded["server_opt_fp"])
+            ) != self.server_opt.fingerprint:
+                raise ValueError(
+                    "checkpoint was written by a run with a different "
+                    "server-side outer optimizer (engine runs "
+                    f"{self.server_opt.name})"
+                )
+            so = loaded["server_opt"]
+            self._srv = (so["z"], tuple(so["mom"]), so["t"])
         self._state = loaded["worker_state"]
         self._ef = loaded["ef"]
         self.round = int(loaded["round"])

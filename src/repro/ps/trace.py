@@ -37,8 +37,10 @@ from typing import Any
 #: ``sampled_workers`` id list plus ``sampler``/``sample`` meta keys. 7 adds
 #: the hostile-fleet story: a per-record ``byzantine_workers`` id list plus
 #: ``byzantine``/``aggregator``/``dp`` meta keys (v6 traces still load —
-#: every new field is optional).
-TRACE_VERSION = 7
+#: every new field is optional). 8 adds the server-side outer optimizer:
+#: per-record ``outer_lr``/``delta_norm`` telemetry plus a ``server_opt``
+#: meta key (v7 traces still load — same optional-field discipline).
+TRACE_VERSION = 8
 
 
 @dataclasses.dataclass
@@ -81,6 +83,9 @@ class RoundRecord:
     # fleet ids of the workers whose uplink was adversarially corrupted this
     # round (empty list = policy active but nobody attacked this round)
     byzantine_workers: list | None = None
+    # --- server-side outer optimizer (v8); None = historical Line-7 merge --
+    outer_lr: float | None = None      # effective outer step size this round
+    delta_norm: float | None = None    # ‖Δ‖₂ of the round's pseudo-gradient
 
     @property
     def eta_spread(self) -> float:

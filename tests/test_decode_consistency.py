@@ -6,8 +6,18 @@ import numpy as np
 import pytest
 
 from repro.configs import list_archs, smoke_config
-from repro.models import decode_step, forward, init_cache, init_model
+from repro.core import AdaSEGConfig
+from repro.models import (
+    ModelWorker,
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    make_lm_problem,
+    tiny_lm_config,
+)
 from repro.models.transformer import encode
+from repro.ps import PSConfig, PSEngine
 
 B, S = 2, 16
 
@@ -71,3 +81,73 @@ def test_long_context_state_size_constant_mamba():
     n1 = sum(v.size for v in jax.tree.leaves(c1))
     n2 = sum(v.size for v in jax.tree.leaves(c2))
     assert n1 == n2
+
+
+# ---------------------------------------------------------------------------
+# Serving from the PS runtime (ROADMAP item 5): the decode path consumes a
+# real mid-training PSEngine checkpoint — train a tiny LM through the engine,
+# checkpoint it, restore in a fresh "serving" engine, and run the
+# decode-vs-forward consistency check on the *trained* z̄ instead of private
+# init_model stub weights.
+
+def _lm_engine(cfg, prob):
+    worker = ModelWorker(AdaSEGConfig(g0=5.0, diameter=1.0, k=2),
+                         arch=cfg.name)
+    return PSEngine(
+        prob,
+        PSConfig(worker=worker, local_k=2, num_workers=2, rounds=2),
+        rng=jax.random.PRNGKey(0),
+    )
+
+
+def test_decode_from_ps_checkpoint(tmp_path):
+    cfg = tiny_lm_config()
+    prob = make_lm_problem(cfg, batch=B, seq=8)
+    path = str(tmp_path / "lm.ckpt")
+
+    trained = _lm_engine(cfg, prob)
+    z_train = trained.run(checkpoint_path=path, checkpoint_every=1)
+
+    # the serving process: a fresh engine restores the checkpoint and its
+    # z̄ IS the parameter pytree the decode stack consumes
+    server = _lm_engine(cfg, prob).restore(path)
+    params = server.z_bar()
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(z_train)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # genuinely trained weights, not the init_model stub
+    stub, _ = init_model(jax.random.PRNGKey(0), cfg)
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(stub))
+    )
+
+    s = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, s), 0,
+                                cfg.vocab_size)
+    ref, _ = forward(params, cfg, tokens)
+    cache = init_cache(cfg, B, max_len=s)
+    outs = []
+    for t in range(s):
+        lg, cache = decode_step(params, cfg, tokens[:, t:t + 1],
+                                jnp.full((B,), t, jnp.int32), cache)
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(jnp.stack(outs, 1), ref, rtol=2e-3, atol=2e-4)
+
+
+def test_wrong_arch_ps_restore_rejected(tmp_path):
+    """An engine built for a different architecture must refuse the
+    checkpoint (the arch label is folded into the worker fingerprint)."""
+    cfg = tiny_lm_config()
+    prob = make_lm_problem(cfg, batch=B, seq=8)
+    path = str(tmp_path / "lm.ckpt")
+    _lm_engine(cfg, prob).run(checkpoint_path=path, checkpoint_every=2)
+
+    wrong = PSEngine(
+        prob,
+        PSConfig(worker=ModelWorker(AdaSEGConfig(g0=5.0, diameter=1.0, k=2),
+                                    arch="qwen2-0.5b"),
+                 local_k=2, num_workers=2, rounds=2),
+        rng=jax.random.PRNGKey(0),
+    )
+    with pytest.raises(ValueError, match="different optimizer"):
+        wrong.restore(path)

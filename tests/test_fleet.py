@@ -225,6 +225,29 @@ def test_sampled_sync_checkpoint_resume_and_fingerprint(game, tmp_path):
         PSEngine(game.problem, dense, rng=jax.random.PRNGKey(2)).restore(ck)
 
 
+def test_sampled_gather_scatter_stays_inside_the_compiled_scan(game):
+    """PR-8 follow-up, resolved: the sampled gather/scatter does NOT
+    round-trip through a host round loop. The whole R-round sampled run is
+    ONE compiled program — the ``lax.scan`` carries the (N, …) fleet store
+    and each round's lane gather/scatter happens inside the scan body
+    (``gather-sampled`` / ``scatter-sampled`` named scopes in the chunk).
+
+    Pinned strictly via the chunk trace counter: a host-side per-round
+    loop would invoke/trace one program per round, tripping both asserts
+    below. k=7 gives this test a chunk-cache key nothing else compiles."""
+    fleet, rounds = 7, 5
+    cfg = PSConfig(adaseg=_cfg(k=7), num_workers=fleet, rounds=rounds,
+                   sampler=ClientSampler(sample=3, seed=11))
+    before = serial_chunk_traces()
+    PSEngine(game.problem, cfg, rng=jax.random.PRNGKey(0)).run()
+    assert serial_chunk_traces() == before + 1, (
+        "sampled R-round run must trace exactly one scan program"
+    )
+    # a second engine, same config: zero new traces — still one program
+    PSEngine(game.problem, cfg, rng=jax.random.PRNGKey(1)).run()
+    assert serial_chunk_traces() == before + 1
+
+
 def test_sampler_validation():
     with pytest.raises(ValueError, match="sample"):
         ClientSampler(sample=0)
@@ -307,7 +330,7 @@ def test_trace_v6_roundtrip_and_v5_compat(game, tmp_path):
     path = str(tmp_path / "v6.json")
     eng.trace.save(path)
     back = TraceRecorder.load(path)
-    assert back.version == TRACE_VERSION == 7
+    assert back.version == TRACE_VERSION == 8
     assert back.meta["sampler"] == "sample4-uniform-seed1"
     assert back.rounds[0].sampled_workers == eng.trace.rounds[0].sampled_workers
 

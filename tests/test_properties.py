@@ -269,3 +269,187 @@ def test_classify_axes_abstract():
     assert classify_axes([[0, 1], [2, 3]], mesh) == "model"
     assert classify_axes([[0, 2], [1, 3]], mesh) == "data"
     assert classify_axes([[0, 1, 2, 3]], mesh) == "data,model"
+
+
+# --- ServerOptimizer properties ----------------------------------------------
+#
+# The outer-optimizer math (ps/server_opt + the kernel twins) has laws the
+# engines lean on: momentum states are geometric sums of past deltas (so
+# they stay bounded when the deltas do), a zero-momentum unit-lr policy IS
+# the historical Line-7 merge, fingerprints separate any two hyperparameter
+# settings, and a fixed seed fully determines the trajectory across rerun
+# AND checkpoint/resume. The math properties drive the eager reference twin
+# (``outer_apply_ref``) directly — no jit cache pollution across examples.
+
+def _ref_chain(spec, deltas, z0):
+    """Run the reference outer update over a sequence of deltas; returns
+    final (z, mom) plus every intermediate moment tuple."""
+    from repro.kernels.sync_compress.ref import outer_apply_ref
+
+    slots = 2 if spec[0] == "adam" else 1
+    z = jnp.asarray(z0)
+    mom = tuple(jnp.zeros_like(z) for _ in range(slots))
+    t = jnp.float32(0.0)
+    moms = []
+    for d in deltas:
+        g = z + jnp.asarray(d)           # merged such that merged − z = d
+        z, mom, _ = outer_apply_ref(g, z, mom, t, spec=spec)
+        t = t + 1.0
+        moms.append(mom)
+    return z, moms
+
+
+@given(
+    st.floats(0.0, 0.95, allow_nan=False),
+    st.lists(hnp.arrays(np.float32, 6,
+                        elements=st.floats(-5.0, 5.0, width=32,
+                                           allow_nan=False)),
+             min_size=1, max_size=8),
+)
+@settings(max_examples=40, deadline=None)
+def test_momentum_moment_geometric_bound(beta, deltas):
+    """Heavy-ball moment is a geometric sum of past deltas: for any
+    bounded delta sequence, ‖m‖∞ ≤ max‖Δ‖∞ / (1 − β)."""
+    deltas = [d.reshape(1, -1) for d in deltas]
+    dmax = max(float(np.abs(d).max()) for d in deltas)
+    _, moms = _ref_chain(("momentum", 1.0, beta), deltas,
+                         np.zeros((1, 6), np.float32))
+    bound = dmax / (1.0 - beta) + 1e-4
+    for mom in moms:
+        assert float(jnp.abs(mom[0]).max()) <= bound
+
+
+@given(
+    st.floats(0.0, 0.99, allow_nan=False),
+    st.floats(0.0, 0.99, allow_nan=False),
+    st.lists(hnp.arrays(np.float32, 4,
+                        elements=st.floats(-3.0, 3.0, width=32,
+                                           allow_nan=False)),
+             min_size=1, max_size=6),
+)
+@settings(max_examples=40, deadline=None)
+def test_adam_moments_are_convex_averages(b1, b2, deltas):
+    """Adam's m/v are exponential *averages* (decay + (1−β)·new), so they
+    never escape the range of the deltas: ‖m‖∞ ≤ max‖Δ‖∞ and
+    v ≤ max(Δ²) componentwise — with no 1/(1−β) inflation."""
+    deltas = [d.reshape(1, -1) for d in deltas]
+    dmax = max(float(np.abs(d).max()) for d in deltas)
+    _, moms = _ref_chain(("adam", 0.5, b1, b2, 1e-8), deltas,
+                         np.zeros((1, 4), np.float32))
+    for m, v in moms:
+        assert float(jnp.abs(m).max()) <= dmax + 1e-4
+        assert float(v.max()) <= dmax * dmax + 1e-4
+        assert float(v.min()) >= -1e-7                 # v is a square average
+
+
+@given(hnp.arrays(np.float32, (3, 7),
+                  elements=st.floats(-10.0, 10.0, width=32,
+                                     allow_nan=False)))
+@settings(max_examples=40, deadline=None)
+def test_unit_lr_zero_beta_momentum_is_line7_identity(rows):
+    """β=0, lr=1 heavy-ball IS the historical merge: z′ = z + Δ = merged,
+    for any merged/anchor pair — the algebraic root of the `none`
+    bit-exactness guarantee."""
+    from repro.kernels.sync_compress.ref import outer_apply_ref
+
+    merged = jnp.asarray(rows[:1])
+    z = jnp.asarray(rows[1:2])
+    z_new, _, _ = outer_apply_ref(merged, z, (jnp.zeros_like(z),),
+                                  jnp.float32(0.0),
+                                  spec=("momentum", 1.0, 0.0))
+    np.testing.assert_allclose(np.asarray(z_new), np.asarray(merged),
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(st.floats(0.01, 10.0), st.floats(0.0, 0.99),
+       st.floats(0.01, 10.0), st.floats(0.0, 0.99))
+@settings(max_examples=50, deadline=None)
+def test_server_opt_fingerprints_separate_hypers(lr1, b1, lr2, b2):
+    from repro.ps import ServerMomentum, ServerNesterov
+
+    a = ServerMomentum(lr=lr1, beta=b1)
+    b = ServerMomentum(lr=lr2, beta=b2)
+    if a.name == b.name:
+        assert a.fingerprint == b.fingerprint
+    else:
+        assert a.fingerprint != b.fingerprint
+    # policy kind always separates, even at identical hypers
+    assert (ServerMomentum(lr=lr1, beta=b1).fingerprint
+            != ServerNesterov(lr=lr1, beta=b1).fingerprint)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_server_opt_seed_determinism_rerun_and_resume(seed):
+    """One seed, one trajectory: rerunning an outer-Nesterov engine from
+    the same rng reproduces z̄ and the outer telemetry bit-exactly, and a
+    mid-stream save/restore lands on the identical trajectory."""
+    import tempfile, os
+    from repro.problems import make_bilinear_game
+    from repro.ps import PSConfig, PSEngine, ServerNesterov
+
+    game = make_bilinear_game(jax.random.PRNGKey(7), n=4, sigma=0.1)
+    cfg = PSConfig(adaseg=AdaSEGConfig(g0=1.0, diameter=2.0, k=2),
+                   num_workers=2, rounds=3,
+                   server_opt=ServerNesterov(lr=0.7, beta=0.9))
+    mk = lambda: PSEngine(game.problem, cfg,
+                          rng=jax.random.PRNGKey(seed),
+                          eval_fn=game.residual)
+    e1, e2 = mk(), mk()
+    z1, z2 = e1.run(), e2.run()
+    for a, b in zip(jax.tree.leaves(z1), jax.tree.leaves(z2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ([(r.outer_lr, r.delta_norm) for r in e1.trace.rounds]
+            == [(r.outer_lr, r.delta_norm) for r in e2.trace.rounds])
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "srv.msgpack")
+        e3 = mk()
+        e3.run(until_round=2)
+        e3.save(path)
+        e4 = mk()
+        e4.restore(path)
+        z4 = e4.run()
+        for a, b in zip(jax.tree.leaves(z1), jax.tree.leaves(z4)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- Cross-version trace property --------------------------------------------
+#
+# Every trace vintage (v5 explicit-version onward, through v8's outer-
+# optimizer fields) loads through TraceRecorder.load with missing optional
+# fields defaulted — the loader contract the bench/plot stack relies on.
+
+_V_FIELDS = {
+    5: [],
+    6: ["sampled_workers"],
+    7: ["sampled_workers", "byzantine_workers"],
+    8: ["sampled_workers", "byzantine_workers", "outer_lr", "delta_norm"],
+}
+
+
+@given(st.sampled_from([5, 6, 7, 8]), st.randoms(use_true_random=False))
+@settings(max_examples=40, deadline=None)
+def test_any_trace_vintage_loads_with_defaults(version, rnd, tmp_path_factory):
+    import json
+    from repro.ps import TraceRecorder
+
+    base = {"round": 0, "local_steps": [1, 1], "alive": [True, True],
+            "bytes_up": 4.0, "bytes_down": 4.0,
+            "eta_min": 1.0, "eta_max": 2.0, "eta_mean": 1.5}
+    # a random subset of the vintage's optional fields is present
+    extras = {}
+    if _V_FIELDS[version] and rnd.random() < 0.7:
+        for f in rnd.sample(_V_FIELDS[version],
+                            rnd.randint(1, len(_V_FIELDS[version]))):
+            extras[f] = [0] if f.endswith("workers") else 0.5
+    payload = {"version": version, "meta": {"v": version},
+               "rounds": [dict(base, **extras)]}
+    path = tmp_path_factory.mktemp("traces") / f"v{version}.json"
+    path.write_text(json.dumps(payload))
+    rec = TraceRecorder.load(str(path))
+    assert rec.version == version
+    r = rec.rounds[0]
+    for f in ("sampled_workers", "byzantine_workers", "outer_lr",
+              "delta_norm"):
+        assert getattr(r, f) == extras.get(f)   # present ⇒ kept, absent ⇒ None
+    assert r.eta_spread == pytest.approx(2.0)

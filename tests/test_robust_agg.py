@@ -383,7 +383,7 @@ def test_trace_v7_roundtrip_and_v6_loads(game, tmp_path):
     p = os.path.join(tmp_path, "t.json")
     eng.trace.save(p)
     back = TraceRecorder.load(p)
-    assert back.version == 7
+    assert back.version == 8
     assert ([r.byzantine_workers for r in back.rounds]
             == [r.byzantine_workers for r in eng.trace.rounds])
     assert back.meta["aggregator"] == "coordinate_median"

@@ -1,0 +1,556 @@
+"""Server-side outer optimizer (ps/server_opt): the DiLoCo/FedOpt
+two-level-optimization layer over the PS runtime.
+
+The PR's acceptance bars: ``server_opt="none"`` reproduces the PR-9 merge
+**bit-exactly** on every engine path (serial, sharded, async τ>0, τ=0
+lockstep, sampled, robust) because the resolved policy is ``None`` and the
+historical closures compile unchanged; the fused Pallas outer step agrees
+with the reference twin at rtol=1e-5 (and with a numpy oracle of the
+moment recurrences); mid-stream checkpoints round-trip the outer moments
+bit-exactly on both engines; restores under a different outer policy are
+rejected (same-layout swaps via ``server_opt_fp``, different-layout swaps
+via the structure check); and the outer step composes downstream of robust
+aggregation, q8-EF codecs, client sampling, bounded staleness, and real
+``ModelWorker`` payloads.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AdaSEGConfig
+from repro.core.adaseg import sync_weighted_stacked
+from repro.kernels.sync_compress import ops as sync_ops
+from repro.kernels.sync_compress import ref as sync_ref
+from repro.problems import make_bilinear_game
+from repro.ps import (
+    AsyncPSConfig,
+    AsyncPSEngine,
+    ClientSampler,
+    ConstantLatency,
+    NoServerOpt,
+    PSConfig,
+    PSEngine,
+    ServerAdam,
+    ServerMomentum,
+    ServerNesterov,
+    SignFlipAttack,
+    StochasticQuantizeCompressor,
+    TraceRecorder,
+    TrimmedMean,
+    resolve_server_opt,
+)
+
+M, R, K, N = 4, 5, 3, 8
+
+POLICIES = [
+    ServerMomentum(lr=0.8, beta=0.9),
+    ServerNesterov(lr=0.7, beta=0.85),
+    ServerAdam(lr=0.5, beta1=0.9, beta2=0.95, eps=1e-8),
+]
+
+
+@pytest.fixture(scope="module")
+def game():
+    return make_bilinear_game(jax.random.PRNGKey(0), n=N, sigma=0.1)
+
+
+def _cfg(k=K):
+    return AdaSEGConfig(g0=1.0, diameter=2.0, alpha=1.0, k=k)
+
+
+def _ps(game, **kw):
+    kw.setdefault("adaseg", _cfg())
+    kw.setdefault("num_workers", M)
+    kw.setdefault("rounds", R)
+    return PSConfig(**kw)
+
+
+def _as_async(pscfg: PSConfig, **extra) -> AsyncPSConfig:
+    base = {f.name: getattr(pscfg, f.name)
+            for f in dataclasses.fields(PSConfig)}
+    return AsyncPSConfig(**base, **extra)
+
+
+def _assert_trees(a, b, exact=True, rtol=1e-5, atol=1e-6):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=rtol, atol=atol)
+
+
+STRAGGLER = ConstantLatency(step_s=(1.0, 1.0, 1.0, 3.0), up_s=0.1,
+                            down_s=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Policy layer: specs, slots, fingerprints, validation
+# ---------------------------------------------------------------------------
+
+def test_specs_and_slots():
+    assert NoServerOpt().spec is None and NoServerOpt().slots == 0
+    assert ServerMomentum(lr=0.5, beta=0.8).spec == ("momentum", 0.5, 0.8)
+    assert ServerNesterov().spec == ("nesterov", 1.0, 0.9)
+    assert ServerAdam().spec == ("adam", 1.0, 0.9, 0.99, 1e-8)
+    assert ServerMomentum().slots == ServerNesterov().slots == 1
+    assert ServerAdam().slots == 2
+
+
+def test_fingerprints_separate_policies_and_hypers():
+    fps = {p.fingerprint for p in POLICIES}
+    fps.add(NoServerOpt().fingerprint)
+    fps.add(ServerMomentum(lr=0.8, beta=0.5).fingerprint)
+    assert len(fps) == 5          # every policy/hyper combination distinct
+
+
+def test_validation_rejects_bad_hypers():
+    with pytest.raises(ValueError):
+        ServerMomentum(lr=0.0)
+    with pytest.raises(ValueError):
+        ServerNesterov(beta=1.0)
+    with pytest.raises(ValueError):
+        ServerAdam(beta2=-0.1)
+    with pytest.raises(ValueError):
+        ServerAdam(eps=0.0)
+
+
+def test_resolve_none_and_noserveropt(game):
+    assert resolve_server_opt(_ps(game)) is None
+    assert resolve_server_opt(_ps(game, server_opt=NoServerOpt())) is None
+    resolved = resolve_server_opt(
+        _ps(game, server_opt=ServerNesterov())
+    )
+    assert resolved is not None and resolved.spec[0] == "nesterov"
+
+
+# ---------------------------------------------------------------------------
+# Kernel layer: fused ≡ reference ≡ numpy oracle
+# ---------------------------------------------------------------------------
+
+def _rand_srv(slots, n=37, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 + slots)
+    merged = {"a": jax.random.normal(ks[0], (1, n)),
+              "b": jax.random.normal(ks[1], (1, n // 2))}
+    z = jax.tree.map(lambda v: v * 0.5, merged)
+    mom = tuple(
+        jax.tree.map(lambda v, kk=kk: jax.random.normal(kk, v.shape) * 0.1,
+                     z)
+        for kk in ks[2:]
+    )
+    return merged, z, mom
+
+
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=[p.spec[0] for p in POLICIES])
+def test_fused_matches_reference_three_chained_steps(policy):
+    merged, z, mom = _rand_srv(policy.slots)
+    t = jnp.int32(0)
+    z_r, mom_r, t_r = z, mom, t
+    z_k, mom_k, t_k = z, mom, t
+    for step in range(3):
+        m2 = jax.tree.map(lambda v: v * (1.0 + 0.3 * step), merged)
+        z_r, mom_r, t_r, lr_r, dn_r = sync_ops.server_outer_apply(
+            m2, z_r, mom_r, t_r, spec=policy.spec, use_kernel=False)
+        z_k, mom_k, t_k, lr_k, dn_k = sync_ops.server_outer_apply(
+            m2, z_k, mom_k, t_k, spec=policy.spec, use_kernel=True,
+            block=16)
+        _assert_trees(z_r, z_k, exact=False)
+        _assert_trees(mom_r, mom_k, exact=False)
+        assert int(t_r) == int(t_k) == step + 1
+        np.testing.assert_allclose(float(lr_r), float(lr_k), rtol=1e-6)
+        np.testing.assert_allclose(float(dn_r), float(dn_k), rtol=1e-5)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["reference", "fused"])
+def test_outer_math_matches_numpy_oracle(use_kernel):
+    """Both backends against a from-scratch numpy recurrence, 3 steps."""
+    rng = np.random.default_rng(7)
+    g = rng.standard_normal((1, 23)).astype(np.float32)
+    z0 = rng.standard_normal((1, 23)).astype(np.float32)
+    lr, b1, b2, eps = 0.5, 0.9, 0.95, 1e-8
+    spec = ("adam", lr, b1, b2, eps)
+    z, mom, t = jnp.asarray(z0), (jnp.zeros_like(jnp.asarray(z0)),) * 2, \
+        jnp.int32(0)
+    zn, mn, vn = z0.copy(), np.zeros_like(z0), np.zeros_like(z0)
+    for step in range(1, 4):
+        z, mom, t, eff_lr, dn = sync_ops.server_outer_apply(
+            jnp.asarray(g), z, mom, t, spec=spec, use_kernel=use_kernel,
+            block=16)
+        d = g - zn
+        mn = b1 * mn + (1 - b1) * d
+        vn = b2 * vn + (1 - b2) * d * d
+        mh, vh = mn / (1 - b1 ** step), vn / (1 - b2 ** step)
+        zn = zn + lr * mh / (np.sqrt(vh) + eps)
+        np.testing.assert_allclose(np.asarray(z), zn, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(dn), np.sqrt((d * d).sum()),
+                                   rtol=1e-5)
+        want_lr = lr * np.sqrt(1 - b2 ** step) / (1 - b1 ** step)
+        np.testing.assert_allclose(float(eff_lr), want_lr, rtol=1e-6)
+
+
+def test_nesterov_first_step_closed_form():
+    """Off a zero moment, one Nesterov step is z + lr·(1+β)·Δ."""
+    policy = ServerNesterov(lr=0.5, beta=0.9)
+    merged, z, mom = _rand_srv(1, seed=3)
+    mom = tuple(jax.tree.map(jnp.zeros_like, m) for m in mom)
+    z_new, _, _, eff_lr, _ = sync_ops.server_outer_apply(
+        merged, z, mom, jnp.int32(0), spec=policy.spec, use_kernel=False)
+    want = jax.tree.map(
+        lambda zz, gg: zz + 0.5 * 1.9 * (gg - zz), z, merged)
+    _assert_trees(z_new, want, exact=False)
+    assert float(eff_lr) == pytest.approx(0.5)
+
+
+def test_zero_delta_is_fixed_point_from_rest():
+    """Δ=0 off zero moments: every policy leaves z (and telemetry) at rest."""
+    for policy in POLICIES:
+        merged, z, mom = _rand_srv(policy.slots, seed=5)
+        mom = tuple(jax.tree.map(jnp.zeros_like, m) for m in mom)
+        z_new, mom_new, _, _, dn = sync_ops.server_outer_apply(
+            z, z, mom, jnp.int32(0), spec=policy.spec, use_kernel=False)
+        _assert_trees(z_new, z, exact=False, atol=1e-7)
+        assert float(dn) == 0.0
+
+
+def test_outer_apply_ref_rejects_unknown_spec():
+    z = jnp.zeros((1, 4))
+    with pytest.raises(ValueError):
+        sync_ref.outer_apply_ref(z, z, (), jnp.float32(0.0),
+                                 spec=("rmsprop", 1.0))
+
+
+# ---------------------------------------------------------------------------
+# `none` bit-exactness: every engine path compiles the PR-9 merge unchanged
+# ---------------------------------------------------------------------------
+
+def test_none_bit_exact_serial(game):
+    e0 = PSEngine(game.problem, _ps(game), rng=jax.random.PRNGKey(1),
+                  eval_fn=game.residual)
+    e1 = PSEngine(game.problem, _ps(game, server_opt=NoServerOpt()),
+                  rng=jax.random.PRNGKey(1), eval_fn=game.residual)
+    _assert_trees(e0.run(), e1.run())
+    assert "server_opt" not in e1.trace.meta
+    assert all(r.outer_lr is None for r in e1.trace.rounds)
+
+
+def test_none_bit_exact_sharded(game):
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(1, 1)
+    mk = lambda so: PSEngine(
+        game.problem, _ps(game, server_opt=so, num_workers=1),
+        rng=jax.random.PRNGKey(1), mesh=mesh, worker_axes=("data",))
+    _assert_trees(mk(None).run(), mk(NoServerOpt()).run())
+
+
+def test_none_bit_exact_async_straggler(game):
+    mk = lambda so: AsyncPSEngine(
+        game.problem,
+        _as_async(_ps(game, server_opt=so), latency=STRAGGLER,
+                  staleness_bound=1.0),
+        rng=jax.random.PRNGKey(2), eval_fn=game.residual)
+    _assert_trees(mk(None).run(), mk(NoServerOpt()).run())
+
+
+def test_none_bit_exact_lockstep(game):
+    sync = PSEngine(game.problem, _ps(game, server_opt=NoServerOpt()),
+                    rng=jax.random.PRNGKey(1))
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(_ps(game, server_opt=NoServerOpt()),
+                  latency=ConstantLatency(), staleness_bound=0.0),
+        rng=jax.random.PRNGKey(1))
+    _assert_trees(sync.run(), a.run())
+
+
+def test_none_bit_exact_sampled_and_robust(game):
+    for extra in ({"sampler": ClientSampler(sample=3, seed=1),
+                   "num_workers": 6},
+                  {"aggregator": TrimmedMean(beta=0.25)}):
+        mk = lambda so: PSEngine(game.problem, _ps(game, server_opt=so,
+                                                   **extra),
+                                 rng=jax.random.PRNGKey(3))
+        _assert_trees(mk(None).run(), mk(NoServerOpt()).run())
+
+
+# ---------------------------------------------------------------------------
+# Active policies through the engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=[p.spec[0] for p in POLICIES])
+def test_sync_engine_trains_with_telemetry(game, policy):
+    eng = PSEngine(game.problem, _ps(game, server_opt=policy),
+                   rng=jax.random.PRNGKey(1), eval_fn=game.residual)
+    eng.run()
+    assert eng.trace.meta["server_opt"] == policy.name
+    for rec in eng.trace.rounds:
+        assert rec.outer_lr is not None and rec.delta_norm is not None
+        assert np.isfinite(rec.delta_norm) and rec.delta_norm >= 0.0
+    assert np.isfinite(eng.trace.rounds[-1].residual)
+    # adam's bias-corrected effective lr moves round to round
+    if policy.spec[0] == "adam":
+        lrs = [r.outer_lr for r in eng.trace.rounds]
+        assert len(set(np.round(lrs, 8))) > 1
+
+
+@pytest.mark.parametrize("policy", POLICIES,
+                         ids=[p.spec[0] for p in POLICIES])
+def test_lockstep_shares_compiled_chunk_bit_exact(game, policy):
+    """τ=0 async with an ACTIVE outer optimizer still runs PSEngine's own
+    compiled chunk — bit-exact by shared code, not by accident."""
+    sync = PSEngine(game.problem, _ps(game, server_opt=policy),
+                    rng=jax.random.PRNGKey(1))
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(_ps(game, server_opt=policy),
+                  latency=ConstantLatency(), staleness_bound=0.0),
+        rng=jax.random.PRNGKey(1))
+    _assert_trees(sync.run(), a.run())
+    recs = [r for r in a.trace.rounds if r.outer_lr is not None]
+    assert len(recs) == R
+
+
+def test_async_straggler_applies_at_admission(game):
+    eng = AsyncPSEngine(
+        game.problem,
+        _as_async(_ps(game, server_opt=ServerMomentum(lr=0.8, beta=0.9)),
+                  latency=STRAGGLER, staleness_bound=1.0),
+        rng=jax.random.PRNGKey(2), eval_fn=game.residual)
+    eng.run()
+    outs = [r for r in eng.trace.rounds if r.outer_lr is not None]
+    # partial batches step the outer optimizer more often than R rounds
+    assert len(outs) == eng.n_admissions > R
+    assert eng.trace.meta["server_opt"].startswith("momentum")
+    assert np.isfinite(eng.trace.rounds[-1].residual)
+
+
+def test_composes_with_robust_q8ef_and_byzantine(game):
+    cfg = _ps(game, num_workers=6,
+              server_opt=ServerNesterov(lr=0.9, beta=0.8),
+              aggregator=TrimmedMean(beta=0.2),
+              byzantine=SignFlipAttack(fraction=0.2, seed=3),
+              compressor=StochasticQuantizeCompressor(bits=8))
+    eng = PSEngine(game.problem, cfg, rng=jax.random.PRNGKey(4),
+                   eval_fn=game.residual)
+    eng.run()
+    assert np.isfinite(eng.trace.rounds[-1].residual)
+    assert eng.trace.rounds[-1].outer_lr is not None
+    # and the same hostile pipeline through the event-driven engine
+    lat6 = ConstantLatency(step_s=(1.0,) * 5 + (3.0,), up_s=0.1,
+                           down_s=0.1)
+    a = AsyncPSEngine(
+        game.problem,
+        _as_async(cfg, latency=lat6, staleness_bound=2.0),
+        rng=jax.random.PRNGKey(4), eval_fn=game.residual)
+    a.run()
+    assert np.isfinite(a.trace.rounds[-1].residual)
+
+
+def test_composes_with_client_sampling(game):
+    eng = PSEngine(
+        game.problem,
+        _ps(game, num_workers=6, sampler=ClientSampler(sample=3, seed=1),
+            server_opt=ServerAdam(lr=0.3)),
+        rng=jax.random.PRNGKey(5), eval_fn=game.residual)
+    eng.run()
+    # ONE global outer clock: t advances once per round, not per lane
+    assert int(eng._srv[2]) == R
+    assert np.isfinite(eng.trace.rounds[-1].residual)
+
+
+def test_mesh_with_active_server_raises(game):
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh(1, 1)
+    with pytest.raises(NotImplementedError, match="serial path only"):
+        PSEngine(game.problem,
+                 _ps(game, server_opt=ServerNesterov(), num_workers=1),
+                 rng=jax.random.PRNGKey(1), mesh=mesh,
+                 worker_axes=("data",))
+
+
+def test_sync_weighted_stacked_composition(game):
+    """core.adaseg's Line-7 helper grows the optional outer hook: the
+    post-step anchor is broadcast, the srv carry advances, and the
+    no-server call is untouched."""
+    key = jax.random.PRNGKey(0)
+    z_tilde = {"p": jax.random.normal(key, (M, 11))}
+    inv_eta = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1),
+                                        (M,))) + 0.1
+    plain = sync_weighted_stacked(z_tilde, inv_eta)
+    server = resolve_server_opt(_ps(game, server_opt=ServerNesterov(lr=0.5)))
+    z0 = jax.tree.map(lambda v: jnp.mean(v, axis=0, keepdims=True), z_tilde)
+    srv = (z0, server.init_moments(z0), jnp.int32(0))
+    synced, srv_new, telem = sync_weighted_stacked(
+        z_tilde, inv_eta, server=server, srv=srv)
+    mean_row = jax.tree.map(lambda v: v[:1], plain)
+    want = jax.tree.map(
+        lambda zz, gg: zz + 0.5 * 1.9 * (gg - zz), z0, mean_row)
+    _assert_trees(jax.tree.map(lambda v: v[:1], synced), want, exact=False)
+    assert int(srv_new[2]) == 1 and float(telem[0]) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints: moments round-trip, wrong policies rejected, `none` layout
+# ---------------------------------------------------------------------------
+
+def test_serial_resume_round_trips_moments_bit_exact(game, tmp_path):
+    cfg = _ps(game, server_opt=ServerAdam(lr=0.5, beta2=0.95))
+    mk = lambda: PSEngine(game.problem, cfg, rng=jax.random.PRNGKey(1),
+                          eval_fn=game.residual)
+    full = mk()
+    z_full = full.run()
+    path = str(tmp_path / "srv.msgpack")
+    e1 = mk()
+    e1.run(until_round=3)
+    e1.save(path)
+    e2 = mk()
+    e2.restore(path)
+    _assert_trees(e2._srv, e1._srv)      # moments restored bit-exactly
+    z_res = e2.run()
+    _assert_trees(z_full, z_res)
+
+
+def test_async_resume_round_trips_moments_bit_exact(game, tmp_path):
+    acfg = _as_async(_ps(game, server_opt=ServerMomentum(lr=0.8)),
+                     latency=STRAGGLER, staleness_bound=1.0)
+    mk = lambda: AsyncPSEngine(game.problem, acfg,
+                               rng=jax.random.PRNGKey(2))
+    full = mk()
+    z_full = full.run()
+    path = str(tmp_path / "asrv.msgpack")
+    e1 = mk()
+    e1.run(until_admissions=3)
+    e1.save(path)
+    e2 = mk().restore(path)
+    _assert_trees(e2._srv, e1._srv)
+    _assert_trees(z_full, e2.run())
+
+
+@pytest.mark.parametrize("engine", ["sync", "async"])
+def test_wrong_server_opt_fp_rejected(game, tmp_path, engine):
+    """Same moment layout (momentum vs nesterov): only the fingerprint can
+    tell them apart — the restore must refuse."""
+    path = str(tmp_path / "fp.msgpack")
+
+    def mk(so):
+        if engine == "sync":
+            return PSEngine(game.problem, _ps(game, server_opt=so),
+                            rng=jax.random.PRNGKey(1))
+        return AsyncPSEngine(
+            game.problem,
+            _as_async(_ps(game, server_opt=so), latency=STRAGGLER,
+                      staleness_bound=1.0),
+            rng=jax.random.PRNGKey(1))
+
+    writer = mk(ServerMomentum(lr=0.8, beta=0.9))
+    writer.save(path)
+    with pytest.raises(ValueError, match="outer optimizer"):
+        mk(ServerNesterov(lr=0.8, beta=0.9)).restore(path)
+
+
+def test_different_slot_count_rejected(game, tmp_path):
+    """adam (2 slots) into momentum (1 slot): the layout check fires even
+    before the fingerprint could."""
+    path = str(tmp_path / "slots.msgpack")
+    PSEngine(game.problem, _ps(game, server_opt=ServerAdam()),
+             rng=jax.random.PRNGKey(1)).save(path)
+    with pytest.raises(ValueError):
+        PSEngine(game.problem, _ps(game, server_opt=ServerMomentum()),
+                 rng=jax.random.PRNGKey(1)).restore(path)
+
+
+def test_none_checkpoint_layout_byte_identical(game, tmp_path):
+    """`none` keeps the historical checkpoint layout byte-for-byte: a file
+    written under NoServerOpt is indistinguishable from one written with
+    no server_opt at all."""
+    p0 = str(tmp_path / "legacy.msgpack")
+    p1 = str(tmp_path / "none.msgpack")
+    e0 = PSEngine(game.problem, _ps(game), rng=jax.random.PRNGKey(1))
+    e0.run(until_round=2)
+    e0.save(p0)
+    e1 = PSEngine(game.problem, _ps(game, server_opt=NoServerOpt()),
+                  rng=jax.random.PRNGKey(1))
+    e1.run(until_round=2)
+    e1.save(p1)
+    with open(p0, "rb") as f0, open(p1, "rb") as f1:
+        assert f0.read() == f1.read()
+
+
+# ---------------------------------------------------------------------------
+# Trace v8
+# ---------------------------------------------------------------------------
+
+def test_trace_v8_round_trips_outer_telemetry(game, tmp_path):
+    eng = PSEngine(game.problem,
+                   _ps(game, server_opt=ServerNesterov(lr=0.7)),
+                   rng=jax.random.PRNGKey(1), eval_fn=game.residual)
+    eng.run()
+    path = str(tmp_path / "t.json")
+    eng.trace.save(path)
+    back = TraceRecorder.load(path)
+    assert back.version == 8
+    assert back.meta["server_opt"] == eng.trace.meta["server_opt"]
+    for a, b in zip(eng.trace.rounds, back.rounds):
+        assert b.outer_lr == a.outer_lr
+        assert b.delta_norm == a.delta_norm
+
+
+def test_v7_trace_loads_with_defaulted_outer_fields(tmp_path):
+    import json
+
+    payload = {
+        "version": 7,
+        "meta": {"problem": "legacy"},
+        "rounds": [{
+            "round": 0, "local_steps": [2, 2], "alive": [True, True],
+            "bytes_up": 8.0, "bytes_down": 8.0,
+            "eta_min": 1.0, "eta_max": 1.0, "eta_mean": 1.0,
+        }],
+    }
+    path = str(tmp_path / "v7.json")
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    back = TraceRecorder.load(path)
+    assert back.version == 7
+    assert back.rounds[0].outer_lr is None
+    assert back.rounds[0].delta_norm is None
+
+
+# ---------------------------------------------------------------------------
+# ModelWorker: a real transformer under outer Nesterov
+# ---------------------------------------------------------------------------
+
+def test_model_worker_trains_under_outer_nesterov():
+    from repro.models import ModelWorker, loss_fn, make_lm_problem, \
+        tiny_lm_config
+    from repro.ps import ModelWorker as _  # noqa: F401 (export pin)
+
+    problem = make_lm_problem(tiny_lm_config(), batch=2, seq=8)
+    acfg = AdaSEGConfig(g0=20.0, diameter=2.0, alpha=1.0, k=2,
+                        average_output=False)
+    eng = PSEngine(
+        problem,
+        PSConfig(worker=ModelWorker(acfg, arch="tiny-lm"), local_k=2,
+                 num_workers=2, rounds=2,
+                 server_opt=ServerNesterov(lr=0.5, beta=0.9)),
+        rng=jax.random.PRNGKey(1),
+        eval_fn=lambda z: loss_fn(z, tiny_lm_config(),
+                                  problem.sample(jax.random.PRNGKey(9))),
+    )
+    z = eng.run()
+    assert jax.tree.structure(z) == jax.tree.structure(
+        problem.init(jax.random.PRNGKey(0)))
+    rec = eng.trace.rounds[-1]
+    assert np.isfinite(rec.residual)
+    assert rec.outer_lr == pytest.approx(0.5)
+    assert rec.delta_norm is not None and rec.delta_norm > 0.0
